@@ -1,0 +1,90 @@
+"""Paper Figs. 2-4: estimation accuracy of the 5 methods.
+
+Fig 2/3 analogue: RRMSE vs number of registers m, per weight distribution.
+Fig 4 analogue:   RRMSE vs dataset size at fixed m.
+
+Validated claims (EXPERIMENTS.md §Repro):
+  * QSketch tracks LM/FastGM/FastExpSketch accuracy at 1/8 the register
+    memory (8-bit vs 64-bit registers in the paper; f32 here — see
+    baselines.py docstring).
+  * All errors scale ~ 1/sqrt(m-2) (the CR bound of Eq. 2).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import METHODS, SketchConfig
+from repro.data import synthetic
+
+from . import common
+
+
+def _run_once(method: str, cfg: SketchConfig, ids, w):
+    meth = METHODS[method]
+    st = meth["init"](cfg)
+    st = meth["update"](cfg, st, jnp.asarray(ids), jnp.asarray(w))
+    return float(meth["estimate"](cfg, st))
+
+
+def sweep_registers(quick=True):
+    ms = [64, 256, 1024] if quick else [64, 128, 256, 512, 1024, 2048, 4096]
+    n = 20_000 if quick else 50_000
+    runs = 20 if quick else 100
+    rows = []
+    for dist in synthetic.DISTRIBUTIONS:
+        for m in ms:
+            for method in METHODS:
+                ests, trues = [], None
+                for r in range(runs):
+                    ids, w, true_c = synthetic.stream(dist, n, seed=r)
+                    cfg = SketchConfig(m=m, b=8, seed=1000 + r)
+                    ests.append(_run_once(method, cfg, ids, w))
+                    trues = true_c
+                rows.append({
+                    "figure": "fig2_3_rrmse_vs_m",
+                    "dist": dist,
+                    "m": m,
+                    "method": method,
+                    "rrmse": common.rrmse(ests, trues),
+                    "runs": runs,
+                    "n": n,
+                    "register_bits": METHODS[method]["register_bits"] or 8,
+                })
+    return rows
+
+
+def sweep_sizes(quick=True):
+    sizes = [100, 1000, 10_000] if quick else [100, 1000, 10_000, 100_000, 1_000_000]
+    runs = 20 if quick else 100
+    m = 256
+    rows = []
+    for dist in synthetic.DISTRIBUTIONS:
+        for n in sizes:
+            for method in METHODS:
+                ests, true_c = [], None
+                for r in range(runs):
+                    ids, w, true_c = synthetic.stream(dist, n, seed=10_000 + r)
+                    cfg = SketchConfig(m=m, b=8, seed=50 + r)
+                    ests.append(_run_once(method, cfg, ids, w))
+                rows.append({
+                    "figure": "fig4_rrmse_vs_n",
+                    "dist": dist,
+                    "n": n,
+                    "m": m,
+                    "method": method,
+                    "rrmse": common.rrmse(ests, true_c),
+                    "runs": runs,
+                })
+    return rows
+
+
+def run(quick=True):
+    rows = sweep_registers(quick) + sweep_sizes(quick)
+    common.save("accuracy", rows)
+    # Headline CSV: m=256 gamma rows (the paper's main operating point).
+    for r in rows:
+        if r["figure"] == "fig2_3_rrmse_vs_m" and r["m"] == 256 and r["dist"] == "gamma":
+            common.csv_row(f"accuracy/rrmse_m256_gamma/{r['method']}", 0.0, f"rrmse={r['rrmse']:.4f}")
+    return rows

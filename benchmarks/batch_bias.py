@@ -1,0 +1,53 @@
+"""Beyond-paper: QSketch-Dyn batch-mode staleness bias vs batch size.
+
+The TPU-native batch mode computes every q_R from the batch-START histogram
+(DESIGN.md §4.2). This measures |Ĉ_batch - Ĉ_exact| / C over batch sizes —
+the result (bias << sketch noise for B <= 4096 at m=256) is what licenses
+the batched execution mode.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SketchConfig, qsketch_dyn
+from repro.data import synthetic
+
+from . import common
+
+
+def run(quick=True):
+    n = 8_000 if quick else 32_000
+    runs = 10 if quick else 30
+    batch_sizes = [64, 512, 4096] if quick else [64, 256, 1024, 4096, 16384]
+    m = 256
+    rows = []
+    rel_gap, rel_exact = {}, []
+    for r in range(runs):
+        ids, w, true_c = synthetic.stream("gamma", n, seed=300 + r)
+        cfg = SketchConfig(m=m, b=8, seed=400 + r)
+        exact = qsketch_dyn.update_scan(cfg, qsketch_dyn.init(cfg), jnp.asarray(ids), jnp.asarray(w))
+        ce = float(exact.chat)
+        rel_exact.append((ce - true_c) / true_c)
+        for bs in batch_sizes:
+            st = qsketch_dyn.init(cfg)
+            for i in range(0, n, bs):
+                st = qsketch_dyn.update_batch(cfg, st, jnp.asarray(ids[i : i + bs]), jnp.asarray(w[i : i + bs]))
+            rel_gap.setdefault(bs, []).append((float(st.chat) - ce) / true_c)
+    sketch_noise = float(np.sqrt(np.mean(np.square(rel_exact))))
+    for bs in batch_sizes:
+        gap = float(np.sqrt(np.mean(np.square(rel_gap[bs]))))
+        rows.append({
+            "figure": "batch_bias",
+            "batch_size": bs,
+            "rms_gap_vs_exact": gap,
+            "sketch_rrmse": sketch_noise,
+            "gap_over_noise": gap / max(sketch_noise, 1e-12),
+            "m": m,
+            "n": n,
+            "runs": runs,
+        })
+        common.csv_row(f"batch_bias/B{bs}", 0.0, f"gap/noise={gap/max(sketch_noise,1e-12):.3f}")
+    common.save("batch_bias", rows)
+    return rows

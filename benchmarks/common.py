@@ -1,0 +1,50 @@
+"""Shared benchmark utilities: timing, method registry plumbing, output."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS_DIR = "experiments/bench"
+
+
+def save(name: str, rows):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return path
+
+
+def time_fn(fn, *args, warmup=2, iters=5):
+    """Median wall time of a jitted fn (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def rrmse(estimates, true_c):
+    e = np.asarray(estimates, dtype=np.float64)
+    return float(np.sqrt(np.mean(((e - true_c) / true_c) ** 2)))
+
+
+def aare(estimates, trues):
+    e = np.asarray(estimates, np.float64)
+    t = np.asarray(trues, np.float64)
+    return float(np.mean(np.abs(e - t) / np.abs(t)))
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)

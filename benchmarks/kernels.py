@@ -1,0 +1,65 @@
+"""Sketch-kernel microbenchmarks: jnp-core vs Pallas-interpret consistency +
+block-shape cost model.
+
+Real Pallas wall-times require a TPU; interpret mode executes the kernel
+body in Python, so wall-clock there is meaningless. What IS measurable and
+transferable from this box:
+
+  * the jitted jnp path's throughput scaling in (batch, m) — XLA:CPU fuses
+    the same hash->quantize->reduce pipeline the TPU kernel implements;
+  * the kernel's analytic VMEM footprint per BlockSpec choice (the §Perf
+    block-shape hillclimb reads these numbers);
+  * bitwise agreement between kernel (interpret) and core on every block
+    shape tried (correctness gate for the block sweep).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SketchConfig, qsketch
+from repro.data import synthetic
+from repro.kernels import ops
+
+from . import common
+
+
+def vmem_bytes(block_b, block_m):
+    """Analytic per-invocation VMEM working set of qsketch_update."""
+    tile_f32 = block_b * block_m * 4  # e / y tile
+    cols = 3 * block_b * 4  # ids_lo, ids_hi, log2w columns
+    regs = 2 * block_m * 4  # in + out register blocks
+    return tile_f32 + cols + regs
+
+
+def run(quick=True):
+    rows = []
+    ids, w, _ = synthetic.stream("gamma", 32768, seed=5)
+    ids_j, w_j = jnp.asarray(ids), jnp.asarray(w)
+
+    for m in ([512, 2048] if quick else [512, 2048, 8192]):
+        cfg = SketchConfig(m=m, b=8, seed=6)
+        st = qsketch.init(cfg)
+        upd = jax.jit(lambda s, i, ww: qsketch.update(cfg, s, i, ww))
+        t = common.time_fn(upd, st, ids_j, w_j)
+        eps = len(ids) / t
+        rows.append({"figure": "kernel_core_throughput", "m": m, "mops": eps / 1e6,
+                     "lanes_per_elem": m})
+        common.csv_row(f"kernels/core_jnp/m{m}", t * 1e6 / len(ids) * 1e0, f"mops={eps/1e6:.2f}")
+
+    # Block-shape sweep: correctness (bitwise) + VMEM model.
+    cfg = SketchConfig(m=1024, b=8, seed=7)
+    st = qsketch.init(cfg)
+    ref = qsketch.update(cfg, st, ids_j[:2048], w_j[:2048])
+    for bb, bm in [(64, 128), (128, 256), (256, 512), (512, 1024)]:
+        out = ops.qsketch_update_op(cfg, st, ids_j[:2048], w_j[:2048], block_b=bb, block_m=bm, interpret=True)
+        ok = bool(np.array_equal(np.asarray(out.regs), np.asarray(ref.regs)))
+        vm = vmem_bytes(bb, bm)
+        rows.append({"figure": "kernel_blocks", "block_b": bb, "block_m": bm,
+                     "bitwise_ok": ok, "vmem_bytes": vm})
+        common.csv_row(f"kernels/block_{bb}x{bm}", 0.0, f"bitwise={ok} vmem={vm/1024:.0f}KiB")
+        assert ok, (bb, bm)
+    common.save("kernels", rows)
+    return rows

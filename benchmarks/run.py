@@ -1,0 +1,46 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract) and writes
+JSON result files under experiments/bench/. ``--full`` runs the paper-scale
+sweeps (much slower); default is the quick profile used by bench_output.txt.
+
+  python -m benchmarks.run [--full] [--only accuracy,throughput,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sweeps")
+    ap.add_argument("--only", default="", help="comma list of benchmark names")
+    args = ap.parse_args()
+
+    from . import accuracy, batch_bias, kernels, netflow, register_size, throughput
+
+    suite = {
+        "accuracy": accuracy.run,  # Figs 2-4
+        "register_size": register_size.run,  # Fig 5 / Thm 1
+        "throughput": throughput.run,  # Figs 6-8
+        "batch_bias": batch_bias.run,  # beyond-paper
+        "netflow": netflow.run,  # App A.4 (CAIDA analogue)
+        "kernels": kernels.run,  # kernel block sweep + core throughput
+    }
+    only = [s for s in args.only.split(",") if s]
+    names = only or list(suite)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in names:
+        print(f"# --- {name} ---", flush=True)
+        t = time.time()
+        suite[name](quick=not args.full)
+        print(f"# {name} done in {time.time()-t:.1f}s", flush=True)
+    print(f"# total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

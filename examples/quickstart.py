@@ -1,0 +1,48 @@
+"""Quickstart: weighted cardinality estimation with every sketch in the library.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import METHODS, SketchConfig
+from repro.data import synthetic
+
+
+def main():
+    # A gamma-weighted stream with heavy Zipf repeats: 40k occurrences of
+    # 8k distinct elements. True weighted cardinality = sum of distinct
+    # elements' weights.
+    ids, weights, true_c = synthetic.with_repeats("gamma", 8_000, 40_000, seed=0)
+    print(f"stream: {len(ids)} occurrences, true weighted cardinality C = {true_c:,.1f}\n")
+
+    cfg = SketchConfig(m=1024, b=8, seed=42)
+    print(f"{'method':<16} {'estimate':>14} {'rel.err':>9} {'memory':>10}")
+    for name, meth in METHODS.items():
+        state = meth["init"](cfg)
+        # Stream in batches, as a real pipeline would.
+        for i in range(0, len(ids), 8192):
+            state = meth["update"](
+                cfg, state, jnp.asarray(ids[i : i + 8192]), jnp.asarray(weights[i : i + 8192])
+            )
+        est = float(meth["estimate"](cfg, state))
+        bits = meth["register_bits"] or cfg.b
+        mem = cfg.m * bits / 8
+        print(f"{name:<16} {est:>14,.1f} {abs(est-true_c)/true_c:>8.2%} {mem:>8.0f} B")
+
+    print("\nQSketch uses 8-bit registers (b=8): 1/4 the memory of the f32")
+    print("baselines here, 1/8 of the paper's 64-bit baseline registers.")
+
+    # Merging: sketches of two sub-streams combine losslessly.
+    from repro.core import qsketch
+
+    half = len(ids) // 2
+    a = qsketch.update(cfg, qsketch.init(cfg), jnp.asarray(ids[:half]), jnp.asarray(weights[:half]))
+    b = qsketch.update(cfg, qsketch.init(cfg), jnp.asarray(ids[half:]), jnp.asarray(weights[half:]))
+    merged = qsketch.merge(a, b)
+    print(f"\nmerge(first half, second half) estimate: {float(qsketch.estimate(cfg, merged)):,.1f}")
+
+
+if __name__ == "__main__":
+    main()

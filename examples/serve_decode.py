@@ -1,0 +1,23 @@
+"""Serving example: batched prefill + decode with weighted-DAU telemetry.
+
+Generates from a (smoke-sized) qwen3-8b with a per-session engagement
+weight; the decode loop's QSketch monitor answers "weighted distinct
+sessions served" at any time — the paper's motivating DAU metric — without
+storing any session log.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+from repro.launch import serve
+
+
+def main():
+    serve.main([
+        "--arch", "qwen3-8b", "--smoke",
+        "--batch", "4", "--prompt-len", "12", "--gen", "16", "--max-len", "48",
+        "--temperature", "0.8",
+    ])
+
+
+if __name__ == "__main__":
+    main()

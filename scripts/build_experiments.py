@@ -1,0 +1,57 @@
+"""Compose EXPERIMENTS.md: hand-written narrative (docs/experiments_narrative.md
+fragments) + tables generated from experiments/{dryrun,bench}/*.json.
+
+    PYTHONPATH=src python scripts/build_experiments.py
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.roofline import report  # noqa: E402
+
+
+def bench(name):
+    path = f"experiments/bench/{name}.json"
+    return json.load(open(path)) if os.path.exists(path) else []
+
+
+def perf_cell_table(arch, shape):
+    import glob
+
+    rows = ["| variant | compute s | memory s | collective s | dominant s | frac-roofline | peak GiB | useful |",
+            "|---|---:|---:|---:|---:|---:|---:|---:|"]
+    for p in sorted(glob.glob(f"experiments/dryrun/{arch}_{shape}_singlepod*.json")):
+        rec = json.load(open(p))
+        if rec["status"] != "ok":
+            continue
+        tag = os.path.basename(p).split(f"{shape}_singlepod")[-1].replace(".json", "") or "(baseline)"
+        t = rec["roofline"]
+        tmax = max(t.values())
+        rows.append(
+            f"| {tag} | {t['compute_s']:.2f} | {t['memory_s']:.2f} | {t['collective_s']:.2f} | "
+            f"{tmax:.2f} | {t['compute_s']/tmax:.3f} | {rec['hbm_fit']['peak_bytes_est']/2**30:.1f} | "
+            f"{rec['useful_flops_ratio']:.2f} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    narrative = open("docs/experiments_narrative.md").read()
+    out = narrative
+    out = out.replace("<<DRYRUN_SINGLE>>", report.dryrun_table("_singlepod"))
+    out = out.replace("<<DRYRUN_MULTI>>", report.dryrun_table("_multipod"))
+    out = out.replace("<<ROOFLINE_SINGLE>>", report.roofline_table("_singlepod"))
+    out = out.replace("<<REPRO_TABLES>>", report.repro_tables())
+    out = out.replace("<<PERF_KIMI>>", perf_cell_table("kimi-k2-1t-a32b", "train_4k"))
+    out = out.replace("<<PERF_JAMBA>>", perf_cell_table("jamba-1.5-large-398b", "train_4k"))
+    out = out.replace("<<PERF_MAMBA>>", perf_cell_table("mamba2-370m", "train_4k"))
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(out)
+    print("EXPERIMENTS.md written:", len(out), "chars")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: QSketch (KDD'24) as the streaming-telemetry layer of a multi-pod
+JAX/Pallas LM framework. See README.md / DESIGN.md / EXPERIMENTS.md."""
+
+__version__ = "1.0.0"

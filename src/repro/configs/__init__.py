@@ -1,0 +1,102 @@
+"""Architecture registry: --arch <id> -> ModelConfig, + reduced smoke variants.
+
+Every assigned architecture has its own module (exact published dims, source
+tag in the docstring); ``get_config`` builds the full config, ``smoke_config``
+a structurally-identical reduction (same pattern/family/feature flags, tiny
+dims) for CPU smoke tests. The FULL configs are only ever lowered via
+ShapeDtypeStructs in the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import MoEConfig, ModelConfig, SSMConfig
+
+from . import (
+    arctic_480b,
+    gemma3_27b,
+    h2o_danube_1_8b,
+    jamba_1_5_large_398b,
+    kimi_k2_1t_a32b,
+    llava_next_34b,
+    mamba2_370m,
+    minitron_8b,
+    paper_qsketch,
+    qwen3_8b,
+    shapes,
+    whisper_large_v3,
+)
+from .shapes import SHAPES, input_specs, skip_reason
+
+ARCHS = {
+    "jamba-1.5-large-398b": jamba_1_5_large_398b.build,
+    "llava-next-34b": llava_next_34b.build,
+    "minitron-8b": minitron_8b.build,
+    "qwen3-8b": qwen3_8b.build,
+    "gemma3-27b": gemma3_27b.build,
+    "h2o-danube-1.8b": h2o_danube_1_8b.build,
+    "whisper-large-v3": whisper_large_v3.build,
+    "kimi-k2-1t-a32b": kimi_k2_1t_a32b.build,
+    "arctic-480b": arctic_480b.build,
+    "mamba2-370m": mamba2_370m.build,
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    return ARCHS[name]()
+
+
+def list_archs():
+    return sorted(ARCHS)
+
+
+def smoke_config(name: str) -> ModelConfig:
+    """Family-preserving reduction: same pattern/flags, tiny dims, f32 acts.
+
+    Keeps: layer pattern (incl. a remainder layer when the full config has
+    one), MoE routing topology, SSD structure, enc-dec wiring, frontend stubs.
+    """
+    cfg = get_config(name)
+    plen = len(cfg.pattern)
+    n_layers = 2 * plen + (1 if cfg.n_remainder else 0)
+    moe = cfg.moe and MoEConfig(
+        num_experts=min(cfg.moe.num_experts, 4),
+        top_k=min(cfg.moe.top_k, 2),
+        capacity_factor=2.0,
+        dense_residual=cfg.moe.dense_residual,
+        shared_expert=cfg.moe.shared_expert,
+        d_ff=64 if cfg.moe.d_ff else 0,
+    )
+    ssm = cfg.ssm and SSMConfig(d_state=16, head_dim=16, expand=2, chunk=8)
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=n_layers,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2 if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_head=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=512,
+        moe=moe,
+        ssm=ssm,
+        n_enc_layers=2 if cfg.n_enc_layers else 0,
+        enc_seq=16 if cfg.enc_seq else 0,
+        frontend_len=8 if cfg.frontend_len else 0,
+        max_seq=64,
+        act_dtype="float32",
+    )
+
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "get_config",
+    "smoke_config",
+    "list_archs",
+    "input_specs",
+    "skip_reason",
+    "paper_qsketch",
+    "shapes",
+]

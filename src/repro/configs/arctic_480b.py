@@ -1,0 +1,25 @@
+"""arctic-480b [moe] — 128 experts top-2 PLUS a dense residual path.
+
+35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000
+[hf:Snowflake/snowflake-arctic-base; hf]. Arctic's signature dense-MoE
+hybrid: every layer runs a dense FFN residual in parallel with the routed
+experts (MoEConfig.dense_residual). Full attention -> long_500k skipped.
+"""
+
+from repro.models import LayerSpec, MoEConfig, ModelConfig
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b",
+        n_layers=35,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        d_ff=4864,
+        vocab=32000,
+        pattern=(LayerSpec(ffn="moe"),),
+        moe=MoEConfig(num_experts=128, top_k=2, dense_residual=True, d_ff=4864),
+        rope_theta=10_000.0,
+        max_seq=4096,
+    )

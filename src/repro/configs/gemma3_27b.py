@@ -1,0 +1,31 @@
+"""gemma3-27b [dense] — 5:1 local:global attention, 128k context.
+
+62L d_model=5376 32H (GQA kv=16) d_ff=21504 vocab=262144
+[hf:google/gemma-3-1b-pt; unverified]. Superblock of 6: five local layers
+(window 1024) + one global. 62 = 10*6 + 2 -> two unscanned remainder (local)
+layers exercise the remainder path. head_dim pinned to 128 (gemma's attn dim
+is decoupled from d_model). Mostly-local -> runs long_500k (global-layer KV
+at 500k stays linear-per-step for decode; see DESIGN.md shape notes).
+"""
+
+from repro.models import LayerSpec, ModelConfig
+
+
+def build() -> ModelConfig:
+    pattern = tuple(
+        LayerSpec(window=1024 if i < 5 else None) for i in range(6)
+    )
+    return ModelConfig(
+        name="gemma3-27b",
+        n_layers=62,
+        d_model=5376,
+        n_heads=32,
+        n_kv_heads=16,
+        d_ff=21504,
+        vocab=262144,
+        d_head=128,
+        pattern=pattern,
+        rope_theta=1_000_000.0,
+        max_seq=131_072,
+        sub_quadratic=True,
+    )

@@ -1,0 +1,25 @@
+"""h2o-danube-1.8b [dense] — llama+mistral mix with sliding-window attention.
+
+24L d_model=2560 32H (GQA kv=8) d_ff=6912 vocab=32000 [arXiv:2401.16818; hf].
+SWA window 4096 on every layer -> sub-quadratic decode state -> runs
+long_500k (cache is a 4096 ring per layer; we keep the full buffer in the
+dry-run and mask, the ring optimization is noted in §Perf candidates).
+"""
+
+from repro.models import LayerSpec, ModelConfig
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="h2o-danube-1.8b",
+        n_layers=24,
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=6912,
+        vocab=32000,
+        pattern=(LayerSpec(window=4096),),
+        rope_theta=10_000.0,
+        max_seq=16384,
+        sub_quadratic=True,
+    )

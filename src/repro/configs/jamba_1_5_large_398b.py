@@ -1,0 +1,34 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attn 1:7 interleave, MoE 16e top-2.
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536 [arXiv:2403.19887; hf].
+Superblock of 8: attention at index 4, Mamba elsewhere; MoE every other layer
+(4 MoE + 4 dense FFN per superblock), matching the published 1:7 ratio and
+e=2 MoE stride. Hybrid -> runs long_500k (attn KV is 9 layers only).
+"""
+
+from repro.models import LayerSpec, MoEConfig, ModelConfig, SSMConfig
+
+
+def build() -> ModelConfig:
+    pattern = tuple(
+        LayerSpec(
+            mixer="attn" if i == 4 else "mamba",
+            ffn="moe" if i % 2 == 1 else "dense",
+        )
+        for i in range(8)
+    )
+    return ModelConfig(
+        name="jamba-1.5-large-398b",
+        n_layers=72,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=24576,
+        vocab=65536,
+        pattern=pattern,
+        moe=MoEConfig(num_experts=16, top_k=2),
+        ssm=SSMConfig(d_state=128, head_dim=128, expand=2, chunk=256),
+        rope_theta=1_000_000.0,
+        max_seq=262_144,
+        sub_quadratic=True,
+    )

@@ -1,0 +1,28 @@
+"""kimi-k2-1t-a32b [moe] — trillion-param fine-grained MoE (paper-table).
+
+61L d_model=7168 64H (GQA kv=8) d_ff=2048 vocab=163840, 384 experts top-8 +
+one always-on shared expert [arXiv:2501.kimi2; unverified]. The d_ff=2048
+experts are DeepSeek-V3-style fine-grained slices; with top-8 of 384 the
+EP all-to-all dominates the roofline — this is the designated
+most-collective-bound hillclimb cell (EXPERIMENTS.md §Perf). Full attention
+-> long_500k skipped. head_dim = 7168/64 = 112 (the real model widens heads
+via q/k up-projection; we keep the backbone table's dims).
+"""
+
+from repro.models import LayerSpec, MoEConfig, ModelConfig
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b",
+        n_layers=61,
+        d_model=7168,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=2048,
+        vocab=163840,
+        pattern=(LayerSpec(ffn="moe"),),
+        moe=MoEConfig(num_experts=384, top_k=8, shared_expert=True, d_ff=2048),
+        rope_theta=50_000.0,
+        max_seq=131_072,
+    )

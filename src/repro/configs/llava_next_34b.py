@@ -1,0 +1,27 @@
+"""llava-next-34b [vlm] — anyres tiling; Yi-34B-class dense decoder backbone.
+
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]. The vision tower is a
+STUB: input_specs supplies precomputed patch embeddings (B, 576, d_model)
+prepended to the text stream through a learned projection (DESIGN.md §5).
+Pure full attention -> long_500k skipped.
+"""
+
+from repro.models import LayerSpec, ModelConfig
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-34b",
+        n_layers=60,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        d_ff=20480,
+        vocab=64000,
+        pattern=(LayerSpec(),),
+        frontend="patches",
+        frontend_len=576,
+        rope_theta=5_000_000.0,
+        max_seq=32768,
+    )

@@ -1,0 +1,26 @@
+"""mamba2-370m [ssm] — SSD (state-space duality), attention-free.
+
+48L d_model=1024 vocab=50280, ssm_state=128 [arXiv:2405.21060; unverified].
+Pure Mamba2 blocks (no FFN, no attention): d_inner = 2*1024, head_dim 64 ->
+32 SSD heads. O(1) decode state -> the flagship long_500k architecture.
+Embeddings tied (the 370m budget requires it, as in the released model).
+"""
+
+from repro.models import LayerSpec, ModelConfig, SSMConfig
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-370m",
+        n_layers=48,
+        d_model=1024,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=0,
+        vocab=50280,
+        pattern=(LayerSpec(mixer="mamba", ffn="none"),),
+        ssm=SSMConfig(d_state=128, head_dim=64, expand=2, chunk=256),
+        tie_embeddings=True,
+        max_seq=8192,
+        sub_quadratic=True,
+    )

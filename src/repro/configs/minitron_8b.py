@@ -1,0 +1,24 @@
+"""minitron-8b [dense] — width-pruned Nemotron-4.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000 [arXiv:2407.14679; hf].
+The 256k vocab makes embedding + logits the sharding stress case (vocab on
+"model"; the xent all-reduce shows up in the dry-run HLO). Full attention ->
+long_500k skipped.
+"""
+
+from repro.models import LayerSpec, ModelConfig
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-8b",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=16384,
+        vocab=256000,
+        pattern=(LayerSpec(),),
+        rope_theta=10_000.0,
+        max_seq=4096,
+    )

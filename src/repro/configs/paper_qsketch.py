@@ -1,0 +1,23 @@
+"""The paper's own configuration space: the sketch suites of §5.
+
+These drive the accuracy/throughput benchmarks (paper Figs. 2-8) and the
+framework's telemetry defaults. ``telemetry_default`` is the SketchConfig the
+training/serving monitors use (m=512, b=8: ~4%% RRMSE, 512 B of registers;
+the monitor does full m-wide QSketch updates in-step — see
+sketchstream/monitor.py for why Dyn's O(1) route is not used there — so m
+prices the per-step lane-op cost, and the cross-pod merge stays sub-KB).
+"""
+
+from repro.core import SketchConfig
+
+# Paper defaults: 8-bit registers, r in [-127, 127] (Thm. 1 example).
+REGISTER_SWEEP = tuple(2**k for k in range(6, 13))  # m in {64 .. 4096}
+WIDTH_SWEEP = (4, 5, 6, 7, 8)  # register bits b (Fig. 5)
+
+
+def suite(m: int = 256, b: int = 8, seed: int = 0x5EED) -> SketchConfig:
+    return SketchConfig(m=m, b=b, seed=seed)
+
+
+def telemetry_default() -> SketchConfig:
+    return SketchConfig(m=512, b=8, seed=0xBEEF)

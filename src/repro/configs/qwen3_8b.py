@@ -1,0 +1,20 @@
+"""qwen3-8b [dense] — qk_norm + GQA. 36L d_model=4096 32H (kv=8) d_ff=12288
+vocab=151936 [hf:Qwen/Qwen3-8B; hf]. Full attention -> long_500k skipped."""
+
+from repro.models import LayerSpec, ModelConfig
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-8b",
+        n_layers=36,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=12288,
+        vocab=151936,
+        pattern=(LayerSpec(),),
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        max_seq=40960,
+    )

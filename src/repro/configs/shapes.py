@@ -1,0 +1,101 @@
+"""Assigned input shapes and ShapeDtypeStruct builders (dry-run inputs).
+
+Four shapes per architecture (the brief's cell grid):
+
+  train_4k     seq=4096    global_batch=256   -> lowers train_step
+  prefill_32k  seq=32768   global_batch=32    -> lowers prefill
+  decode_32k   seq=32768   global_batch=128   -> lowers serve_step (1 token)
+  long_500k    seq=524288  global_batch=1     -> lowers serve_step (1 token)
+
+long_500k only runs for sub-quadratic archs (cfg.sub_quadratic); whisper
+additionally skips it (448-token decoder). Skips carry machine-readable
+reasons so the dry-run report lists all 40 cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def skip_reason(cfg: ModelConfig, shape: str) -> str | None:
+    """None = runnable; else the documented skip reason (DESIGN.md §5)."""
+    if shape == "long_500k":
+        if cfg.n_enc_layers:
+            return "enc-dec: decoder context is 448; 500k decode not meaningful"
+        if not cfg.sub_quadratic:
+            return "pure full-attention arch: no sub-quadratic 500k state"
+    return None
+
+
+def _token_struct(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train  -> {"tokens", "targets", ["extra_embeds"], ["loss_mask"]}
+    prefill-> {"tokens", ["extra_embeds"]}
+    decode -> {"tokens" (B,1), "cur_len" scalar, "cache" pytree}
+    """
+    ss = SHAPES[shape]
+    e = cfg.d_model
+    emb_dt = jnp.bfloat16
+
+    if ss.kind == "train":
+        if cfg.frontend == "patches":
+            text = ss.seq - cfg.frontend_len
+            return {
+                "tokens": _token_struct(ss.batch, text),
+                "targets": _token_struct(ss.batch, text),
+                "extra_embeds": jax.ShapeDtypeStruct((ss.batch, cfg.frontend_len, e), emb_dt),
+            }
+        if cfg.n_enc_layers:
+            return {
+                "tokens": _token_struct(ss.batch, ss.seq),
+                "targets": _token_struct(ss.batch, ss.seq),
+                "extra_embeds": jax.ShapeDtypeStruct((ss.batch, cfg.enc_seq, e), emb_dt),
+            }
+        return {
+            "tokens": _token_struct(ss.batch, ss.seq),
+            "targets": _token_struct(ss.batch, ss.seq),
+        }
+
+    if ss.kind == "prefill":
+        out = {"tokens": _token_struct(ss.batch, ss.seq)}
+        if cfg.frontend == "patches":
+            out["tokens"] = _token_struct(ss.batch, ss.seq - cfg.frontend_len)
+            out["extra_embeds"] = jax.ShapeDtypeStruct((ss.batch, cfg.frontend_len, e), emb_dt)
+        elif cfg.n_enc_layers:
+            out["extra_embeds"] = jax.ShapeDtypeStruct((ss.batch, cfg.enc_seq, e), emb_dt)
+        return out
+
+    # decode: one new token against a seq-length cache.
+    cache = transformer.abstract_cache(cfg, ss.batch, ss.seq)
+    return {
+        "tokens": _token_struct(ss.batch, 1),
+        "cur_len": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": cache,
+    }

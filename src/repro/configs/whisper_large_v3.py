@@ -1,0 +1,30 @@
+"""whisper-large-v3 [audio] — encoder-decoder; conv frontend is a STUB.
+
+32+32L d_model=1280 20H (kv=20, i.e. MHA) d_ff=5120 vocab=51866
+[arXiv:2212.04356; unverified]. input_specs supplies precomputed
+(B, 1500, 1280) frame embeddings (post-conv mel frontend). Decoder layers
+carry cross-attention to the encoder memory. Adaptations: RoPE replaces the
+original learned/sinusoidal positions (noted in DESIGN.md); decode shapes
+exercise 32k decoder positions purely as a sharding/shape workload — the
+real model's decoder context is 448. long_500k skipped (enc-dec, full attn).
+"""
+
+from repro.models import LayerSpec, ModelConfig
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3",
+        n_layers=32,
+        d_model=1280,
+        n_heads=20,
+        n_kv_heads=20,
+        d_ff=5120,
+        vocab=51866,
+        pattern=(LayerSpec(cross_attn=True),),
+        n_enc_layers=32,
+        enc_seq=1500,
+        frontend="frames",
+        rope_theta=10_000.0,
+        max_seq=448,
+    )

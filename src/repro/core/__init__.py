@@ -1,0 +1,73 @@
+"""Core sketch library: the paper's contribution as composable JAX modules.
+
+Public API:
+
+    cfg   = SketchConfig(m=256, b=8, seed=1)
+    state = qsketch.init(cfg)
+    state = qsketch.update(cfg, state, ids, weights)   # batched, exact
+    chat  = qsketch.estimate(cfg, state)               # MLE (Newton)
+
+    dyn   = qsketch_dyn.init(cfg)
+    dyn   = qsketch_dyn.update_batch(cfg, dyn, ids, weights)
+    chat  = qsketch_dyn.estimate(dyn)                  # anytime, O(0)
+
+Baselines (LM / FastGM / FastExpSketch) live in ``baselines``; the uniform
+``METHODS`` registry below drives benchmarks and examples.
+"""
+
+from . import baselines, estimators, hashing, qsketch, qsketch_dyn
+from .types import DynState, FloatSketchState, QSketchState, SketchConfig
+
+# Uniform method registry: name -> dict of the five standard operations.
+# Signatures: init(cfg); update(cfg, state, ids, weights, mask=None);
+# estimate(cfg, state); merge(cfg, a, b).
+METHODS = {
+    "LM": dict(
+        init=baselines.init,
+        update=baselines.lm_update,
+        estimate=lambda cfg, s: baselines.estimate(s),
+        merge=lambda cfg, a, b: baselines.merge(a, b),
+        register_bits=32,
+    ),
+    "FastGM": dict(
+        init=baselines.init,
+        update=baselines.fastgm_update,
+        estimate=lambda cfg, s: baselines.estimate(s),
+        merge=lambda cfg, a, b: baselines.merge(a, b),
+        register_bits=32,
+    ),
+    "FastExpSketch": dict(
+        init=baselines.init,
+        update=baselines.fastexp_update,
+        estimate=lambda cfg, s: baselines.estimate(s),
+        merge=lambda cfg, a, b: baselines.merge(a, b),
+        register_bits=32,
+    ),
+    "QSketch": dict(
+        init=qsketch.init,
+        update=qsketch.update,
+        estimate=qsketch.estimate,
+        merge=lambda cfg, a, b: qsketch.merge(a, b),
+        register_bits=None,  # = cfg.b
+    ),
+    "QSketch-Dyn": dict(
+        init=qsketch_dyn.init,
+        update=qsketch_dyn.update_batch,
+        estimate=lambda cfg, s: qsketch_dyn.estimate(s),
+        merge=qsketch_dyn.merge,
+        register_bits=None,  # = cfg.b (+ histogram)
+    ),
+}
+
+__all__ = [
+    "SketchConfig",
+    "QSketchState",
+    "DynState",
+    "FloatSketchState",
+    "qsketch",
+    "qsketch_dyn",
+    "baselines",
+    "estimators",
+    "hashing",
+    "METHODS",
+]

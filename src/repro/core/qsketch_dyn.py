@@ -1,0 +1,228 @@
+"""QSketch-Dyn (paper §4.3): O(1)-update anytime weighted-cardinality tracking.
+
+Per element (x, w):
+  1. pick ONE register j = g(x)                      (hash, not RandInt: the
+     choice must be consistent per element or duplicates double-count);
+  2. y = floor(-log2(-ln h_j(x) / w));
+  3. if y > R[j]: move histogram mass T[R[j]] -> T[y'], set R[j] = y';
+  4. Ĉ += 1(changed) * w / q_R, with the update probability
+         q_R = 1 - (1/m) Σ_k T[k] e^{-w 2^{-(k+r_min+1)}}
+     computed from the state BEFORE the update (Eq. 12 / Thm. 2).
+
+NOTE on the paper's Alg. 3: lines 14–17 as printed compute q_R *after* the
+register/histogram update and add w/q_R unconditionally. That contradicts
+Eq. (12) and the unbiasedness proof of Thm. 2 (which conditions q_R^{(t)} on
+R^{(t-1)} and carries the indicator). We implement Eq. (12); the accuracy
+benchmarks reproduce the paper's reported behaviour with this reading.
+
+Two execution modes (DESIGN.md §4.2):
+
+* ``update_scan``  — exact sequential semantics via ``lax.scan`` (the
+                     paper-faithful baseline; also the accuracy-benchmark path).
+* ``update_batch`` — TPU-native: all q_R from the batch-start histogram,
+                     one scatter-max + histogram rebuild. Within-batch
+                     duplicates are removed exactly; the only deviation from
+                     the exact chain is ≤B-element staleness of q_R, measured
+                     in benchmarks/batch_bias.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import estimators, hashing
+from .types import DynState, SketchConfig
+
+_QR_FLOOR = 1e-12  # q_R guard; only reachable when sketch is fully saturated
+
+
+def init(cfg: SketchConfig) -> DynState:
+    return DynState(
+        regs=jnp.full((cfg.m,), cfg.r_min, dtype=jnp.int8),
+        hist=jnp.zeros((cfg.num_bins,), dtype=jnp.int32),
+        chat=jnp.float32(0.0),
+    )
+
+
+def _choose_and_quantize(cfg: SketchConfig, lo, hi, w):
+    """(j, y) per element: register choice g(x) and quantized value."""
+    j = hashing.hash_mod((lo, hi), cfg.salt_g, cfg.m)
+    e = hashing.neg_log_uniform((lo, hi, j.astype(jnp.uint32)), cfg.salt_h)
+    y = jnp.floor(jnp.log2(w) - jnp.log2(e))
+    # No r_min clip needed: y must exceed R[j] >= r_min to matter. Cap at r_max.
+    y = jnp.minimum(y, float(cfg.r_max))
+    # Guard against -inf/NaN from degenerate w; quantize to a harmless floor.
+    y = jnp.where(jnp.isfinite(y), y, float(cfg.r_min))
+    return j, y.astype(jnp.int32)
+
+
+def _q_update_prob(cfg: SketchConfig, hist, w):
+    """q_R for weight(s) w given histogram T (paper §4.3, O(2^b)).
+
+    Untouched registers (still r_min) are intentionally absent from T: their
+    e^{-w 2^{-(r_min+1)}} term is ~0 (Alg. 3 inits T to zeros), so
+    q_R = 1 - (1/m) Σ_k T[k] e^{-w s_k} automatically treats them as
+    always-updatable.
+    """
+    s = jnp.asarray(estimators._bin_scales(cfg))  # 2^{-(k+r_min+1)}
+    w = jnp.asarray(w, jnp.float32)
+    expo = jnp.exp(-w[..., None] * s)  # (..., 2^b)
+    q = 1.0 - (hist.astype(jnp.float32) * expo).sum(-1) / cfg.m
+    return jnp.maximum(q, _QR_FLOOR)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def update_scan(cfg: SketchConfig, state: DynState, ids, weights, mask=None) -> DynState:
+    """Exact sequential update of a batch (Alg. 3 semantics, Eq. 12 estimator)."""
+    lo, hi = hashing.split_id64(ids)
+    w = weights.astype(jnp.float32)
+    if mask is None:
+        mask = jnp.ones_like(w, dtype=bool)
+
+    def step(carry, inp):
+        regs, hist, chat = carry
+        elo, ehi, ew, em = inp
+        j, y = _choose_and_quantize(cfg, elo, ehi, ew)
+        q = _q_update_prob(cfg, hist, ew)
+        old = regs[j].astype(jnp.int32)
+        changed = em & (y > old)
+        # Histogram move: decrement old bin if tracked, increment new bin.
+        old_bin = old - cfg.r_min
+        new_bin = y - cfg.r_min
+        dec = changed & (hist[old_bin] > 0)
+        hist = hist.at[old_bin].add(jnp.where(dec, -1, 0))
+        hist = hist.at[new_bin].add(jnp.where(changed, 1, 0))
+        regs = regs.at[j].set(jnp.where(changed, y, old).astype(jnp.int8))
+        chat = chat + jnp.where(changed, ew / q, 0.0)
+        return (regs, hist, chat), None
+
+    (regs, hist, chat), _ = jax.lax.scan(step, (state.regs, state.hist, state.chat), (lo, hi, w, mask))
+    return DynState(regs=regs, hist=hist, chat=chat)
+
+
+def _dedup_mask(lo, hi):
+    """Exact within-batch first-occurrence mask via sort on the id pair."""
+    order = jnp.lexsort((lo, hi))
+    slo, shi = lo[order], hi[order]
+    first = jnp.concatenate(
+        [jnp.array([True]), (slo[1:] != slo[:-1]) | (shi[1:] != shi[:-1])]
+    )
+    mask = jnp.zeros_like(first).at[order].set(first)
+    return mask
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def update_batch(cfg: SketchConfig, state: DynState, ids, weights, mask=None) -> DynState:
+    """Batch-stale update: q_R and change-indicators from the batch-start state.
+
+    Exact within-batch dedup; register scatter-max; histogram rebuilt from
+    registers (equivalent to the incremental moves because untouched
+    registers hold r_min and bin 0 is pinned to zero).
+    """
+    lo, hi = hashing.split_id64(ids)
+    w = weights.astype(jnp.float32)
+    j, y = _choose_and_quantize(cfg, lo, hi, w)
+
+    alive = _dedup_mask(lo, hi)
+    if mask is not None:
+        alive = alive & mask
+
+    old = state.regs[j].astype(jnp.int32)
+    changed = alive & (y > old)
+    q = _q_update_prob(cfg, state.hist, w)
+    chat = state.chat + jnp.sum(jnp.where(changed, w / q, 0.0))
+
+    y_eff = jnp.where(changed, y, jnp.int32(cfg.r_min))
+    regs = state.regs.astype(jnp.int32).at[j].max(y_eff).astype(jnp.int8)
+
+    # Rebuild histogram of touched registers (R > r_min); bin 0 stays 0.
+    hist = jnp.zeros((cfg.num_bins,), jnp.int32).at[
+        regs.astype(jnp.int32) - cfg.r_min
+    ].add(1)
+    hist = hist.at[0].set(0)
+    return DynState(regs=regs, hist=hist, chat=chat)
+
+
+def estimate(state: DynState) -> jnp.ndarray:
+    """Anytime estimate: it's just the running martingale (O(0) per query)."""
+    return state.chat
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def estimate_mle(cfg: SketchConfig, state: DynState):
+    """Histogram-MLE re-estimate from the registers.
+
+    Used (a) after cross-shard merges, where local running Ĉ's can't just be
+    added (shared elements would double-count), and (b) as a self-check.
+
+    Unlike QSketch — where every element feeds every register, making each
+    register quantized-Exp(C) — a Dyn register only hears the 1/m sub-stream
+    g(x) routes to it, so its law is quantized-Exp(C_j) with C_j ≈ C/m
+    (stochastic averaging over the multinomial split, the same argument
+    HyperLogLog's analysis uses). The QSketch MLE therefore recovers C/m and
+    is scaled by m. An r_min register is the 'sub-stream produced nothing
+    above r_min' event, whose probability e^{-C_j 2^{-(r_min+1)}} is exactly
+    the truncated-low bin of the same likelihood (empty sub-stream -> C_j=0
+    -> probability 1), so untouched registers need no special-casing.
+    """
+    hist = estimators.histogram(cfg, state.regs)
+    chat, _, _ = estimators.qsketch_mle(cfg, hist)
+    return chat * cfg.m
+
+
+def merge(cfg: SketchConfig, a: DynState, b: DynState) -> DynState:
+    """Merge sketches of disjoint/overlapping sub-streams.
+
+    Registers: element-wise max (exact union semantics).
+    Histogram: rebuilt. Running Ĉ: re-estimated via MLE — the local running
+    estimates are NOT additive when sub-streams may share elements.
+    """
+    regs = jnp.maximum(a.regs, b.regs)
+    hist = jnp.zeros((cfg.num_bins,), jnp.int32).at[
+        regs.astype(jnp.int32) - cfg.r_min
+    ].add(1)
+    hist = hist.at[0].set(0)
+    # Full histogram (including untouched registers in bin 0) for the MLE;
+    # the stored hist keeps the Alg.-3 'touched only' convention.
+    full_hist = hist.at[0].set(cfg.m - jnp.sum(hist))
+    chat, _, _ = estimators.qsketch_mle(cfg, full_hist)
+    return DynState(regs=regs, hist=hist, chat=chat * cfg.m)
+
+
+# ---------------------------------------------------------------------------
+# numpy oracle (exact Alg. 3 / Eq. 12 semantics) for tests
+# ---------------------------------------------------------------------------
+
+
+def update_numpy(cfg: SketchConfig, ids_lo, ids_hi, weights):
+    """Pure-numpy sequential reference; returns (regs, hist, chat)."""
+    regs = np.full(cfg.m, cfg.r_min, dtype=np.int64)
+    hist = np.zeros(cfg.num_bins, dtype=np.int64)
+    chat = 0.0
+    ks = np.arange(cfg.num_bins, dtype=np.float64) + cfg.r_min + 1.0
+    s = np.exp2(-ks)
+    for xlo, xhi, w in zip(np.asarray(ids_lo), np.asarray(ids_hi), np.asarray(weights)):
+        jl = hashing.hash_mod(
+            (jnp.uint32(int(xlo)), jnp.uint32(int(xhi))), cfg.salt_g, cfg.m
+        )
+        j = int(jl)
+        e = float(
+            hashing.neg_log_uniform(
+                (jnp.uint32(int(xlo)), jnp.uint32(int(xhi)), jnp.uint32(j)), cfg.salt_h
+            )
+        )
+        y = int(np.floor(np.log2(w) - np.log2(e)))
+        y = min(y, cfg.r_max)
+        q = max(1.0 - float(np.sum(hist * np.exp(-w * s))) / cfg.m, _QR_FLOOR)
+        if y > regs[j]:
+            ob = regs[j] - cfg.r_min
+            if hist[ob] > 0:
+                hist[ob] -= 1
+            hist[y - cfg.r_min] += 1
+            regs[j] = y
+            chat += w / q
+    return regs, hist, chat

@@ -1,0 +1,95 @@
+"""Shared configuration types for the sketch family.
+
+``SketchConfig`` is a frozen (hashable) dataclass so it can be closed over or
+passed as a static argument to ``jax.jit``. Sketch *states* are plain pytrees
+(NamedTuples of arrays) so they thread through scans, pjit, and checkpoints.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchConfig:
+    """Configuration shared by QSketch / QSketch-Dyn / LM / FastGM / FastExp.
+
+    Attributes:
+      m: number of registers.
+      b: register width in bits (QSketch family). r_min/r_max follow the
+         paper: r_min = -2^(b-1)+1, r_max = 2^(b-1)-1 (b=8 -> [-127, 127]).
+      seed: base salt; each hash role (h_j, g, permutation keys) derives its
+         own sub-salt from it so roles are independent.
+    """
+
+    m: int = 256
+    b: int = 8
+    seed: int = 0x5EED
+
+    def __post_init__(self):
+        if self.m < 3:
+            raise ValueError("m >= 3 required (estimator variance needs m>=3)")
+        if not (2 <= self.b <= 8):
+            raise ValueError("register width b must be in [2, 8]")
+
+    @property
+    def r_min(self) -> int:
+        return -(2 ** (self.b - 1)) + 1
+
+    @property
+    def r_max(self) -> int:
+        return 2 ** (self.b - 1) - 1
+
+    @property
+    def num_bins(self) -> int:
+        """Histogram bins: one per representable register value."""
+        return 2**self.b
+
+    @property
+    def top_bin(self) -> int:
+        """Index of the r_max bin: r_max - r_min = 2^b - 2 (the paper's
+        symmetric truncation leaves one int8 code point unused)."""
+        return self.r_max - self.r_min
+
+    # Derived salts: distinct per role, stable across processes.
+    @property
+    def salt_h(self) -> int:
+        return (self.seed * 0x9E3779B1 + 1) & 0xFFFFFFFF
+
+    @property
+    def salt_g(self) -> int:
+        return (self.seed * 0x9E3779B1 + 2) & 0xFFFFFFFF
+
+    @property
+    def salt_perm(self) -> int:
+        return (self.seed * 0x9E3779B1 + 3) & 0xFFFFFFFF
+
+    def memory_bits(self, with_histogram: bool = False) -> int:
+        """Sketch memory footprint in bits (paper §4.3 complexity)."""
+        bits = self.m * self.b
+        if with_histogram:
+            bits += self.num_bins * max(1, (self.m).bit_length())
+        return bits
+
+
+class QSketchState(NamedTuple):
+    """Registers of a QSketch. int8 natively on TPU (DESIGN.md §4.4)."""
+
+    regs: jnp.ndarray  # int8[m], initialized to r_min
+
+
+class DynState(NamedTuple):
+    """QSketch-Dyn state: registers + value histogram + running estimate."""
+
+    regs: jnp.ndarray  # int8[m]
+    hist: jnp.ndarray  # int32[2^b]; counts *touched* registers only
+    chat: jnp.ndarray  # float32 scalar, running weighted-cardinality estimate
+
+
+class FloatSketchState(NamedTuple):
+    """LM / FastGM / FastExpSketch state: float32 min-registers."""
+
+    regs: jnp.ndarray  # float32[m], initialized to +inf

@@ -1,0 +1,5 @@
+"""Data pipeline: synthetic weighted streams + LM token batches."""
+
+from . import synthetic, tokens
+
+__all__ = ["synthetic", "tokens"]

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the sketch hot paths.
+
+Three kernels (each with a pure-jnp oracle in ref.py and a jit'd public
+wrapper in ops.py):
+
+* qsketch_update  — batched QSketch register update (max semantics, int).
+* float_sketch    — LM/FastGM-family update (min semantics, float32).
+* qdyn_qr         — QSketch-Dyn batch update-probability q_R.
+
+On this CPU container the kernels run in interpret mode (the kernel body
+executes in Python); on TPU the identical code lowers through Mosaic. ops.py
+auto-selects based on the backend.
+"""
+
+from . import ops, qdyn_qr, qsketch_update, ref
+
+__all__ = ["ops", "ref", "qsketch_update", "qdyn_qr"]

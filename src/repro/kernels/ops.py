@@ -1,0 +1,146 @@
+"""User-facing jit'd wrappers around the Pallas sketch kernels.
+
+These adapt (SketchConfig, sketch-state, raw id/weight batches) to the padded
+2-D operand layout the kernels want, pick interpret mode automatically off
+the backend (interpret=True executes the kernel body in Python on CPU — the
+validation mode this container uses; on TPU the same code lowers to Mosaic),
+and convert between the int8 register state and the kernel's int32 blocks.
+
+Padding contracts:
+  * batch rows are padded to a block multiple with log2w = -inf (QSketch) or
+    w = -1 (float sketches mask non-positive w): padded rows are no-ops.
+  * registers are padded to a block multiple; padded registers evolve
+    independently and are sliced off — they never alias real ones because
+    each register consumes its own hash lane.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.core.types import FloatSketchState, QSketchState, SketchConfig
+
+from . import qdyn_qr, qsketch_update
+
+_NEG_INF = float(np.finfo(np.float32).min)
+_POS_INF = float(np.finfo(np.float32).max)
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _pick_blocks(b: int, m: int, block_b, block_m):
+    """Clamp default blocks to the (padded) problem size."""
+    bb = block_b or min(qsketch_update.DEFAULT_BLOCK_B, _round_up(b, 8))
+    bm = block_m or min(qsketch_update.DEFAULT_BLOCK_M, _round_up(m, 128))
+    return bb, bm
+
+
+def _pad_batch(arrs, b_padded, fill_values):
+    out = []
+    for a, fill in zip(arrs, fill_values):
+        pad = b_padded - a.shape[0]
+        out.append(jnp.pad(a, ((0, pad),), constant_values=fill)[:, None])
+    return out
+
+
+def qsketch_update_op(
+    cfg: SketchConfig,
+    state: QSketchState,
+    ids,
+    weights,
+    *,
+    block_b: int | None = None,
+    block_m: int | None = None,
+    interpret: bool | None = None,
+) -> QSketchState:
+    """Kernel-backed equivalent of ``core.qsketch.update`` (bit-identical)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    lo, hi = hashing.split_id64(ids)
+    b = lo.shape[0]
+    bb, bm = _pick_blocks(b, cfg.m, block_b, block_m)
+    bp, mp = _round_up(b, bb), _round_up(cfg.m, bm)
+
+    log2w = jnp.log2(weights.astype(jnp.float32))
+    lo2, hi2, lw2 = _pad_batch([lo, hi, log2w], bp, [0, 0, _NEG_INF])
+    regs = jnp.pad(
+        state.regs.astype(jnp.int32), ((0, mp - cfg.m),), constant_values=cfg.r_min
+    )[None, :]
+
+    out = qsketch_update.qsketch_update_padded(
+        lo2,
+        hi2,
+        lw2,
+        regs,
+        block_b=bb,
+        block_m=bm,
+        salt=cfg.salt_h,
+        r_min=cfg.r_min,
+        r_max=cfg.r_max,
+        interpret=interpret,
+    )
+    return QSketchState(regs=out[0, : cfg.m].astype(jnp.int8))
+
+
+def float_sketch_update_op(
+    cfg: SketchConfig,
+    state: FloatSketchState,
+    ids,
+    weights,
+    *,
+    block_b: int | None = None,
+    block_m: int | None = None,
+    interpret: bool | None = None,
+) -> FloatSketchState:
+    """Kernel-backed equivalent of ``core.baselines.lm_update`` (bit-identical)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    lo, hi = hashing.split_id64(ids)
+    b = lo.shape[0]
+    bb, bm = _pick_blocks(b, cfg.m, block_b, block_m)
+    bp, mp = _round_up(b, bb), _round_up(cfg.m, bm)
+
+    # Padding rows are flagged with w = -1 (kernel masks non-positive w).
+    lo2, hi2, w2 = _pad_batch([lo, hi, weights.astype(jnp.float32)], bp, [0, 0, -1.0])
+    regs = jnp.pad(state.regs, ((0, mp - cfg.m),), constant_values=_POS_INF)[None, :]
+
+    out = qsketch_update.float_sketch_update_padded(
+        lo2, hi2, w2, regs, block_b=bb, block_m=bm, salt=cfg.salt_h, interpret=interpret
+    )
+    return FloatSketchState(regs=out[0, : cfg.m])
+
+
+def qdyn_qr_op(
+    cfg: SketchConfig,
+    hist,
+    weights,
+    *,
+    block_b: int | None = None,
+    interpret: bool | None = None,
+):
+    """Kernel-backed q_R batch (matches core.qsketch_dyn._q_update_prob)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    b = weights.shape[0]
+    bb = block_b or min(qdyn_qr.DEFAULT_BLOCK_B, _round_up(b, 8))
+    bp = _round_up(b, bb)
+    nbp = _round_up(cfg.num_bins, 128)
+
+    from repro.core import estimators
+
+    scales = jnp.pad(
+        jnp.asarray(estimators._bin_scales(cfg)), ((0, nbp - cfg.num_bins),)
+    )[None, :]
+    histp = jnp.pad(hist.astype(jnp.float32), ((0, nbp - cfg.num_bins),))[None, :]
+    w2 = jnp.pad(weights.astype(jnp.float32), ((0, bp - b),), constant_values=1.0)[:, None]
+
+    q = qdyn_qr.qdyn_qr_padded(w2, histp, scales, m=cfg.m, block_b=bb, interpret=interpret)
+    return jnp.maximum(q[:b, 0], 1e-12)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel, operand-for-operand identical.
+
+Each function mirrors the corresponding ``*_padded`` kernel entry exactly
+(same pre-padded operands, same dtypes, same clipping), so kernel-vs-ref
+tests can assert bitwise equality — the hashing is shared integer code, and
+floor/log2/exp are required to round identically in interpret mode.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+
+def qsketch_update_ref(ids_lo, ids_hi, log2w, regs, *, salt: int, r_min: int, r_max: int):
+    """Oracle for qsketch_update_padded: (1, M) int32 updated registers."""
+    m = regs.shape[1]
+    j = jnp.arange(m, dtype=jnp.uint32)
+    e = hashing.neg_log_uniform((ids_lo, ids_hi, j[None, :]), salt)  # (B, M)
+    y = jnp.floor(log2w - jnp.log2(e))
+    y = jnp.clip(y, float(r_min), float(r_max)).astype(jnp.int32)
+    return jnp.maximum(regs, jnp.max(y, axis=0, keepdims=True))
+
+
+def float_sketch_update_ref(ids_lo, ids_hi, w, regs, *, salt: int):
+    """Oracle for float_sketch_update_padded: (1, M) float32 registers."""
+    m = regs.shape[1]
+    big = jnp.float32(jnp.finfo(jnp.float32).max)
+    j = jnp.arange(m, dtype=jnp.uint32)
+    e = hashing.neg_log_uniform((ids_lo, ids_hi, j[None, :]), salt)
+    r = jnp.where(w > 0, e / w, big)
+    return jnp.minimum(regs, jnp.min(r, axis=0, keepdims=True))
+
+
+def qdyn_qr_ref(weights, hist, scales, *, m: int):
+    """Oracle for qdyn_qr_padded: (B, 1) float32 q_R values."""
+    expo = jnp.exp(-weights * scales)  # (B, NB)
+    acc = jnp.sum(hist * expo, axis=1, keepdims=True)
+    return 1.0 - acc / float(m)

@@ -1,0 +1,91 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before ANY other import: jax locks the
+# device count at first backend init (MULTI-POD DRY-RUN step 0).
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="Multi-pod dry-run: lower + compile every (arch x shape) cell "
+        "on the production mesh and record memory/cost/roofline."
+    )
+    ap.add_argument("--arch", default="all", help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape id or 'all'")
+    ap.add_argument("--multi-pod", action="store_true", help="use the (2,16,16) 512-chip mesh")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-sketch", action="store_true")
+    ap.add_argument("--no-quantized-opt", action="store_true")
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--remat-policy", default="", help="'dots' to save matmuls")
+    ap.add_argument("--skip-hlo-parse", action="store_true")
+    ap.add_argument("--sharded-xent", action="store_true")
+    ap.add_argument("--moe-impl", default="", help="shard_map_a2a | scatter")
+    ap.add_argument("--ssm-chunk", type=int, default=0)
+    ap.add_argument("--ssm-intra-dtype", default="")
+    ap.add_argument("--tag", default="", help="artifact suffix, e.g. _opt1")
+    args = ap.parse_args()
+
+    # Imports deferred until after XLA_FLAGS is set.
+    from repro import configs
+    from repro.launch import dryrun_lib
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    tag = ("_multipod" if args.multi_pod else "_singlepod") + args.tag
+    remat = False if args.no_remat else (args.remat_policy or True)
+    opts = dryrun_lib.CellOptions(
+        quantized_opt=not args.no_quantized_opt,
+        compress=args.compress,
+        sketch=not args.no_sketch,
+        microbatches=args.microbatches,
+        remat=remat,
+        sharded_xent=args.sharded_xent,
+        moe_impl=args.moe_impl,
+        ssm_chunk=args.ssm_chunk,
+        ssm_intra_dtype=args.ssm_intra_dtype,
+        variant_tag=args.tag,
+    )
+
+    archs = configs.list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(configs.SHAPES) if args.shape == "all" else [args.shape]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            t0 = time.time()
+            rec = dryrun_lib.run_cell(arch, shape, mesh, opts, parse_hlo=not args.skip_hlo_parse)
+            path = dryrun_lib.save_record(rec, args.out, tag)
+            dt = time.time() - t0
+            if rec["status"] == "ok":
+                m = rec["per_device"]
+                print(
+                    f"OK   {arch:24s} {shape:12s} {dt:7.1f}s "
+                    f"mem={rec['hbm_fit']['peak_bytes_est']/2**30:7.2f}GiB "
+                    f"flops/dev={m['flops']:.3e} coll/dev={m['collective_bytes']:.3e}B "
+                    f"-> {rec['bottleneck']}",
+                    flush=True,
+                )
+                # Step-3 requirement: print the analyses verbatim.
+                print(f"     memory_analysis: arg={m['argument_bytes']} out={m['output_bytes']} temp={m['temp_bytes']} alias={m['alias_bytes']}", flush=True)
+                print(f"     cost_analysis:   flops={m['flops']} bytes={m['bytes_accessed']}", flush=True)
+            elif rec["status"] == "skip":
+                print(f"SKIP {arch:24s} {shape:12s} ({rec['skip_reason']})", flush=True)
+            else:
+                failures += 1
+                print(f"FAIL {arch:24s} {shape:12s} {dt:7.1f}s {rec['error']}", flush=True)
+                if rec.get("traceback"):
+                    print(rec["traceback"][-1500:], flush=True)
+            print(f"     -> {path}", flush=True)
+
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,298 @@
+"""Dry-run cell machinery (importable; no jax env mutation — dryrun.py owns
+the XLA_FLAGS lines).
+
+One "cell" = (architecture × input shape × mesh). For each cell this module
+builds the abstract inputs (ShapeDtypeStructs only — nothing allocated),
+jits the appropriate step with explicit in/out shardings, ``.lower()``s,
+``.compile()``s, and extracts:
+
+  * memory_analysis()  — per-device argument/output/temp bytes (fits HBM?)
+  * cost_analysis()    — per-device HLO FLOPs / bytes accessed
+  * collective bytes   — parsed from the partitioned HLO text
+  * roofline terms + bottleneck + MODEL_FLOPS/HLO_FLOPs usefulness ratio
+
+Records are JSON files under experiments/dryrun/ — EXPERIMENTS.md §Dry-run
+and §Roofline are generated from them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs import paper_qsketch
+from repro.models import common as mcommon, sharding as msharding, transformer
+from repro.roofline import analysis as ra, hlo_stats, hw
+from repro.sketchstream import monitor
+from repro.train import optimizer, serve_step, train_step
+
+DEFAULT_OUT = "experiments/dryrun"
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _replicated_like(mesh, tree):
+    return jax.tree.map(lambda _: _ns(mesh, P()), tree)
+
+
+def _batch_shardings(mesh, batch_abs):
+    def leaf(x):
+        if x.ndim >= 1 and x.shape and x.shape[0] > 1:
+            return _ns(mesh, msharding.resolve(("batch",) + (None,) * (x.ndim - 1), mesh, x.shape))
+        return _ns(mesh, P())
+
+    return jax.tree.map(leaf, batch_abs)
+
+
+@dataclasses.dataclass
+class CellOptions:
+    quantized_opt: bool = True
+    compress: bool = False
+    sketch: bool = True
+    microbatches: int = 1
+    remat: object = True  # True/"full" | "dots" | False
+    donate: bool = True
+    # §Perf hillclimb knobs (baseline = defaults):
+    sharded_xent: bool = False
+    moe_impl: str = ""  # "" = config default; "shard_map_a2a" | "scatter"
+    ssm_chunk: int = 0  # 0 = config default
+    ssm_intra_dtype: str = ""  # "" = config default; "bfloat16"
+    variant_tag: str = ""  # suffix for saved artifacts (e.g. "_opt1")
+
+
+def _apply_overrides(cfg, opts: CellOptions):
+    """Hillclimb knobs -> config replace (leaves baseline untouched)."""
+    if opts.moe_impl and cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, impl=opts.moe_impl))
+    if cfg.ssm is not None and (opts.ssm_chunk or opts.ssm_intra_dtype):
+        ssm = cfg.ssm
+        if opts.ssm_chunk:
+            ssm = dataclasses.replace(ssm, chunk=opts.ssm_chunk)
+        if opts.ssm_intra_dtype:
+            ssm = dataclasses.replace(ssm, intra_dtype=opts.ssm_intra_dtype)
+        cfg = dataclasses.replace(cfg, ssm=ssm)
+    return cfg
+
+
+def build_cell(arch: str, shape: str, mesh, opts: CellOptions = CellOptions()):
+    """Returns (lower_fn, meta). lower_fn() -> jax.stages.Lowered."""
+    cfg = _apply_overrides(configs.get_config(arch), opts)
+    ss = configs.SHAPES[shape]
+    defs = transformer.model_defs(cfg)
+    params_abs = mcommon.abstract_params(defs)
+    param_sh = jax.tree.map(lambda s: _ns(mesh, s), msharding.spec_tree(defs, mesh))
+    sketch_cfg = paper_qsketch.telemetry_default() if opts.sketch else None
+
+    meta = {
+        "arch": arch,
+        "shape": shape,
+        "kind": ss.kind,
+        "mesh": dict(zip(mesh.axis_names, [int(mesh.shape[a]) for a in mesh.axis_names])),
+        "chips": int(mesh.size),
+        "params_total": transformer.count(cfg),
+        "params_active": transformer.count(cfg, active_only=True),
+        "options": dataclasses.asdict(opts),
+    }
+
+    if ss.kind == "train":
+        ocfg = optimizer.OptConfig(quantized=opts.quantized_opt)
+        opt_abs = jax.eval_shape(lambda p: optimizer.init(p, ocfg), params_abs)
+        opt_sh = jax.tree.map(
+            lambda s: _ns(mesh, s), optimizer.spec_tree(defs, mesh, ocfg)
+        )
+        comp_abs = (
+            jax.eval_shape(lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p), params_abs)
+            if opts.compress
+            else {}
+        )
+        comp_sh = param_sh if opts.compress else {}
+        sk_abs = jax.eval_shape(lambda: monitor.init(sketch_cfg)) if opts.sketch else {}
+        sk_sh = _replicated_like(mesh, sk_abs)
+        batch_abs = configs.input_specs(cfg, shape)
+        batch_sh = _batch_shardings(mesh, batch_abs)
+
+        fn = train_step.make_train_step(
+            cfg,
+            ocfg,
+            mesh,
+            sketch_cfg=sketch_cfg,
+            compress=opts.compress,
+            microbatches=opts.microbatches,
+            remat=opts.remat,
+            sharded_xent=opts.sharded_xent,
+        )
+        jitted = jax.jit(
+            fn,
+            in_shardings=(param_sh, opt_sh, comp_sh, sk_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, comp_sh, sk_sh, None),
+            donate_argnums=(0, 1, 2, 3) if opts.donate else (),
+        )
+        meta["tokens_per_step"] = ss.batch * ss.seq
+        return lambda: jitted.lower(params_abs, opt_abs, comp_abs, sk_abs, batch_abs), (cfg, meta)
+
+    if ss.kind == "prefill":
+        batch_abs = configs.input_specs(cfg, shape)
+        batch_sh = _batch_shardings(mesh, batch_abs)
+        fn = serve_step.make_prefill(cfg, mesh, max_len=ss.seq)
+        cache_sh = jax.tree.map(
+            lambda s: _ns(mesh, s),
+            msharding.spec_tree(transformer.cache_defs(cfg, ss.batch, ss.seq), mesh),
+        )
+        jitted = jax.jit(
+            fn,
+            in_shardings=(param_sh, batch_sh["tokens"])
+            + ((batch_sh["extra_embeds"],) if "extra_embeds" in batch_abs else ()),
+            out_shardings=(None, cache_sh),
+        )
+        args = (params_abs, batch_abs["tokens"]) + (
+            (batch_abs["extra_embeds"],) if "extra_embeds" in batch_abs else ()
+        )
+        meta["tokens_per_step"] = ss.batch * ss.seq
+        return lambda: jitted.lower(*args), (cfg, meta)
+
+    # decode
+    batch_abs = configs.input_specs(cfg, shape)
+    cache_abs = batch_abs["cache"]
+    cache_sh = jax.tree.map(
+        lambda s: _ns(mesh, s),
+        msharding.spec_tree(transformer.cache_defs(cfg, ss.batch, ss.seq), mesh),
+    )
+    sk_abs = jax.eval_shape(lambda: monitor.init(sketch_cfg)) if opts.sketch else None
+    sk_sh = _replicated_like(mesh, sk_abs) if opts.sketch else None
+    tok_sh = _ns(mesh, msharding.resolve(("batch", None), mesh, (ss.batch, 1)))
+    sid_abs = jax.ShapeDtypeStruct((ss.batch,), jnp.uint32)
+    sw_abs = jax.ShapeDtypeStruct((ss.batch,), jnp.float32)
+    sid_sh = _ns(mesh, msharding.resolve(("batch",), mesh, (ss.batch,)))
+
+    fn = serve_step.make_decode_step(cfg, mesh, sketch_cfg=sketch_cfg)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(param_sh, cache_sh, _ns(mesh, P()), tok_sh, sk_sh, sid_sh, sid_sh),
+        out_shardings=(tok_sh, cache_sh, sk_sh),
+        donate_argnums=(1,) if opts.donate else (),
+    )
+    meta["tokens_per_step"] = ss.batch  # one new token per sequence
+    args = (
+        params_abs,
+        cache_abs,
+        batch_abs["cur_len"],
+        batch_abs["tokens"],
+        sk_abs,
+        sid_abs,
+        sw_abs,
+    )
+    return lambda: jitted.lower(*args), (cfg, meta)
+
+
+def run_cell(arch: str, shape: str, mesh, opts: CellOptions = CellOptions(), parse_hlo: bool = True) -> dict:
+    cfg = configs.get_config(arch)
+    reason = configs.skip_reason(cfg, shape)
+    base = {"arch": arch, "shape": shape, "status": "skip", "skip_reason": reason}
+    if reason is not None:
+        return base
+
+    try:
+        lower_fn, (cfg, meta) = build_cell(arch, shape, mesh, opts)
+        t0 = time.time()
+        lowered = lower_fn()
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+        cost = compiled.cost_analysis()
+        mem = compiled.memory_analysis()
+        chips = meta["chips"]
+        # Loop-aware structural stats (while bodies x trip count). The raw
+        # cost_analysis numbers count loop bodies ONCE and are kept as a
+        # per-iteration diagnostic (EXPERIMENTS.md §Numerics-notes). The
+        # compiled HLO text is persisted (zstd) so the analyzer can be
+        # improved offline without recompiling (launch/reanalyze.py).
+        hlo_text = compiled.as_text() if parse_hlo else ""
+        if hlo_text:
+            _save_hlo(meta, hlo_text, variant=getattr(opts, "variant_tag", ""))
+        stats = (
+            hlo_stats.analyze(hlo_text) if parse_hlo else
+            {"dot_flops": 0.0, "hbm_bytes": 0.0, "collective_by_op": {},
+             "collective_bytes": 0.0, "unknown_trip_whiles": -1}
+        )
+        coll = stats["collective_by_op"]
+        pd_flops = float(stats["dot_flops"])
+        pd_bytes = float(stats["hbm_bytes"])
+        pd_coll = float(stats["collective_bytes"])
+        terms, bottleneck = ra.roofline_terms(pd_flops, pd_bytes, pd_coll, chips)
+        mf = ra.model_flops(cfg, meta["tokens_per_step"], meta["kind"])
+        hlo_global = pd_flops * chips
+        record = {
+            **meta,
+            "status": "ok",
+            "lower_s": t1 - t0,
+            "compile_s": t2 - t1,
+            "per_device": {
+                "flops": pd_flops,
+                "bytes_accessed": pd_bytes,
+                "collective_bytes": pd_coll,
+                "collective_by_op": coll,
+                "unknown_trip_whiles": stats.get("unknown_trip_whiles", 0),
+                "cost_analysis_flops_periter": float(cost.get("flops", 0.0)),
+                "cost_analysis_bytes_periter": float(cost.get("bytes accessed", 0.0)),
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "alias_bytes": int(mem.alias_size_in_bytes),
+            },
+            "hbm_fit": {
+                "peak_bytes_est": int(
+                    mem.argument_size_in_bytes
+                    + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes
+                    - mem.alias_size_in_bytes
+                ),
+                "chip_hbm_bytes": hw.CHIP_HBM_BYTES,
+            },
+            "roofline": terms,
+            "bottleneck": bottleneck,
+            "model_flops_global": mf,
+            "hlo_flops_global": hlo_global,
+            "useful_flops_ratio": (mf / hlo_global) if hlo_global else 0.0,
+        }
+        return record
+    except Exception as e:
+        return {**base, "status": "error", "error": f"{type(e).__name__}: {e}", "traceback": traceback.format_exc()[-4000:]}
+
+
+def _save_hlo(meta, text: str, out_dir: str = DEFAULT_OUT, variant: str = ""):
+    import zstandard
+
+    os.makedirs(out_dir, exist_ok=True)
+    tag = ("_multipod" if "pod" in meta["mesh"] else "_singlepod") + variant
+    path = os.path.join(out_dir, f"{meta['arch']}_{meta['shape']}{tag}.hlo.zst")
+    with open(path, "wb") as f:
+        f.write(zstandard.ZstdCompressor(level=6).compress(text.encode()))
+
+
+def parse_collective_bytes_safe(compiled):
+    try:
+        return ra.parse_collective_bytes(compiled.as_text())
+    except Exception:
+        return {}
+
+
+def save_record(record: dict, out_dir: str = DEFAULT_OUT, tag: str = ""):
+    """tag examples: _singlepod, _multipod, _singlepod_opt1."""
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{record['arch']}_{record['shape']}{tag}.json"
+    path = os.path.join(out_dir, name)
+    slim = {k: v for k, v in record.items() if k != "traceback"}
+    with open(path, "w") as f:
+        json.dump(slim, f, indent=1)
+    return path

@@ -1,0 +1,23 @@
+"""Production mesh builders (MULTI-POD DRY-RUN step 1).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state (jax locks the platform/device count at first backend init, and
+the dry-run must set XLA_FLAGS before that happens).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int | None = None):
+    """Whatever this host actually has (smoke tests / examples)."""
+    n = len(jax.devices())
+    model = model or (2 if n % 2 == 0 and n > 1 else 1)
+    return jax.make_mesh((n // model, model), ("data", "model"))

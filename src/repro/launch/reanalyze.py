@@ -1,0 +1,62 @@
+"""Offline re-analysis of persisted dry-run HLO: recompute the loop-aware
+stats and roofline terms in every cell JSON without recompiling.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import zstandard
+
+from repro import configs
+from repro.roofline import analysis as ra, hlo_stats
+
+
+def reanalyze_record(json_path: str) -> bool:
+    rec = json.load(open(json_path))
+    if rec.get("status") != "ok":
+        return False
+    hlo_path = json_path.replace(".json", ".hlo.zst")
+    if not os.path.exists(hlo_path):
+        return False
+    text = zstandard.ZstdDecompressor().decompress(open(hlo_path, "rb").read(), max_output_size=2**33).decode()
+    stats = hlo_stats.analyze(text)
+    pd = rec["per_device"]
+    pd.update({
+        "flops": float(stats["dot_flops"]),
+        "bytes_accessed": float(stats["hbm_bytes"]),
+        "collective_bytes": float(stats["collective_bytes"]),
+        "collective_by_op": stats["collective_by_op"],
+        "unknown_trip_whiles": stats["unknown_trip_whiles"],
+    })
+    terms, bottleneck = ra.roofline_terms(pd["flops"], pd["bytes_accessed"], pd["collective_bytes"], rec["chips"])
+    cfg = configs.get_config(rec["arch"])
+    mf = ra.model_flops(cfg, rec["tokens_per_step"], rec["kind"])
+    rec["roofline"] = terms
+    rec["bottleneck"] = bottleneck
+    rec["model_flops_global"] = mf
+    rec["hlo_flops_global"] = pd["flops"] * rec["chips"]
+    rec["useful_flops_ratio"] = mf / rec["hlo_flops_global"] if rec["hlo_flops_global"] else 0.0
+    json.dump(rec, open(json_path, "w"), indent=1)
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    n = 0
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        if reanalyze_record(path):
+            n += 1
+            print("reanalyzed", os.path.basename(path), flush=True)
+    print(f"{n} records updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,190 @@
+"""End-to-end training driver: data -> train_step -> telemetry -> checkpoints.
+
+Fault-tolerance behaviours (exercised by tests/test_train_loop.py):
+  * atomic async checkpoints every --ckpt-every steps (+ final),
+  * auto-resume from the newest complete checkpoint in --ckpt-dir,
+  * SIGTERM/SIGINT trigger a final synchronous save before exit (preemption
+    handling — the TPU-pod eviction path),
+  * a step watchdog logs straggler steps (> --straggler-factor x EMA),
+  * the data pipeline is (seed, step, shard)-keyed, so restarts and elastic
+    host-count changes replay the exact global stream.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch small-lm-16m --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke --steps 10
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _extra_presets():
+    """Small real-training presets (the assigned archs are dry-run scale)."""
+    from repro.models import LayerSpec, ModelConfig
+
+    def small(name, layers, d, heads, ff, vocab=32000):
+        return ModelConfig(
+            name=name, n_layers=layers, d_model=d, n_heads=heads,
+            n_kv_heads=max(heads // 4, 1), d_ff=ff, vocab=vocab,
+            pattern=(LayerSpec(),), act_dtype="float32", tie_embeddings=True,
+        )
+
+    return {
+        "small-lm-16m": lambda: small("small-lm-16m", 4, 256, 4, 1024, vocab=8192),
+        "small-lm-100m": lambda: small("small-lm-100m", 12, 768, 12, 3072),
+    }
+
+
+def build_config(arch: str, smoke: bool):
+    from repro import configs
+
+    presets = _extra_presets()
+    if arch in presets:
+        return presets[arch]()
+    return configs.smoke_config(arch) if smoke else configs.get_config(arch)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="small-lm-16m")
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config of an assigned arch")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="checkpoints/run")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--quantized-opt", action="store_true")
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--no-sketch", action="store_true")
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--straggler-factor", type=float, default=3.0)
+    ap.add_argument("--metrics-file", default="")
+    ap.add_argument("--abort-after", type=int, default=0,
+                    help="simulate preemption: stop after N steps this invocation (tests)")
+    args = ap.parse_args(argv)
+
+    from repro.configs import paper_qsketch
+    from repro.data.tokens import TokenStream
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import common as mcommon, sharding as msharding, transformer
+    from repro.sketchstream import monitor
+    from repro.train import checkpoint, optimizer, train_step as ts
+
+    mesh = make_local_mesh()
+    cfg = build_config(args.arch, args.smoke)
+    sketch_cfg = None if args.no_sketch else paper_qsketch.telemetry_default()
+    ocfg = optimizer.OptConfig(
+        lr=args.lr, total_steps=args.steps, warmup_steps=max(args.steps // 20, 1),
+        quantized=args.quantized_opt,
+    )
+
+    defs = transformer.model_defs(cfg)
+    print(f"[train] arch={cfg.name} params={transformer.count(cfg)/1e6:.1f}M "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}", flush=True)
+
+    params = mcommon.init_params(defs, jax.random.PRNGKey(args.seed))
+    shardings = msharding.sharding_tree(defs, mesh)
+    params = jax.tree.map(lambda x, s: jax.device_put(x, s), params, shardings)
+    opt_state, comp_state, sk_state = ts.init_states(
+        cfg, ocfg, params, sketch_cfg=sketch_cfg, compress=args.compress
+    )
+
+    start_step = 0
+    state_tree = {"params": params, "opt": opt_state, "comp": comp_state, "sk": sk_state}
+    if not args.no_resume:
+        latest = checkpoint.latest_step(args.ckpt_dir)
+        if latest is not None:
+            state_tree, manifest = checkpoint.restore(args.ckpt_dir, latest, state_tree)
+            state_tree = {
+                "params": jax.tree.map(lambda x, s: jax.device_put(x, s), state_tree["params"], shardings),
+                "opt": jax.tree.map(jnp.asarray, state_tree["opt"]),
+                "comp": jax.tree.map(jnp.asarray, state_tree["comp"]),
+                "sk": jax.tree.map(jnp.asarray, state_tree["sk"]),
+            }
+            start_step = manifest["step"]
+            print(f"[train] resumed from step {start_step}", flush=True)
+
+    params, opt_state, comp_state, sk_state = (
+        state_tree["params"], state_tree["opt"], state_tree["comp"], state_tree["sk"]
+    )
+
+    step_fn = jax.jit(
+        ts.make_train_step(
+            cfg, ocfg, mesh, sketch_cfg=sketch_cfg, compress=args.compress,
+            microbatches=args.microbatches,
+        ),
+        donate_argnums=(0, 1, 2, 3),
+    )
+
+    stream = TokenStream(cfg.vocab, args.batch, args.seq, seed=args.seed)
+    ckpt = checkpoint.AsyncCheckpointer(args.ckpt_dir)
+    metrics_f = open(args.metrics_file, "a") if args.metrics_file else None
+
+    stop = {"flag": False}
+
+    def _sig(_s, _f):
+        stop["flag"] = True
+
+    old_handlers = {}
+    for s in (signal.SIGTERM, signal.SIGINT):
+        try:
+            old_handlers[s] = signal.signal(s, _sig)
+        except ValueError:
+            pass  # non-main thread (tests)
+
+    ema = None
+    step = start_step
+    try:
+        while step < args.steps and not stop["flag"]:
+            batch = stream.batch_at(step)
+            t0 = time.time()
+            params, opt_state, comp_state, sk_state, metrics = step_fn(
+                params, opt_state, comp_state, sk_state, batch
+            )
+            metrics = jax.tree.map(float, jax.device_get(metrics))
+            dt = time.time() - t0
+            ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+            if dt > args.straggler_factor * ema and step > start_step + 3:
+                print(f"[watchdog] straggler step {step}: {dt:.2f}s vs ema {ema:.2f}s", flush=True)
+            step += 1
+            if step % args.log_every == 0 or step == args.steps:
+                line = {"step": step, "time_s": round(dt, 4), **{k: round(v, 5) for k, v in metrics.items()}}
+                print(f"[train] {json.dumps(line)}", flush=True)
+                if metrics_f:
+                    metrics_f.write(json.dumps(line) + "\n")
+                    metrics_f.flush()
+            if step % args.ckpt_every == 0:
+                ckpt.save(step, {"params": params, "opt": opt_state, "comp": comp_state, "sk": sk_state})
+            if args.abort_after and step - start_step >= args.abort_after:
+                print(f"[train] simulated preemption at step {step}", flush=True)
+                break
+    finally:
+        # Preemption/exit path: synchronous final save.
+        checkpoint.save(args.ckpt_dir, step, jax.device_get(
+            {"params": params, "opt": opt_state, "comp": comp_state, "sk": sk_state}
+        ))
+        ckpt.close()
+        if metrics_f:
+            metrics_f.close()
+        for s, h in old_handlers.items():
+            signal.signal(s, h)
+    print(f"[train] done at step {step}", flush=True)
+    return step
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Unified model stack for the assigned architectures (DESIGN.md §5)."""
+
+from . import attention, common, config, moe, sharding, ssm, transformer
+from .config import LayerSpec, MoEConfig, ModelConfig, SSMConfig
+
+__all__ = [
+    "ModelConfig",
+    "LayerSpec",
+    "MoEConfig",
+    "SSMConfig",
+    "attention",
+    "common",
+    "config",
+    "moe",
+    "sharding",
+    "ssm",
+    "transformer",
+]

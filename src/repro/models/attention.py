@@ -1,0 +1,232 @@
+"""Attention: GQA / MHA, sliding-window, local:global patterns, qk-norm,
+cross-attention — with a chunked online-softmax (flash-style) inner loop.
+
+The KV-chunked ``lax.scan`` keeps peak memory at O(S · chunk) instead of
+O(S^2): mandatory for the prefill_32k shape and for gemma3's 500k-token
+local-layer prefills. Scores/softmax run in f32; everything else follows the
+param dtype (bf16 on TPU).
+
+Sharding: q/k/v projections put heads on "model"; the GQA group dim rides
+with q heads. For decode caches see ``kv_cache_defs`` — kv_heads shard on
+"model" when divisible, otherwise the sequence dim takes "model" (sequence-
+parallel cache; GSPMD inserts the softmax-sum all-reduce).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import ParamDef
+
+_NEG = -1e30
+
+# TP axis size the head padding targets (matches the production mesh and the
+# kv_cache_def sharding decision below).
+_TP = 16
+
+
+def padded_heads(h: int) -> int:
+    """Megatron-style head padding (§Perf): heads that exceed the TP axis but
+    don't divide it (llava 56, whisper 20, arctic 56) would force FULLY
+    REPLICATED attention under GSPMD (16x compute/memory). Padding to the
+    next multiple of 16 wastes <=12.5%/37% lanes instead; padded heads are
+    masked to zero before the output projection, so results are unchanged
+    (tests/test_perf_variants.py::test_padded_heads_equivalence)."""
+    if h > _TP and h % _TP:
+        return -(-h // _TP) * _TP
+    return h
+
+
+def defs(cfg, *, cross=False):
+    e, dh = cfg.d_model, cfg.head_dim
+    hq, hkv = padded_heads(cfg.n_heads), padded_heads(cfg.n_kv_heads)
+    d = {
+        "wq": ParamDef((e, hq, dh), ("embed", "heads", None)),
+        "wk": ParamDef((e, hkv, dh), ("embed", "kv_heads", None)),
+        "wv": ParamDef((e, hkv, dh), ("embed", "kv_heads", None)),
+        "wo": ParamDef((hq, dh, e), ("heads", None, "embed")),
+    }
+    if cfg.qk_norm and not cross:
+        d["q_norm"] = ParamDef((dh,), (None,), init="zeros")
+        d["k_norm"] = ParamDef((dh,), (None,), init="zeros")
+    return d
+
+
+def _mask_pad_heads(out, cfg):
+    """Zero the padded q-head outputs so wo sees no garbage (and its padded
+    rows receive zero gradient).
+
+    Padded-head layout is INTERLEAVED, not appended: q head h belongs to kv
+    group h // g_pad at slot h % g_pad, and is real iff its kv group is a
+    real kv head AND its slot index < g_real. This keeps every real q head
+    attached to its original kv head (a tail-appended layout would remap
+    llava's q heads 49-55 from kv 7 to kv 6 and leave kv 7 serving only
+    padding)."""
+    real = cfg.n_heads
+    hq_pad = out.shape[-2]
+    if hq_pad == real:
+        return out
+    hkv_real = cfg.n_kv_heads
+    hkv_pad = padded_heads(hkv_real)
+    g_real = real // hkv_real
+    g_pad = hq_pad // hkv_pad
+    hi = jax.lax.broadcasted_iota(jnp.int32, out.shape, out.ndim - 2)
+    ok = ((hi // g_pad) < hkv_real) & ((hi % g_pad) < g_real)
+    return jnp.where(ok, out, jnp.zeros((), out.dtype))
+
+
+def _pick_chunk(t: int, target: int = 1024) -> int:
+    """Largest divisor of t that is <= target (KV chunking needs exactness)."""
+    if t <= target:
+        return t
+    for c in range(target, 0, -1):
+        if t % c == 0:
+            return c
+    return t
+
+
+def _qkv(params, x, cfg, *, rope_sin=None, rope_cos=None, cross_memory=None):
+    kv_src = cross_memory if cross_memory is not None else x
+    q = jnp.einsum("bse,ehd->bshd", x, params["wq"])
+    k = jnp.einsum("bte,ehd->bthd", kv_src, params["wk"])
+    v = jnp.einsum("bte,ehd->bthd", kv_src, params["wv"])
+    if "q_norm" in params:  # qwen3-style per-head RMS norm on q/k
+        q = common.rms_norm(q, params["q_norm"])
+        k = common.rms_norm(k, params["k_norm"])
+    if rope_sin is not None:
+        q = common.apply_rope(q, rope_sin, rope_cos)
+        k = common.apply_rope(k, rope_sin, rope_cos)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, *, causal: bool, window, q_offset=0, kv_valid_len=None):
+    """Online-softmax attention, scanning KV in chunks.
+
+    q: (B, S, Hq, D); k/v: (B, T, Hkv, D) with Hq % Hkv == 0.
+    window: sliding-window size or None.
+    q_offset: absolute position of q[0] (decode: current length).
+    kv_valid_len: mask out cache positions >= this (decode with preallocated
+      cache); None = all T valid.
+    Returns (B, S, Hq, D).
+    """
+    b, s, hq, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, dh).astype(jnp.float32)
+    scale = dh**-0.5
+
+    chunk = _pick_chunk(t)
+    nchunk = t // chunk
+    kc = k.reshape(b, nchunk, chunk, hkv, dh)
+    vc = v.reshape(b, nchunk, chunk, hkv, dh)
+    kc = jnp.moveaxis(kc, 1, 0)  # (nc, B, chunk, Hkv, D)
+    vc = jnp.moveaxis(vc, 1, 0)
+
+    q_pos = q_offset + jnp.arange(s)  # (S,)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, k_i, v_i = inp
+        scores = jnp.einsum("bshgd,bchd->bshgc", qg, k_i.astype(jnp.float32)) * scale
+        k_pos = ci * chunk + jnp.arange(chunk)  # (chunk,)
+        mask = jnp.ones((s, chunk), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        if kv_valid_len is not None:
+            mask &= (k_pos < kv_valid_len)[None, :]
+        scores = jnp.where(mask[None, :, None, None, :], scores, _NEG)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bshgc,bchd->bshgd", p, v_i.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, s, hkv, g), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, s, hkv, g), jnp.float32)
+    a0 = jnp.zeros((b, s, hkv, g, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (jnp.arange(nchunk), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, s, hq, dh).astype(q.dtype)
+
+
+def apply(params, x, cfg, spec, *, positions, cross_memory=None, mask_len=None, causal=True):
+    """Full-sequence attention (training / prefill). Returns (out, (k, v)).
+
+    spec: the LayerSpec (window / cross_attn flags).
+    positions: (S,) absolute positions for RoPE + masking.
+    causal: False for encoder self-attention; cross-attention is never causal.
+    """
+    use_rope = cross_memory is None
+    sin = cos = None
+    if use_rope:
+        sin, cos = common.rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+    q, k, v = _qkv(params, x, cfg, rope_sin=sin, rope_cos=cos, cross_memory=cross_memory)
+    out = chunked_attention(
+        q,
+        k,
+        v,
+        causal=causal and cross_memory is None,
+        window=spec.window,
+        q_offset=0,
+        kv_valid_len=mask_len,
+    )
+    out = _mask_pad_heads(out, cfg)
+    y = jnp.einsum("bshd,hde->bse", out, params["wo"])
+    return y, (k, v)
+
+
+def decode(params, x, cfg, spec, *, cache_k, cache_v, cur_len, cross_memory=None):
+    """Single-token decode. x: (B, 1, E). cache_[kv]: (B, T, Hkv, D).
+
+    Returns (out, new_cache_k, new_cache_v). For cross-attention layers the
+    cache holds the (fixed) encoder memory projection and is not updated.
+    """
+    if cross_memory is not None:
+        q = jnp.einsum("bse,ehd->bshd", x, params["wq"])
+        out = _mask_pad_heads(
+            chunked_attention(q, cache_k, cache_v, causal=False, window=None, kv_valid_len=None),
+            cfg,
+        )
+        return jnp.einsum("bshd,hde->bse", out, params["wo"]), cache_k, cache_v
+
+    pos = jnp.asarray(cur_len, jnp.int32)[None]  # (1,)
+    sin, cos = common.rope_tables(pos, cfg.head_dim, cfg.rope_theta)
+    q, k, v = _qkv(params, x, cfg, rope_sin=sin, rope_cos=cos)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), cur_len, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), cur_len, axis=1)
+    out = chunked_attention(
+        q,
+        cache_k,
+        cache_v,
+        causal=True,
+        window=spec.window,
+        q_offset=cur_len,
+        kv_valid_len=cur_len + 1,
+    )
+    out = _mask_pad_heads(out, cfg)
+    return jnp.einsum("bshd,hde->bse", out, params["wo"]), cache_k, cache_v
+
+
+def kv_cache_def(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """ParamDef for one layer's K (or V) cache.
+
+    kv_heads shard on "model" when they divide it; otherwise the sequence dim
+    takes "model" (sequence-parallel cache — the softmax all-reduce this
+    induces is the roofline-visible cost of small-kv GQA at high TP).
+    """
+    hkv, dh = padded_heads(cfg.n_kv_heads), cfg.head_dim
+    return ParamDef(
+        (batch, max_len, hkv, dh),
+        ("batch", "seq_model", None, None) if hkv % _TP else ("batch", None, "kv_heads", None),
+        dtype=dtype,
+        init="zeros",
+    )

@@ -1,0 +1,167 @@
+"""Shared model machinery: ParamDef trees, norms, RoPE, activations.
+
+Every module declares its parameters ONCE as a nested dict of ``ParamDef``
+(shape, dtype, logical axis names). Three consumers derive from that tree:
+
+  * ``init_params``     — materialize real arrays (smoke tests / real training)
+  * ``abstract_params`` — ShapeDtypeStruct stand-ins (multi-pod dry-run;
+                          nothing is allocated)
+  * ``spec_tree``       — PartitionSpec tree for pjit in_shardings, resolved
+                          against whatever mesh axes actually exist
+                          (see sharding.py)
+
+Logical axis vocabulary (resolved by sharding.resolve):
+  "model"-class: heads, kv_heads, ffn, vocab, experts, d_inner
+  "fsdp"-class:  embed  (sharded over ("pod","data") when present)
+  replicated:    None, plus tiny norm scales
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple  # logical axis name (or None) per dim; len == len(shape)
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 1.0  # stddev multiplier for normal init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaf_paths(tree, prefix=()):
+    if isinstance(tree, ParamDef):
+        yield prefix, tree
+        return
+    for k in sorted(tree.keys()):
+        yield from _leaf_paths(tree[k], prefix + (k,))
+
+
+def _map_defs(tree, fn):
+    if isinstance(tree, ParamDef):
+        return fn(tree)
+    return {k: _map_defs(v, fn) for k, v in tree.items()}
+
+
+def init_params(defs, key):
+    """Materialize real parameter arrays (for smoke tests / small training)."""
+    paths = list(_leaf_paths(defs))
+    keys = jax.random.split(key, max(len(paths), 1))
+    out = {}
+    for (path, d), k in zip(paths, keys):
+        if d.init == "zeros":
+            v = jnp.zeros(d.shape, d.dtype)
+        elif d.init == "ones":
+            v = jnp.ones(d.shape, d.dtype)
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+            std = d.scale / np.sqrt(fan_in)
+            v = (jax.random.normal(k, d.shape, jnp.float32) * std).astype(d.dtype)
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = v
+    return out
+
+
+def abstract_params(defs):
+    """ShapeDtypeStruct tree — the dry-run's no-allocation stand-in."""
+    return _map_defs(defs, lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype))
+
+
+def axes_tree(defs):
+    """Tree of logical-axes tuples (same structure as params)."""
+    return _map_defs(defs, lambda d: d.axes)
+
+
+def count_params(defs) -> int:
+    return sum(int(np.prod(d.shape)) for _, d in _leaf_paths(defs))
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-6):
+    """RMSNorm in f32, cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    nrm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (nrm * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU FFN: down( silu(x @ gate) * (x @ up) )."""
+    g = silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def rope_tables(positions, d_head: int, theta: float = 10000.0):
+    """(sin, cos) tables for rotary embeddings; positions: (..., S) int32."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: (..., S, H, D). sin/cos: (..., S, half) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # sin/cos arrive as (..., S, half): insert a head axis before last.
+    s = jnp.expand_dims(sin, axis=-2)
+    c = jnp.expand_dims(cos, axis=-2)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def softmax_xent(logits, targets, mask=None):
+    """Token-mean cross entropy in f32; targets: int32, mask optional bool."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def softmax_xent_sharded(logits, targets, mesh, mask=None):
+    """Vocab-shard-friendly xent (§Perf hillclimb).
+
+    take_along_axis over a model-sharded vocab axis makes GSPMD all-gather
+    the full (B,S,V) f32 logits per device (68 GiB at vocab=262k) — the
+    dominant memory/collective cost of the big-vocab train cells. This
+    variant constrains logits to stay vocab-sharded and extracts the gold
+    logit with a masked sum (shard-local compare + tiny all-reduce).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from . import sharding as msharding
+
+    logits = logits.astype(jnp.float32)
+    if mesh is not None:
+        spec = msharding.resolve(("batch", None, "vocab"), mesh, logits.shape)
+        logits = jax.lax.with_sharding_constraint(logits, NamedSharding(mesh, spec))
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == targets[..., None], logits, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,115 @@
+"""ModelConfig: one dataclass describes every assigned architecture.
+
+A model is a stack of layers built from a repeating ``pattern`` of layer
+specs (mixer kind + ffn kind + attention flags). The stack is scanned over
+pattern repeats ("superblocks") so the HLO stays compact at 398B/1T scale;
+a remainder (n_layers % len(pattern)) is applied unscanned.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional, Tuple
+
+Mixer = Literal["attn", "mamba", "none"]
+Ffn = Literal["dense", "moe", "none"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: Mixer = "attn"
+    ffn: Ffn = "dense"
+    window: Optional[int] = None  # sliding-window size; None = full attention
+    cross_attn: bool = False  # decoder cross-attention (enc-dec models)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    dense_residual: bool = False  # arctic: dense FFN in parallel with MoE
+    shared_expert: bool = False  # kimi-style always-on shared expert
+    d_ff: int = 0  # expert hidden size (0 -> same as cfg.d_ff)
+    # Dispatch implementation (§Perf hillclimb knob):
+    #   "scatter"      — GSPMD global scatter (baseline; partitioner falls
+    #                    back to replicate+all-reduce of the expert buffer)
+    #   "shard_map_a2a"— explicit two-hop all-to-all expert parallelism
+    impl: str = "scatter"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    chunk: int = 256  # SSD intra-chunk length L (§Perf: memory ∝ S·L·H)
+    conv_width: int = 4
+    # dtype of the (B,nc,L,L,H) intra-chunk tensors (§Perf hillclimb knob;
+    # the cumsum/exp stay f32 for stability, only the big tensors drop).
+    intra_dtype: str = "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+    d_head: int = 0  # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # enc-dec (whisper): encoder layer count; 0 = decoder-only.
+    n_enc_layers: int = 0
+    enc_seq: int = 0  # fixed encoder memory length (1500 whisper frames)
+    # modality frontend stub: extra embeddings prepended to the token stream.
+    frontend: Literal["none", "patches", "frames"] = "none"
+    frontend_len: int = 0  # patches per example (llava anyres: 576 base)
+    max_seq: int = 8192  # trained context (informational)
+    act_dtype: str = "bfloat16"  # activation dtype ("float32" for debug/smoke)
+    # True when every attention layer is windowed/ssm (sub-quadratic decode
+    # state) — gates the long_500k shape (DESIGN.md shape skips).
+    sub_quadratic: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Megatron-style vocab padding to a TP-and-lane-friendly multiple
+        (2048 = 16-way model axis x 128 lanes). A non-divisible vocab would
+        otherwise fall back to a REPLICATED embedding/logits — for
+        mamba2 (50280) that was 12 GiB of f32 logits per device (§Perf log).
+        Padded columns are masked to -inf in the loss and in decode."""
+        return -(-self.vocab // 2048) * 2048
+
+    @property
+    def n_superblocks(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def n_remainder(self) -> int:
+        return self.n_layers % len(self.pattern)
+
+    def layer_specs(self):
+        """Per-layer specs for the full stack (pattern repeated + remainder)."""
+        reps = self.pattern * self.n_superblocks + self.pattern[: self.n_remainder]
+        return reps
+
+    def param_count(self) -> int:
+        from . import transformer
+
+        return transformer.count(self)
+
+    def active_param_count(self) -> int:
+        from . import transformer
+
+        return transformer.count(self, active_only=True)

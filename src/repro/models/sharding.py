@@ -1,0 +1,101 @@
+"""Logical-axis -> mesh-axis resolution (GSPMD rules for 2- and 3-axis meshes).
+
+The production meshes are ("data","model") = (16,16) and
+("pod","data","model") = (2,16,16). Rules:
+
+  * tensor-parallel class (heads, ffn, vocab, experts, d_inner, kv_heads):
+      -> "model"
+  * fsdp class (embed on weight tensors; batch on activations):
+      -> ("pod","data") — whichever of the two exist in the mesh. This is the
+      ZeRO-3 axis: GSPMD all-gathers weights at use and reduce-scatters grads.
+  * seq class: sequence-parallel KV/state sharding for long-context decode
+      -> "model" ONLY when the tensor has no other model-sharded dim.
+  * None: replicated.
+
+``kv_heads`` resolves to "model" only when the head count divides the axis
+size — otherwise the dimension is left unsharded and the sequence dimension
+picks up the "model" axis instead (see attention.kv_cache_defs).
+"""
+
+from __future__ import annotations
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_FSDP_CLASS = ("pod", "data")
+_MODEL_CLASS = {"heads", "kv_heads", "ffn", "vocab", "experts", "d_inner", "moe_ffn"}
+
+
+def resolve(axes: tuple, mesh: Mesh, dim_sizes: tuple | None = None) -> P:
+    """Logical axes tuple -> PartitionSpec valid on this mesh.
+
+    dim_sizes (optional) enables divisibility checks: a logical model-class
+    axis whose dim doesn't divide the mesh axis size falls back to None
+    (GSPMD could pad, but padded sharding of tiny dims wastes memory and
+    produces confusing collectives — explicit is better).
+    """
+    names = set(mesh.axis_names)
+    model_size = mesh.shape.get("model", 1)
+    spec = []
+    for i, ax in enumerate(axes):
+        if ax is None:
+            spec.append(None)
+        elif ax == "fsdp" or ax == "batch" or ax == "embed":
+            present = tuple(a for a in _FSDP_CLASS if a in names)
+            if not present:
+                spec.append(None)
+                continue
+            total = 1
+            for a in present:
+                total *= mesh.shape[a]
+            if dim_sizes is not None and dim_sizes[i] % total != 0:
+                # Try the largest prefix that divides (e.g. "pod" alone).
+                fallback = None
+                for k in range(len(present) - 1, 0, -1):
+                    tt = 1
+                    for a in present[:k]:
+                        tt *= mesh.shape[a]
+                    if dim_sizes[i] % tt == 0:
+                        fallback = present[:k]
+                        break
+                spec.append(fallback)
+            else:
+                spec.append(present)
+        elif ax in _MODEL_CLASS:
+            if "model" not in names:
+                spec.append(None)
+            elif dim_sizes is not None and dim_sizes[i] % model_size != 0:
+                spec.append(None)
+            else:
+                spec.append("model")
+        elif ax == "seq_model":
+            spec.append("model" if "model" in names else None)
+        else:
+            raise ValueError(f"unknown logical axis {ax!r}")
+    return P(*spec)
+
+
+def resolve_with_sizes(axes: tuple, mesh: Mesh, shape: tuple) -> P:
+    return resolve(axes, mesh, dim_sizes=shape)
+
+
+def spec_tree(defs, mesh: Mesh):
+    """ParamDef tree -> PartitionSpec tree (divisibility-checked)."""
+    from .common import ParamDef, _map_defs
+
+    return _map_defs(defs, lambda d: resolve(d.axes, mesh, d.shape))
+
+
+def sharding_tree(defs, mesh: Mesh):
+    """ParamDef tree -> NamedSharding tree."""
+    from .common import _map_defs
+
+    return _map_defs(defs, lambda d: NamedSharding(mesh, resolve(d.axes, mesh, d.shape)))
+
+
+def constrain(x, mesh: Mesh, *axes):
+    """with_sharding_constraint using logical axes; no-op off-mesh."""
+    import jax
+
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve(tuple(axes), mesh, x.shape))
+    )

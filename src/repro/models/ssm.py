@@ -1,0 +1,194 @@
+"""Mamba2 SSD (state-space duality) mixer layer.
+
+Chunked SSD algorithm (Dao & Gu 2024, §6): split the sequence into chunks of
+length L; within a chunk the recurrence is materialized as a (masked)
+attention-like quadratic form; across chunks a tiny (H, N, P) state is
+carried by a scan. Total work O(S·L·H·P + S·H·N·P) — linear in S, matmul-
+heavy inside chunks (MXU-friendly: the TPU adaptation is exactly "pick L so
+the intra-chunk einsums are 128-aligned", DESIGN.md §4).
+
+Decode keeps an O(1)-per-token state: h <- h * exp(dt·A) + dt · B ⊗ x. This
+is why mamba2 / jamba run the long_500k shape while pure-attention archs
+skip it.
+
+The depthwise causal conv (width 4) is implemented with shifted adds; its
+decode state is the last (width-1) inputs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import ParamDef
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.d_state  # x, B, C get the conv (G=1 groups)
+    return d_inner, n_heads, conv_ch
+
+
+def defs(cfg):
+    s = cfg.ssm
+    e = cfg.d_model
+    d_inner, h, conv_ch = dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * s.d_state + h  # z, x, B, C, dt
+    return {
+        "in_proj": ParamDef((e, d_in_proj), ("embed", "d_inner")),
+        "conv_w": ParamDef((s.conv_width, conv_ch), (None, "d_inner"), scale=0.5),
+        "a_log": ParamDef((h,), (None,), init="zeros"),
+        "d_skip": ParamDef((h,), (None,), init="ones"),
+        "dt_bias": ParamDef((h,), (None,), init="zeros"),
+        "norm": ParamDef((d_inner,), (None,), init="zeros"),
+        "out_proj": ParamDef((d_inner, e), ("d_inner", "embed")),
+    }
+
+
+def _split_proj(cfg, proj):
+    s = cfg.ssm
+    d_inner, h, _ = dims(cfg)
+    z, xs, b, c, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + s.d_state, 2 * d_inner + 2 * s.d_state], axis=-1
+    )
+    return z, xs, b, c, dt
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv via shifted adds. x: (B,S,C), w: (K,C)."""
+    k = w.shape[0]
+    out = x * w[k - 1]
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[k - 1 - i]
+    return out
+
+
+def apply(params, x, cfg, *, return_state=False):
+    """Full-sequence SSD. x: (B, S, E) -> (B, S, E).
+
+    If return_state, also returns (h_final, conv_tail) for decode handoff.
+    """
+    s = cfg.ssm
+    d_inner, h, conv_ch = dims(cfg)
+    p_dim = s.head_dim
+    n = s.d_state
+    b_, seq, _ = x.shape
+    l = min(s.chunk, seq)
+    # Pad sequence to a chunk multiple (padded tail has dt=0 -> no state drift).
+    pad = (-seq) % l
+    nc = (seq + pad) // l
+
+    proj = jnp.einsum("bse,ed->bsd", x, params["in_proj"])
+    z, xs, bmat, cmat, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_out = common.silu(_causal_conv(conv_in, params["conv_w"]))
+    xs, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (H,) negative
+
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    xh = xs.reshape(b_, nc, l, h, p_dim).astype(jnp.float32)
+    bh = bmat.reshape(b_, nc, l, n).astype(jnp.float32)  # G=1 group shared
+    ch = cmat.reshape(b_, nc, l, n).astype(jnp.float32)
+    dth = dt.reshape(b_, nc, l, h)
+
+    da = dth * a  # (B,nc,L,H) log-decay per step
+    cum = jnp.cumsum(da, axis=2)  # inclusive (f32 for stability)
+    idt = jnp.dtype(s.intra_dtype)  # §Perf knob: big L×L tensors in bf16
+    # intra-chunk: scores[i,j] = C_i·B_j * exp(cum_i - cum_j) * dt_j,  j <= i
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,L,L,H)
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    decay = jnp.where(tri[None, None, :, :, None], decay, 0.0).astype(idt)
+    cb = jnp.einsum("bcin,bcjn->bcij", ch.astype(idt), bh.astype(idt))  # (B,nc,L,L)
+    w_ij = cb[..., None] * decay * dth[:, :, None, :, :].astype(idt)  # (B,nc,L,L,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w_ij, xh.astype(idt)).astype(jnp.float32)
+
+    # chunk states: h_c = sum_j exp(cum_last - cum_j) * dt_j * B_j ⊗ x_j
+    last = cum[:, :, -1:, :]  # (B,nc,1,H)
+    decay_to_end = jnp.exp(last - cum)  # (B,nc,L,H)
+    hc = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", decay_to_end * dth, bh, xh)
+
+    # inter-chunk carry
+    chunk_decay = jnp.exp(last[:, :, 0, :])  # (B,nc,H)
+
+    def carry_step(hprev, inp):
+        hc_i, cd_i = inp
+        hnew = hprev * cd_i[..., None, None] + hc_i
+        return hnew, hprev
+
+    h0 = jnp.zeros((b_, h, n, p_dim), jnp.float32)
+    hfin, hprevs = jax.lax.scan(
+        carry_step,
+        h0,
+        (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    hprevs = jnp.moveaxis(hprevs, 0, 1)  # (B,nc,H,N,P) state entering chunk
+    in_decay = jnp.exp(cum)  # (B,nc,L,H): decay from chunk start to i
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp", ch, hprevs, in_decay)
+
+    y = (y_intra + y_inter).reshape(b_, nc * l, h, p_dim)[:, :seq]
+    y = y + xh.reshape(b_, nc * l, h, p_dim)[:, :seq] * params["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b_, seq, d_inner).astype(x.dtype)
+    y = y * common.silu(z)
+    y = common.rms_norm(y, params["norm"])
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+    if return_state:
+        k = cfg.ssm.conv_width - 1
+        conv_tail = conv_in[:, -k:] if seq >= k else jnp.pad(conv_in, ((0, 0), (k - seq, 0), (0, 0)))
+        return out, (hfin, conv_tail)
+    return out
+
+
+def decode(params, x, cfg, *, h_state, conv_tail):
+    """One-token step. x: (B, 1, E); h_state: (B,H,N,P); conv_tail: (B,K-1,C).
+
+    Returns (out (B,1,E), h_state, conv_tail).
+    """
+    s = cfg.ssm
+    d_inner, h, conv_ch = dims(cfg)
+    n, p_dim = s.d_state, s.head_dim
+
+    proj = jnp.einsum("bse,ed->bsd", x, params["in_proj"])
+    z, xs, bmat, cmat, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)  # (B,1,C)
+    window = jnp.concatenate([conv_tail, conv_in], axis=1)  # (B,K,C)
+    conv_out = common.silu(jnp.einsum("bkc,kc->bc", window, params["conv_w"]))[:, None]
+    xs, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)  # (B,H)
+
+    xh = xs[:, 0].reshape(-1, h, p_dim).astype(jnp.float32)
+    bh = bmat[:, 0].astype(jnp.float32)  # (B,N)
+    chh = cmat[:, 0].astype(jnp.float32)
+
+    h_state = h_state * da[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, bh, xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", chh, h_state) + xh * params["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(-1, 1, d_inner).astype(x.dtype)
+    y = y * common.silu(z)
+    y = common.rms_norm(y, params["norm"])
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+    return out, h_state, window[:, 1:]
+
+
+def state_defs(cfg, batch: int):
+    """Decode-state ParamDefs (h and conv tail) for one SSD layer."""
+    s = cfg.ssm
+    d_inner, h, conv_ch = dims(cfg)
+    return {
+        "h": ParamDef((batch, h, s.d_state, s.head_dim), ("batch", "d_inner", None, None), dtype=jnp.float32, init="zeros"),
+        "conv": ParamDef((batch, s.conv_width - 1, conv_ch), ("batch", None, "d_inner"), dtype=jnp.bfloat16, init="zeros"),
+    }

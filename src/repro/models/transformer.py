@@ -1,0 +1,425 @@
+"""Unified decoder/enc-dec LM assembly for all 10 assigned architectures.
+
+The layer stack is organized as ``n_superblocks`` repeats of ``cfg.pattern``
+(scanned; params stacked on a leading axis) plus an unscanned remainder.
+Scanning keeps the HLO size O(pattern) instead of O(n_layers) — at jamba-398B
+/ kimi-1T scale this is what makes the 512-device dry-run compile tractable.
+
+Three entry points:
+  forward      — training/teacher-forcing logits (+ MoE aux losses)
+  prefill      — forward that also returns decode caches (KV / SSD states)
+  decode_step  — one-token step over preallocated caches
+
+Caches are pytrees shaped like the layer stack: {"sb": {pos: ...}, "rem":
+{pos: ...}} with superblock-stacked leading dims so decode scans over them in
+lockstep with the params.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention, common, moe, sharding, ssm
+from .common import ParamDef
+from .config import LayerSpec, ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+
+
+def _dense_ffn_defs(cfg):
+    e, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamDef((e, f), ("embed", "ffn")),
+        "w_up": ParamDef((e, f), ("embed", "ffn")),
+        "w_down": ParamDef((f, e), ("ffn", "embed")),
+    }
+
+
+def _layer_defs(cfg, spec: LayerSpec):
+    d: dict = {"mixer_norm": ParamDef((cfg.d_model,), (None,), init="zeros")}
+    if spec.mixer == "attn":
+        d["mixer"] = attention.defs(cfg)
+    elif spec.mixer == "mamba":
+        d["mixer"] = ssm.defs(cfg)
+    if spec.cross_attn:
+        d["cross"] = attention.defs(cfg, cross=True)
+        d["cross_norm"] = ParamDef((cfg.d_model,), (None,), init="zeros")
+    if spec.ffn == "dense":
+        d["ffn"] = _dense_ffn_defs(cfg)
+        d["ffn_norm"] = ParamDef((cfg.d_model,), (None,), init="zeros")
+    elif spec.ffn == "moe":
+        d["ffn"] = moe.defs(cfg)
+        d["ffn_norm"] = ParamDef((cfg.d_model,), (None,), init="zeros")
+    return d
+
+
+def _stack(defs_tree, n: int):
+    return common._map_defs(
+        defs_tree,
+        lambda d: ParamDef((n,) + d.shape, (None,) + d.axes, d.dtype, d.init, d.scale),
+    )
+
+
+def model_defs(cfg: ModelConfig):
+    e, v = cfg.d_model, cfg.vocab_padded
+    d: dict = {"embed": ParamDef((v, e), ("vocab", "embed"), scale=1.0)}
+    if cfg.frontend != "none":
+        d["front_proj"] = ParamDef((e, e), ("embed", None))
+    if cfg.n_enc_layers:
+        enc_spec = LayerSpec(mixer="attn", ffn="dense")
+        d["enc"] = {
+            "blocks": _stack(_layer_defs(cfg, enc_spec), cfg.n_enc_layers),
+            "norm": ParamDef((e,), (None,), init="zeros"),
+        }
+    sb = {str(i): _layer_defs(cfg, s) for i, s in enumerate(cfg.pattern)}
+    d["sb"] = _stack(sb, cfg.n_superblocks)
+    if cfg.n_remainder:
+        d["rem"] = {
+            str(i): _layer_defs(cfg, cfg.pattern[i]) for i in range(cfg.n_remainder)
+        }
+    d["final_norm"] = ParamDef((e,), (None,), init="zeros")
+    if not cfg.tie_embeddings:
+        d["lm_head"] = ParamDef((e, v), ("embed", "vocab"))
+    return d
+
+
+def count(cfg: ModelConfig, active_only: bool = False) -> int:
+    total = common.count_params(model_defs(cfg))
+    if active_only and cfg.moe is not None:
+        m = cfg.moe
+        f = m.d_ff or cfg.d_ff
+        expert_params_per_layer = 3 * cfg.d_model * f * m.num_experts
+        n_moe_layers = sum(1 for s in cfg.layer_specs() if s.ffn == "moe")
+        inactive = n_moe_layers * expert_params_per_layer * (1 - m.top_k / m.num_experts)
+        total -= int(inactive)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _ffn_apply(p, x, cfg, spec, mesh):
+    if spec.ffn == "none":
+        return x, {}
+    h = common.rms_norm(x, p["ffn_norm"])
+    if spec.ffn == "dense":
+        f = p["ffn"]
+        y = common.swiglu(h, f["w_gate"], f["w_up"], f["w_down"])
+        aux = {}
+    else:
+        b, s, e = h.shape
+        y, aux = moe.apply(p["ffn"], h.reshape(b * s, e), cfg, mesh)
+        y = y.reshape(b, s, e)
+    return x + y, aux
+
+
+def mask_vocab(logits, cfg: ModelConfig):
+    """-inf the padded vocab columns (softmax/argmax never pick them)."""
+    if cfg.vocab_padded == cfg.vocab:
+        return logits
+    vi = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(vi < cfg.vocab, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+def _zero_aux(cfg):
+    """Aux-loss accumulator structure (must be static across scan steps)."""
+    if any(s.ffn == "moe" for s in cfg.pattern):
+        return {
+            "load_balance": jnp.float32(0.0),
+            "router_z": jnp.float32(0.0),
+            "drop_fraction": jnp.float32(0.0),
+        }
+    return {}
+
+
+def _acc_aux(acc, aux):
+    if not acc:
+        return acc
+    if not aux:
+        return acc
+    return {k: acc[k] + aux[k] for k in acc}
+
+
+def block_apply(p, x, cfg, spec, mesh, *, positions, memory=None, causal=True, collect=False):
+    """One layer. Returns (x, cache_entry, aux). Dtype-stable in cfg.act_dtype."""
+    in_dtype = x.dtype
+    h = common.rms_norm(x, p["mixer_norm"])
+    cache = {}
+    if spec.mixer == "attn":
+        y, (k, v) = attention.apply(p["mixer"], h, cfg, spec, positions=positions, causal=causal)
+        x = x + y
+        if collect:
+            cache = {"k": k, "v": v}
+    elif spec.mixer == "mamba":
+        if collect:
+            y, (hst, conv) = ssm.apply(p["mixer"], h, cfg, return_state=True)
+            cache = {"h": hst, "conv": conv}
+        else:
+            y = ssm.apply(p["mixer"], h, cfg)
+        x = x + y
+    if spec.cross_attn and memory is not None:
+        hc = common.rms_norm(x, p["cross_norm"])
+        y, (ck, cv) = attention.apply(p["cross"], hc, cfg, spec, positions=positions, cross_memory=memory)
+        x = x + y
+        if collect:
+            cache.update({"ck": ck, "cv": cv})
+    x, aux = _ffn_apply(p, x, cfg, spec, mesh)
+    return x.astype(in_dtype), cache, aux
+
+
+def _encoder_forward(params, frames, cfg, mesh):
+    enc_spec = LayerSpec(mixer="attn", ffn="dense")
+    positions = jnp.arange(frames.shape[1])
+
+    def body(x, p):
+        x, _, _ = block_apply(p, x, cfg, enc_spec, mesh, positions=positions, causal=False)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), frames, params["blocks"])
+    return common.rms_norm(x, params["norm"])
+
+
+# ---------------------------------------------------------------------------
+# Forward / prefill
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, tokens, cfg, mesh, extra_embeds=None):
+    """Token embedding (+ modality-frontend embeddings prepended)."""
+    adt = jnp.dtype(cfg.act_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(adt)
+    if extra_embeds is not None and cfg.frontend != "none" and cfg.n_enc_layers == 0:
+        fe = jnp.einsum("bpe,ef->bpf", extra_embeds.astype(adt), params["front_proj"]).astype(adt)
+        x = jnp.concatenate([fe, x], axis=1)
+    if mesh is not None:
+        x = sharding.constrain(x, mesh, "batch", None, None)
+    return x
+
+
+def _remat_wrap(body, remat):
+    """remat: True/"full" -> save nothing; "dots" -> save matmul outputs
+    (recompute elementwise only); False/"none" -> no remat."""
+    if remat is True or remat == "full":
+        return jax.checkpoint(body)
+    if remat == "dots":
+        return jax.checkpoint(body, policy=jax.checkpoint_policies.dots_saveable)
+    return body
+
+
+def forward(params, tokens, cfg: ModelConfig, mesh=None, *, extra_embeds=None, collect=False, remat=True):
+    """Teacher-forcing forward. tokens: (B, S_text).
+
+    extra_embeds: (B, P, E) modality-stub embeddings (llava patches) or
+    (B, enc_seq, E) whisper frames (routed to the encoder).
+    Returns (logits, caches_or_None, aux).
+    """
+    memory = None
+    if cfg.n_enc_layers:
+        memory = _encoder_forward(params["enc"], extra_embeds.astype(jnp.dtype(cfg.act_dtype)), cfg, mesh)
+        x = embed_inputs(params, tokens, cfg, mesh)
+    else:
+        x = embed_inputs(params, tokens, cfg, mesh, extra_embeds)
+    seq = x.shape[1]
+    positions = jnp.arange(seq)
+
+    def sb_body(carry, p_sb):
+        x, aux_acc = carry
+        caches = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, c, aux = block_apply(
+                p_sb[str(i)], x, cfg, spec, mesh, positions=positions, memory=memory, collect=collect
+            )
+            caches[str(i)] = c
+            aux_acc = _acc_aux(aux_acc, aux)
+        return (x, aux_acc), caches
+
+    body = _remat_wrap(sb_body, remat)
+    (x, aux), sb_caches = jax.lax.scan(body, (x, _zero_aux(cfg)), params["sb"])
+
+    rem_caches = {}
+    if cfg.n_remainder:
+        for i in range(cfg.n_remainder):
+            spec = cfg.pattern[i]
+            x, c, aux_i = block_apply(
+                params["rem"][str(i)], x, cfg, spec, mesh, positions=positions, memory=memory, collect=collect
+            )
+            rem_caches[str(i)] = c
+            aux = _acc_aux(aux, aux_i)
+
+    x = common.rms_norm(x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bse,ve->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bse,ev->bsv", x, params["lm_head"])
+    logits = mask_vocab(logits, cfg)
+    caches = {"sb": sb_caches, "rem": rem_caches, "memory": memory} if collect else None
+    return logits, caches, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, mesh=None, *, aux_coefs=(0.01, 1e-4), remat=True,
+            sharded_xent=False):
+    """Token-mean xent + MoE aux. batch: {tokens, targets, [extra_embeds, loss_mask]}."""
+    logits, _, aux = forward(
+        params, batch["tokens"], cfg, mesh, extra_embeds=batch.get("extra_embeds"), remat=remat
+    )
+    mask = batch.get("loss_mask")
+    targets = batch["targets"]
+    if logits.shape[1] != targets.shape[1]:  # frontend prepended P positions
+        p = logits.shape[1] - targets.shape[1]
+        logits = logits[:, p:]
+    if sharded_xent:
+        loss = common.softmax_xent_sharded(logits, targets, mesh, mask)
+    else:
+        loss = common.softmax_xent(logits, targets, mask)
+    metrics = {"xent": loss}
+    if aux:
+        lb = aux["load_balance"] / cfg.n_superblocks if cfg.n_superblocks else aux["load_balance"]
+        zl = aux["router_z"] / cfg.n_superblocks if cfg.n_superblocks else aux["router_z"]
+        loss = loss + aux_coefs[0] * lb + aux_coefs[1] * zl
+        metrics.update({"load_balance": lb, "router_z": zl, "drop_fraction": aux["drop_fraction"] / max(cfg.n_superblocks, 1)})
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache defs, prefill, decode
+# ---------------------------------------------------------------------------
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int):
+    """ParamDef tree of decode caches matching the layer stack."""
+
+    def one_layer(spec: LayerSpec):
+        d = {}
+        if spec.mixer == "attn":
+            kv = attention.kv_cache_def(cfg, batch, max_len)
+            d.update({"k": kv, "v": kv})
+        elif spec.mixer == "mamba":
+            d.update(ssm.state_defs(cfg, batch))
+        if spec.cross_attn:
+            ck = ParamDef(
+                (batch, cfg.enc_seq, attention.padded_heads(cfg.n_kv_heads), cfg.head_dim),
+                ("batch", None, None, None),
+                dtype=jnp.bfloat16,
+                init="zeros",
+            )
+            d.update({"ck": ck, "cv": ck})
+        return d
+
+    sb = {str(i): one_layer(s) for i, s in enumerate(cfg.pattern)}
+    out = {"sb": _stack(sb, cfg.n_superblocks)}
+    if cfg.n_remainder:
+        out["rem"] = {str(i): one_layer(cfg.pattern[i]) for i in range(cfg.n_remainder)}
+    if cfg.n_enc_layers:
+        out["memory"] = ParamDef(
+            (batch, cfg.enc_seq, cfg.d_model), ("batch", None, None), dtype=jnp.bfloat16, init="zeros"
+        )
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct tree of the decode cache (dry-run stand-in)."""
+    return common.abstract_params(cache_defs(cfg, batch, max_len))
+
+
+def _pad_cache_entry(x, max_len):
+    """Pad collected K/V (..., S, Hkv, Dh) to the preallocated (..., T, Hkv, Dh).
+
+    The seq axis is ndim-3 (superblock-stacked entries carry a leading NSB
+    dim, remainder entries don't — counting from the right is layout-proof).
+    """
+    ax = x.ndim - 3
+    if x.shape[ax] == max_len:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[ax] = (0, max_len - x.shape[ax])
+    return jnp.pad(x, pads)
+
+
+def prefill(params, tokens, cfg: ModelConfig, mesh=None, *, max_len: int, extra_embeds=None):
+    """Run the prompt, return (last_logits, caches) with K/V padded to max_len."""
+    logits, caches, _ = forward(
+        params, tokens, cfg, mesh, extra_embeds=extra_embeds, collect=True, remat=False
+    )
+
+    def fix(tree):
+        out = {}
+        for i, entry in tree.items():
+            e = dict(entry)
+            for key in ("k", "v"):
+                if key in e:
+                    e[key] = _pad_cache_entry(e[key], max_len)
+            out[i] = e
+        return out
+
+    # Structure must match cache_defs exactly (pjit out_shardings compare
+    # pytree structure): rem/memory keys exist only when the config has them.
+    out = {"sb": fix(caches["sb"])}
+    if cfg.n_remainder:
+        out["rem"] = fix(caches["rem"])
+    if cfg.n_enc_layers:
+        out["memory"] = caches["memory"]
+    return logits[:, -1, : cfg.vocab], out
+
+
+def decode_step(params, cache, cur_len, tokens, cfg: ModelConfig, mesh=None):
+    """One decode step. tokens: (B, 1) int32; cur_len: scalar int32 (tokens
+    already in the cache). Returns (logits (B, V), new_cache)."""
+    x = embed_inputs(params, tokens, cfg, mesh)
+    memory = cache.get("memory")
+
+    def layer_decode(p, c, spec, x):
+        new_c = dict(c)
+        h = common.rms_norm(x, p["mixer_norm"])
+        if spec.mixer == "attn":
+            y, nk, nv = attention.decode(
+                p["mixer"], h, cfg, spec, cache_k=c["k"], cache_v=c["v"], cur_len=cur_len
+            )
+            x = x + y
+            new_c.update({"k": nk, "v": nv})
+        elif spec.mixer == "mamba":
+            y, hst, conv = ssm.decode(p["mixer"], h, cfg, h_state=c["h"], conv_tail=c["conv"])
+            x = x + y
+            new_c.update({"h": hst, "conv": conv})
+        if spec.cross_attn and memory is not None:
+            hc = common.rms_norm(x, p["cross_norm"])
+            y, _, _ = attention.decode(
+                p["cross"], hc, cfg, spec, cache_k=c["ck"], cache_v=c["cv"], cur_len=cur_len, cross_memory=memory
+            )
+            x = x + y
+        x, _ = _ffn_apply(p, x, cfg, spec, mesh)
+        return x.astype(jnp.dtype(cfg.act_dtype)), new_c
+
+    def sb_body(x, inp):
+        p_sb, c_sb = inp
+        new_c = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, new_c[str(i)] = layer_decode(p_sb[str(i)], c_sb[str(i)], spec, x)
+        return x, new_c
+
+    x, new_sb = jax.lax.scan(sb_body, x, (params["sb"], cache["sb"]))
+    new_cache = dict(cache)
+    new_cache["sb"] = new_sb
+    if cfg.n_remainder:
+        new_rem = {}
+        for i in range(cfg.n_remainder):
+            x, new_rem[str(i)] = layer_decode(
+                params["rem"][str(i)], cache["rem"][str(i)], cfg.pattern[i], x
+            )
+        new_cache["rem"] = new_rem
+
+    x = common.rms_norm(x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bse,ve->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bse,ev->bsv", x, params["lm_head"])
+    return logits[:, 0, : cfg.vocab], new_cache

@@ -1,0 +1,5 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g)."""
+
+from . import analysis, hw
+
+__all__ = ["analysis", "hw"]

@@ -1,0 +1,104 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs_global    / (chips * PEAK_FLOPS_BF16)
+    memory     = HLO_bytes_global    / (chips * HBM_BW)
+    collective = collective_bytes_gl / (chips * ICI_LINK_BW)
+
+``compiled.cost_analysis()`` reports the PER-DEVICE partitioned module
+(verified empirically: flops == analytic_global / n_devices), so globals are
+per_device * chips and the formulas above reduce to per_device / peak —
+both views are recorded in the cell JSON.
+
+collective_bytes comes from parsing ``compiled.as_text()``: the sum of
+result-shape bytes of every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute op (async '-start' variants counted once,
+'-done' skipped). Shapes in the partitioned HLO are per-device, so the sum
+is per-device wire bytes — matching the formula's per-chip-link denominator.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from . import hw
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}\s/]*?\)?)\s*"
+    r"(all-reduce-start|all-gather-start|reduce-scatter-start|all-to-all-start|"
+    r"collective-permute-start|all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)\("
+)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device wire bytes by collective kind, from partitioned HLO text."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_text, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        out[op] = out.get(op, 0) + _shape_bytes(shape_text)
+    return out
+
+
+def roofline_terms(
+    per_device_flops: float,
+    per_device_bytes: float,
+    per_device_coll_bytes: float,
+    chips: int,
+):
+    """The three time terms (seconds) + bottleneck label.
+
+    Globals = per_device * chips; the chips in numerator and denominator
+    cancel, so each term is just the per-device quantity over per-chip
+    bandwidth — reported this way to keep the arithmetic auditable.
+    """
+    compute = per_device_flops / hw.PEAK_FLOPS_BF16
+    memory = per_device_bytes / hw.HBM_BW
+    collective = per_device_coll_bytes / hw.ICI_LINK_BW
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    bottleneck = max(terms, key=terms.get)
+    return terms, bottleneck.replace("_s", "")
+
+
+def model_flops(cfg, n_tokens: int, kind: str) -> float:
+    """MODEL_FLOPS: 6·N·D (train), 2·N·D (fwd-only), N = active params."""
+    from repro.models import transformer
+
+    n_active = transformer.count(cfg, active_only=True)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * n_tokens
+
+
+def summarize_cell(record: dict) -> str:
+    """One roofline table row from a dry-run cell JSON record."""
+    t = record["roofline"]
+    return (
+        f"{record['arch']:24s} {record['shape']:12s} "
+        f"C={t['compute_s']:9.3e}s M={t['memory_s']:9.3e}s X={t['collective_s']:9.3e}s "
+        f"-> {record['bottleneck']:10s} useful={record.get('useful_flops_ratio', 0):5.2f}"
+    )

@@ -1,0 +1,6 @@
+"""TPU v5e hardware constants (the dry-run's TARGET platform)."""
+
+PEAK_FLOPS_BF16 = 197e12  # per chip, bf16
+HBM_BW = 819e9  # bytes/s per chip
+ICI_LINK_BW = 50e9  # bytes/s per link
+CHIP_HBM_BYTES = 16 * 2**30  # 16 GiB per chip

@@ -1,0 +1,55 @@
+"""§Perf iteration comparator: baseline vs variant dry-run records.
+
+    PYTHONPATH=src python -m repro.roofline.perf_compare kimi-k2-1t-a32b train_4k
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from . import hw
+
+DIR = "experiments/dryrun"
+
+
+def row(rec):
+    t = rec["roofline"]
+    pd = rec["per_device"]
+    tmax = max(t.values())
+    return {
+        "compute_s": t["compute_s"],
+        "memory_s": t["memory_s"],
+        "collective_s": t["collective_s"],
+        "bottleneck": rec["bottleneck"],
+        "dominant_s": tmax,
+        "frac_roofline": t["compute_s"] / tmax if tmax else 0.0,
+        "peak_gib": rec["hbm_fit"]["peak_bytes_est"] / 2**30,
+        "useful": rec["useful_flops_ratio"],
+        "coll_by_op": pd["collective_by_op"],
+    }
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    paths = sorted(glob.glob(os.path.join(DIR, f"{arch}_{shape}_singlepod*.json")))
+    print(f"{'variant':<28} {'compute':>10} {'memory':>10} {'collect':>10} {'domin.':>10} "
+          f"{'frac':>6} {'peak GiB':>9} {'useful':>7}")
+    base = None
+    for p in paths:
+        rec = json.load(open(p))
+        if rec["status"] != "ok":
+            continue
+        tag = os.path.basename(p).split(f"{shape}_singlepod")[-1].replace(".json", "") or "(baseline)"
+        r = row(rec)
+        if base is None and tag == "(baseline)":
+            base = r
+        speedup = f" x{base['dominant_s']/r['dominant_s']:.1f}" if base and tag != "(baseline)" else ""
+        print(f"{tag:<28} {r['compute_s']:>10.2f} {r['memory_s']:>10.2f} {r['collective_s']:>10.2f} "
+              f"{r['dominant_s']:>10.2f} {r['frac_roofline']:>6.3f} {r['peak_gib']:>9.1f} {r['useful']:>7.2f}{speedup}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Sketch-based streaming telemetry for training/serving (DESIGN.md §2)."""
+
+from . import monitor
+
+__all__ = ["monitor"]

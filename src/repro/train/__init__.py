@@ -1,0 +1,14 @@
+"""Training/serving substrate: optimizer, checkpoint, compression, steps."""
+
+from . import checkpoint, compression, elastic, optimizer, serve_step, train_step
+from .optimizer import OptConfig
+
+__all__ = [
+    "OptConfig",
+    "optimizer",
+    "checkpoint",
+    "compression",
+    "elastic",
+    "train_step",
+    "serve_step",
+]

@@ -1,0 +1,52 @@
+"""Elastic scaling: re-shard a train state onto a different mesh.
+
+A node failure that shrinks the fleet (or a capacity grant that grows it)
+changes the mesh shape; parameters, optimizer moments and sketch telemetry
+are all plain pytrees, so elasticity is: rebuild the PartitionSpec tree
+against the NEW mesh (sharding.resolve re-checks divisibility per dim) and
+device_put the checkpointed host arrays onto it. Nothing about the state
+encodes the old mesh.
+
+The data pipeline side: global batch stays fixed; per-host batch = global /
+(new data-parallel size); the token iterator is seeded by (step, shard_id)
+so a resumed run consumes the stream exactly where it left off regardless
+of the host count (data/tokens.py).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.models import common as mcommon, sharding as msharding
+
+
+def reshard_state(host_state, defs_tree, new_mesh: Mesh):
+    """Place a host-memory state pytree onto a new mesh.
+
+    host_state: pytree of np arrays matching defs_tree's structure (params);
+    extra state (optimizer moments etc.) should be resharded with
+    ``reshard_like`` using the param leaf it mirrors.
+    """
+    shardings = msharding.sharding_tree(defs_tree, new_mesh)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), host_state, shardings)
+
+
+def reshard_like(host_tree, spec_tree, new_mesh: Mesh):
+    """Generic: place host arrays with an explicit PartitionSpec tree."""
+    return jax.tree.map(
+        lambda x, sp: jax.device_put(x, NamedSharding(new_mesh, sp)), host_tree, spec_tree
+    )
+
+
+def degrade_plan(n_devices: int, want_model: int = 16):
+    """Pick a (data, model) mesh for whatever device count survives.
+
+    Keeps TP at ``want_model`` while possible (model-parallel degree is a
+    memory requirement, not a throughput choice), shrinking data parallelism
+    first; falls back to smaller TP only below want_model devices.
+    """
+    model = min(want_model, n_devices)
+    while n_devices % model:
+        model //= 2
+    return (n_devices // model, model)

@@ -1,0 +1,165 @@
+"""AdamW in pure JAX, with optional int8 block-quantized moments.
+
+The quantized-moment mode is the framework's thematic echo of the paper: the
+same move QSketch makes on sketch registers (continuous 64-bit state ->
+small integers + a principled de/requantization) applied to optimizer state.
+m/v are stored as int8 with per-256-block f32 scales along the LAST axis, so
+the quantized state inherits the parameter's sharding (block boundaries
+align with shard boundaries whenever last_dim % (tp * 256) == 0, which holds
+for every assigned config; otherwise the tiny scale tensor replicates).
+
+Memory: 2 bytes/param of moments instead of 8 — the difference between
+kimi-1T fitting a 512-chip train dry-run and not (EXPERIMENTS.md §Dry-run
+memory table).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    quantized: bool = False  # int8 m/v
+
+
+def schedule(cfg: OptConfig, step):
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantization (last-axis blocks)
+# ---------------------------------------------------------------------------
+
+
+def _qshape(shape):
+    last = shape[-1] if shape else 1
+    nblk = -(-last // _BLOCK)
+    return shape[:-1] + (nblk,) if shape else (1,)
+
+
+def quantize_blockwise(x):
+    """f32 -> (int8 q, f32 scale) with per-last-axis-block absmax scaling."""
+    shape = x.shape
+    last = shape[-1] if shape else 1
+    nblk = -(-last // _BLOCK)
+    pad = nblk * _BLOCK - last
+    xp = jnp.pad(x.reshape(shape[:-1] + (last,)), [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = xp.reshape(shape[:-1] + (nblk, _BLOCK))
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0  # (..., nblk)
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(shape[:-1] + (nblk * _BLOCK,))[..., :last], scale
+
+
+def dequantize_blockwise(q, scale, shape):
+    last = shape[-1] if shape else 1
+    nblk = scale.shape[-1]
+    pad = nblk * _BLOCK - last
+    qp = jnp.pad(q.astype(jnp.float32), [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+    xb = qp.reshape(shape[:-1] + (nblk, _BLOCK)) * scale[..., None]
+    return xb.reshape(shape[:-1] + (nblk * _BLOCK,))[..., :last]
+
+
+# ---------------------------------------------------------------------------
+# Adam state
+# ---------------------------------------------------------------------------
+
+
+def init(params, cfg: OptConfig):
+    def leaf(p):
+        if cfg.quantized:
+            z = jnp.zeros(p.shape, jnp.int8)
+            s = jnp.zeros(_qshape(p.shape), jnp.float32)
+            return {"m_q": z, "m_s": s, "v_q": z, "v_s": s}
+        return {"m": jnp.zeros(p.shape, jnp.float32), "v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"step": jnp.int32(0), "mu": jax.tree.map(leaf, params)}
+
+
+def spec_tree(param_defs, mesh, cfg: OptConfig):
+    """PartitionSpec tree for the optimizer state (mirrors the param specs;
+    quantized scale tensors reuse the param axes with divisibility fallback)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models import common as mcommon, sharding as msharding
+
+    def leaf(d):
+        pspec = msharding.resolve(d.axes, mesh, d.shape)
+        if cfg.quantized:
+            sspec = msharding.resolve(d.axes, mesh, _qshape(d.shape))
+            return {"m_q": pspec, "m_s": sspec, "v_q": pspec, "v_s": sspec}
+        return {"m": pspec, "v": pspec}
+
+    return {"step": P(), "mu": mcommon._map_defs(param_defs, leaf)}
+
+
+def _global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def apply(params, grads, state, cfg: OptConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def leaf(p, g, mu):
+        g = g.astype(jnp.float32) * clip
+        if cfg.quantized:
+            m = dequantize_blockwise(mu["m_q"], mu["m_s"], p.shape)
+            v = dequantize_blockwise(mu["v_q"], mu["v_s"], p.shape)
+        else:
+            m, v = mu["m"], mu["v"]
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        new_p = (
+            p.astype(jnp.float32) - lr * (upd + cfg.weight_decay * p.astype(jnp.float32))
+        ).astype(p.dtype)
+        if cfg.quantized:
+            mq, ms = quantize_blockwise(m)
+            vq, vs = quantize_blockwise(v)
+            return new_p, {"m_q": mq, "m_s": ms, "v_q": vq, "v_s": vs}
+        return new_p, {"m": m, "v": v}
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    out = [leaf(p, g, mu) for p, g, mu in zip(flat_p, flat_g, flat_mu)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"step": step, "mu": new_mu}, metrics

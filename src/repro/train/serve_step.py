@@ -1,0 +1,43 @@
+"""The jit'd serving steps: batched prefill and single-token decode.
+
+decode applies greedy/temperature sampling and updates the weighted-DAU
+sketch (element = session id, weight = per-session engagement weight — the
+paper's own motivating metric) in the same jit: telemetry costs one
+scatter-max per step and merges across pods by max.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SketchConfig
+from repro.models import transformer
+from repro.sketchstream import monitor
+
+
+def make_prefill(mcfg, mesh=None, *, max_len: int):
+    def prefill_step(params, tokens, extra_embeds=None):
+        last_logits, cache = transformer.prefill(
+            params, tokens, mcfg, mesh, max_len=max_len, extra_embeds=extra_embeds
+        )
+        return last_logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(mcfg, mesh=None, *, sketch_cfg: SketchConfig | None = None, temperature: float = 0.0):
+    def decode_one(params, cache, cur_len, tokens, sk_state=None, session_ids=None, session_weights=None, rng=None):
+        logits, cache = transformer.decode_step(params, cache, cur_len, tokens, mcfg, mesh)
+        if temperature > 0.0 and rng is not None:
+            next_tok = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1)
+        next_tok = next_tok.astype(jnp.int32)[:, None]
+
+        if sketch_cfg is not None and session_ids is not None:
+            sk_state = monitor.update(sketch_cfg, sk_state, session_ids, session_weights)
+
+        return next_tok, cache, sk_state
+
+    return decode_one

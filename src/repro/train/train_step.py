@@ -1,0 +1,88 @@
+"""The jit'd training step: loss -> grads -> (compress) -> AdamW -> telemetry.
+
+``make_train_step`` closes over static config and returns the function the
+launcher jits (and the dry-run lowers). State threading is explicit — every
+piece (params, optimizer moments, compression residuals, sketch telemetry)
+is a pytree in/out, so checkpointing and elastic re-sharding see one uniform
+state object.
+
+Microbatching: grad accumulation via lax.scan over a reshaped batch
+(global_batch = microbatches x micro_size). This is the standard memory/
+throughput knob for the train_4k cells of the big MoE archs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SketchConfig
+from repro.models import transformer
+from repro.sketchstream import monitor
+
+from . import compression, optimizer
+
+
+def make_train_step(
+    mcfg,
+    ocfg: optimizer.OptConfig,
+    mesh=None,
+    *,
+    sketch_cfg: SketchConfig | None = None,
+    compress: bool = False,
+    microbatches: int = 1,
+    remat=True,
+    sharded_xent: bool = False,
+):
+    def _loss(params, mb):
+        return transformer.loss_fn(params, mb, mcfg, mesh, remat=remat, sharded_xent=sharded_xent)
+
+    def train_step(params, opt_state, comp_state, sk_state, batch):
+        if microbatches > 1:
+
+            def reshape_mb(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+            mb_batch = jax.tree.map(reshape_mb, batch)
+
+            def body(acc, mb):
+                gsum, lsum = acc
+                (l, metrics), g = jax.value_and_grad(_loss, has_aux=True)(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), metrics = jax.lax.scan(body, (g0, jnp.float32(0.0)), mb_batch)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(_loss, has_aux=True)(params, batch)
+
+        if compress:
+            grads, comp_state = compression.compress(grads, comp_state)
+
+        params, opt_state, om = optimizer.apply(params, grads, opt_state, ocfg)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = loss
+
+        if sketch_cfg is not None:
+            # Token-coverage telemetry: distinct token ids, weight 1.
+            sk_state = monitor.update(sketch_cfg, sk_state, batch["tokens"].astype(jnp.uint32))
+            metrics["distinct_tokens_est"] = monitor.estimate(sketch_cfg, sk_state)
+
+        return params, opt_state, comp_state, sk_state, metrics
+
+    return train_step
+
+
+def init_states(mcfg, ocfg, params, *, sketch_cfg=None, compress=False):
+    """(opt_state, comp_state, sketch_state) matching make_train_step."""
+    opt_state = optimizer.init(params, ocfg)
+    comp_state = compression.init_error_state(params) if compress else {}
+    sk_state = monitor.init(sketch_cfg) if sketch_cfg is not None else {}
+    return opt_state, comp_state, sk_state

@@ -1,0 +1,109 @@
+"""MLE estimator tests: f32 kernel vs f64 oracle, degeneracy, Thm.-1 ranges."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SketchConfig, estimators, qsketch
+from repro.core.types import QSketchState
+
+
+def _sketch_regs(cfg, n, scale, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, 2**32, n, dtype=np.uint32)
+    w = (rng.uniform(0.5, 1.5, n) * scale).astype(np.float32)
+    st = qsketch.init(cfg)
+    st = qsketch.update(cfg, st, jnp.asarray(ids), jnp.asarray(w))
+    return st, float(w.astype(np.float64).sum())
+
+
+@pytest.mark.parametrize("scale", [1e-33, 1e-20, 1e-6, 1.0, 1e6, 1e20, 1e33])
+def test_extreme_magnitudes(scale):
+    """The rebased f32 Newton must track the f64 oracle across ~70 decades.
+
+    (Without the rebase, f'(C) ~ -m/C^2 under/overflows f32 beyond ~1e15;
+    see DESIGN.md §4.4 and EXPERIMENTS.md §Numerics.)
+    """
+    cfg = SketchConfig(m=512, b=8, seed=7)
+    st, true_c = _sketch_regs(cfg, 2000, scale)
+    est32 = float(qsketch.estimate(cfg, st))
+    est64 = estimators.mle_numpy(cfg, np.asarray(st.regs))
+    assert abs(est32 - est64) / est64 < 1e-4
+    assert abs(est32 - true_c) / true_c < 0.35  # statistical bound, m=512
+
+
+@pytest.mark.parametrize("m", [64, 256, 1024])
+def test_f32_matches_f64(m):
+    cfg = SketchConfig(m=m, b=8, seed=13)
+    st, _ = _sketch_regs(cfg, 5000, 1.0, seed=3)
+    est32 = float(qsketch.estimate(cfg, st))
+    est64 = estimators.mle_numpy(cfg, np.asarray(st.regs))
+    assert abs(est32 - est64) / est64 < 1e-4
+
+
+def test_empty_sketch_estimates_zero():
+    cfg = SketchConfig(m=128, b=8)
+    st = qsketch.init(cfg)
+    assert float(qsketch.estimate(cfg, st)) == 0.0
+
+
+def test_saturated_sketch_flagged():
+    cfg = SketchConfig(m=128, b=8)
+    st = QSketchState(regs=jnp.full((cfg.m,), cfg.r_max, dtype=jnp.int8))
+    chat, _, ok = qsketch.estimate_with_ci(cfg, st)
+    assert not bool(ok)
+    assert float(chat) > 1e30  # falls back to the (huge) seed estimate
+
+
+def test_fisher_stddev_tracks_empirical():
+    """CR bound ~ empirical std over trials (within a loose factor)."""
+    cfg = SketchConfig(m=256, b=8, seed=1)
+    true_c = None
+    ests, stds = [], []
+    for t in range(30):
+        st, true_c = _sketch_regs(SketchConfig(m=256, b=8, seed=100 + t), 3000, 1.0, seed=t)
+        chat, std, _ = qsketch.estimate_with_ci(SketchConfig(m=256, b=8, seed=100 + t), st)
+        ests.append(float(chat))
+        stds.append(float(std))
+    emp_std = np.std(ests)
+    mean_cr = np.mean(stds)
+    assert 0.3 < emp_std / mean_cr < 3.0, (emp_std, mean_cr)
+
+
+def test_histogram_matches_bincount():
+    cfg = SketchConfig(m=512, b=6, seed=2)
+    st, _ = _sketch_regs(cfg, 1000, 1.0, seed=5)
+    h = np.asarray(estimators.histogram(cfg, st.regs))
+    expected = np.bincount(np.asarray(st.regs).astype(np.int64) - cfg.r_min, minlength=cfg.num_bins)
+    np.testing.assert_array_equal(h, expected)
+    assert h.sum() == cfg.m
+
+
+@pytest.mark.parametrize("b", [4, 5, 8])
+def test_register_width_truncation(b):
+    """Thm. 1 / Fig. 5: narrow registers saturate outside their range."""
+    cfg = SketchConfig(m=256, b=b, seed=3)
+    st, true_c = _sketch_regs(cfg, 2000, 1e6)  # C ~ 2e9, log2 ~ 31
+    est = float(qsketch.estimate(cfg, st))
+    rel = abs(est - true_c) / true_c
+    if b == 8:
+        assert rel < 0.35
+    else:
+        # b=4 -> r_max=7, b=5 -> r_max=15: saturated, estimate far off.
+        assert rel > 0.9
+
+
+def test_lm_estimator():
+    cfg = SketchConfig(m=1024, b=8, seed=4)
+    rng = np.random.default_rng(8)
+    n = 4000
+    ids = rng.integers(0, 2**32, n, dtype=np.uint32)
+    w = rng.uniform(0.0, 1.0, n).astype(np.float32) + 1e-4
+    from repro.core import baselines
+
+    st = baselines.init(cfg)
+    st = baselines.lm_update(cfg, st, jnp.asarray(ids), jnp.asarray(w))
+    est = float(baselines.estimate(st))
+    true_c = float(w.astype(np.float64).sum())
+    # Var[Chat/C] = 1/(m-2) -> std ~ 3.1%; allow 5 sigma.
+    assert abs(est - true_c) / true_c < 5 / np.sqrt(cfg.m - 2)

@@ -1,0 +1,75 @@
+"""Statistical + determinism tests for the portable hash layer."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hashing
+
+
+def test_uniform01_range():
+    ids = jnp.arange(100_000, dtype=jnp.uint32)
+    u = np.asarray(hashing.uniform01((ids,), salt=123))
+    assert u.min() > 0.0
+    assert u.max() < 1.0
+
+
+def test_uniform01_moments():
+    ids = jnp.arange(200_000, dtype=jnp.uint32)
+    u = np.asarray(hashing.uniform01((ids,), salt=7), dtype=np.float64)
+    # mean 0.5 +- ~5 sigma/sqrt(n); std of U(0,1) is 0.2887
+    assert abs(u.mean() - 0.5) < 5 * 0.2887 / np.sqrt(len(u))
+    assert abs(u.std() - 0.28867) < 5e-3
+
+
+def test_uniform01_chi_square():
+    """64-bin chi-square uniformity; threshold ~5 sigma for 63 dof."""
+    ids = jnp.arange(256_000, dtype=jnp.uint32)
+    u = np.asarray(hashing.uniform01((ids,), salt=99))
+    counts, _ = np.histogram(u, bins=64, range=(0, 1))
+    expected = len(u) / 64
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    # dof=63: mean 63, std sqrt(126)=11.2; 5 sigma -> 119
+    assert chi2 < 119, chi2
+
+
+def test_salt_independence():
+    ids = jnp.arange(50_000, dtype=jnp.uint32)
+    u1 = np.asarray(hashing.uniform01((ids,), salt=1), dtype=np.float64)
+    u2 = np.asarray(hashing.uniform01((ids,), salt=2), dtype=np.float64)
+    corr = np.corrcoef(u1, u2)[0, 1]
+    assert abs(corr) < 0.02, corr
+
+
+def test_word_sensitivity():
+    """Flipping one bit of any word should decorrelate the output."""
+    ids = jnp.arange(50_000, dtype=jnp.uint32)
+    u1 = np.asarray(hashing.uniform01((ids, jnp.uint32(0)), salt=5), dtype=np.float64)
+    u2 = np.asarray(hashing.uniform01((ids, jnp.uint32(1)), salt=5), dtype=np.float64)
+    assert abs(np.corrcoef(u1, u2)[0, 1]) < 0.02
+
+
+def test_determinism_across_calls():
+    ids = jnp.arange(1000, dtype=jnp.uint32)
+    a = np.asarray(hashing.hash_words((ids,), salt=42))
+    b = np.asarray(hashing.hash_words((ids,), salt=42))
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("m", [3, 64, 100, 256, 1000])
+def test_hash_mod_range_and_balance(m):
+    ids = jnp.arange(64_000, dtype=jnp.uint32)
+    j = np.asarray(hashing.hash_mod((ids,), salt=11, m=m))
+    assert j.min() >= 0 and j.max() < m
+    counts = np.bincount(j, minlength=m)
+    expected = len(ids) / m
+    # Poisson-ish: allow 6 sigma deviation per bin
+    assert (np.abs(counts - expected) < 6 * np.sqrt(expected) + 6).all()
+
+
+def test_neg_log_uniform_is_exponential():
+    ids = jnp.arange(200_000, dtype=jnp.uint32)
+    e = np.asarray(hashing.neg_log_uniform((ids,), salt=3), dtype=np.float64)
+    assert (e > 0).all()
+    assert abs(e.mean() - 1.0) < 0.02  # Exp(1) mean
+    assert abs(e.std() - 1.0) < 0.02  # Exp(1) std

@@ -1,0 +1,102 @@
+"""Hypothesis property tests on the sketch algebra's invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SketchConfig, baselines, qsketch, qsketch_dyn
+
+_CFG = SketchConfig(m=64, b=8, seed=99)
+
+ids_strategy = st.lists(
+    st.integers(min_value=0, max_value=2**32 - 1), min_size=1, max_size=60
+)
+w_strategy = st.floats(
+    min_value=1e-6, max_value=1e6, allow_nan=False, allow_infinity=False
+)
+
+
+def _arrs(ids, ws):
+    n = len(ids)
+    ws = (ws * ((n // len(ws)) + 1))[:n]
+    return (
+        jnp.asarray(np.asarray(ids, dtype=np.uint32)),
+        jnp.asarray(np.asarray(ws, dtype=np.float32)),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(ids=ids_strategy, ws=st.lists(w_strategy, min_size=1, max_size=10))
+def test_merge_commutative_associative_idempotent(ids, ws):
+    i, w = _arrs(ids, ws)
+    half = max(1, len(ids) // 2)
+    a = qsketch.update(_CFG, qsketch.init(_CFG), i[:half], w[:half])
+    b = qsketch.update(_CFG, qsketch.init(_CFG), i[half:], w[half:]) if len(ids) > half else a
+    ab = qsketch.merge(a, b)
+    ba = qsketch.merge(b, a)
+    np.testing.assert_array_equal(np.asarray(ab.regs), np.asarray(ba.regs))
+    # idempotent
+    aa = qsketch.merge(a, a)
+    np.testing.assert_array_equal(np.asarray(aa.regs), np.asarray(a.regs))
+    # associative with a third part
+    c = qsketch.update(_CFG, qsketch.init(_CFG), i, w)
+    l = qsketch.merge(qsketch.merge(a, b), c)
+    r = qsketch.merge(a, qsketch.merge(b, c))
+    np.testing.assert_array_equal(np.asarray(l.regs), np.asarray(r.regs))
+
+
+@settings(max_examples=25, deadline=None)
+@given(ids=ids_strategy, ws=st.lists(w_strategy, min_size=1, max_size=10))
+def test_update_monotone_and_bounded(ids, ws):
+    i, w = _arrs(ids, ws)
+    st0 = qsketch.init(_CFG)
+    st1 = qsketch.update(_CFG, st0, i, w)
+    r0 = np.asarray(st0.regs, np.int32)
+    r1 = np.asarray(st1.regs, np.int32)
+    assert (r1 >= r0).all()
+    assert (r1 >= _CFG.r_min).all() and (r1 <= _CFG.r_max).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(ids=ids_strategy, ws=st.lists(w_strategy, min_size=1, max_size=10))
+def test_estimate_nonnegative_finite(ids, ws):
+    i, w = _arrs(ids, ws)
+    s = qsketch.update(_CFG, qsketch.init(_CFG), i, w)
+    est = float(qsketch.estimate(_CFG, s))
+    assert est >= 0.0
+    assert np.isfinite(est)
+
+
+@settings(max_examples=20, deadline=None)
+@given(ids=ids_strategy, ws=st.lists(w_strategy, min_size=1, max_size=10))
+def test_batch_split_equivalence(ids, ws):
+    i, w = _arrs(ids, ws)
+    whole = qsketch.update(_CFG, qsketch.init(_CFG), i, w)
+    k = max(1, len(ids) // 3)
+    parts = qsketch.init(_CFG)
+    for s0 in range(0, len(ids), k):
+        parts = qsketch.update(_CFG, parts, i[s0 : s0 + k], w[s0 : s0 + k])
+    np.testing.assert_array_equal(np.asarray(whole.regs), np.asarray(parts.regs))
+
+
+@settings(max_examples=20, deadline=None)
+@given(ids=ids_strategy, ws=st.lists(w_strategy, min_size=1, max_size=10))
+def test_dyn_duplicate_stability(ids, ws):
+    i, w = _arrs(ids, ws)
+    d1 = qsketch_dyn.update_scan(_CFG, qsketch_dyn.init(_CFG), i, w)
+    d2 = qsketch_dyn.update_scan(_CFG, d1, i, w)
+    assert float(d1.chat) == float(d2.chat)
+    np.testing.assert_array_equal(np.asarray(d1.regs), np.asarray(d2.regs))
+    # Histogram counts never exceed m and stay non-negative.
+    h = np.asarray(d2.hist)
+    assert (h >= 0).all() and h.sum() <= _CFG.m
+
+
+@settings(max_examples=20, deadline=None)
+@given(ids=ids_strategy, ws=st.lists(w_strategy, min_size=1, max_size=10))
+def test_float_sketch_monotone_decreasing(ids, ws):
+    i, w = _arrs(ids, ws)
+    s0 = baselines.init(_CFG)
+    s1 = baselines.lm_update(_CFG, s0, i, w)
+    assert (np.asarray(s1.regs) <= np.asarray(s0.regs)).all()
+    assert (np.asarray(s1.regs) > 0).all()

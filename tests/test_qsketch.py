@@ -1,0 +1,150 @@
+"""QSketch behaviour: exactness of batching, pruning, merging, duplicates."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SketchConfig, qsketch
+
+
+def _stream(n, seed=0, dist="gamma"):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, 2**32, n, dtype=np.uint32)
+    if dist == "gamma":
+        w = rng.gamma(1.0, 2.0, n).astype(np.float32) + 1e-4
+    elif dist == "uniform":
+        w = rng.uniform(0.0, 1.0, n).astype(np.float32) + 1e-4
+    else:
+        w = np.abs(rng.normal(1.0, 0.1, n)).astype(np.float32) + 1e-4
+    return jnp.asarray(ids), jnp.asarray(w)
+
+
+def test_batch_split_invariance():
+    """Updating in one batch == updating in many batches (max is associative)."""
+    cfg = SketchConfig(m=128, b=8, seed=1)
+    ids, w = _stream(1000)
+    whole = qsketch.update(cfg, qsketch.init(cfg), ids, w)
+    st = qsketch.init(cfg)
+    for i in range(0, 1000, 170):
+        st = qsketch.update(cfg, st, ids[i : i + 170], w[i : i + 170])
+    np.testing.assert_array_equal(np.asarray(whole.regs), np.asarray(st.regs))
+
+
+def test_permutation_invariance():
+    cfg = SketchConfig(m=128, b=8, seed=1)
+    ids, w = _stream(500)
+    perm = np.random.default_rng(1).permutation(500)
+    a = qsketch.update(cfg, qsketch.init(cfg), ids, w)
+    b = qsketch.update(cfg, qsketch.init(cfg), ids[perm], w[perm])
+    np.testing.assert_array_equal(np.asarray(a.regs), np.asarray(b.regs))
+
+
+def test_duplicate_idempotence():
+    """Sketch of a stream with repeats == sketch of the distinct elements."""
+    cfg = SketchConfig(m=128, b=8, seed=2)
+    ids, w = _stream(300)
+    rep_idx = np.random.default_rng(2).integers(0, 300, 900)
+    a = qsketch.update(cfg, qsketch.init(cfg), ids, w)
+    b = qsketch.update(cfg, qsketch.init(cfg), ids[rep_idx], w[rep_idx])
+    b = qsketch.update(cfg, b, ids, w)  # ensure every distinct appears
+    np.testing.assert_array_equal(np.asarray(a.regs), np.asarray(b.regs))
+
+
+def test_registers_monotone():
+    cfg = SketchConfig(m=64, b=8, seed=3)
+    st = qsketch.init(cfg)
+    prev = np.asarray(st.regs, dtype=np.int32)
+    for i in range(5):
+        ids, w = _stream(200, seed=i)
+        st = qsketch.update(cfg, st, ids, w)
+        cur = np.asarray(st.regs, dtype=np.int32)
+        assert (cur >= prev).all()
+        prev = cur
+
+
+def test_merge_is_union():
+    cfg = SketchConfig(m=256, b=8, seed=4)
+    ids1, w1 = _stream(400, seed=10)
+    ids2, w2 = _stream(400, seed=11)
+    a = qsketch.update(cfg, qsketch.init(cfg), ids1, w1)
+    b = qsketch.update(cfg, qsketch.init(cfg), ids2, w2)
+    merged = qsketch.merge(a, b)
+    both = qsketch.update(cfg, qsketch.update(cfg, qsketch.init(cfg), ids1, w1), ids2, w2)
+    np.testing.assert_array_equal(np.asarray(merged.regs), np.asarray(both.regs))
+
+
+@pytest.mark.parametrize("dist", ["gamma", "uniform", "gauss"])
+def test_estimation_accuracy(dist):
+    """RRMSE over trials within ~1.5x of the CR bound 1/sqrt(m-2)."""
+    m = 256
+    errs = []
+    for t in range(20):
+        cfg = SketchConfig(m=m, b=8, seed=1000 + t)
+        ids, w = _stream(3000, seed=t, dist=dist)
+        st = qsketch.update(cfg, qsketch.init(cfg), ids, w)
+        true_c = float(np.asarray(w, dtype=np.float64).sum())
+        est = float(qsketch.estimate(cfg, st))
+        errs.append((est - true_c) / true_c)
+    rrmse = float(np.sqrt(np.mean(np.square(errs))))
+    assert rrmse < 1.5 / np.sqrt(m - 2), rrmse
+
+
+def test_pruned_matches_direct_distribution():
+    """OS-scheduled (pruned) updates give the same register LAW as direct.
+
+    Compares mean estimates over independent seeds: both must estimate the
+    same C within statistical tolerance, and per-register value histograms
+    must agree in aggregate.
+    """
+    m = 128
+    ests_d, ests_p = [], []
+    all_d, all_p = [], []
+    for t in range(15):
+        cfg = SketchConfig(m=m, b=8, seed=2000 + t)
+        ids, w = _stream(1500, seed=50 + t)
+        d = qsketch.update(cfg, qsketch.init(cfg), ids, w)
+        p = qsketch.update_pruned(cfg, qsketch.init(cfg), ids, w)
+        ests_d.append(float(qsketch.estimate(cfg, d)))
+        ests_p.append(float(qsketch.estimate(cfg, p)))
+        all_d.append(np.asarray(d.regs, np.int32))
+        all_p.append(np.asarray(p.regs, np.int32))
+    md, mp = np.mean(ests_d), np.mean(ests_p)
+    assert abs(md - mp) / md < 0.08, (md, mp)
+    # Aggregate register-value distributions agree (mean within half a bin).
+    assert abs(np.mean(all_d) - np.mean(all_p)) < 0.5
+
+
+def test_pruned_batch_split_consistency():
+    """Pruned updates stay exact across batch splits (vs direct sketch law)."""
+    cfg = SketchConfig(m=128, b=8, seed=5)
+    ids, w = _stream(1200, seed=20)
+    whole = qsketch.update_pruned(cfg, qsketch.init(cfg), ids, w)
+    st = qsketch.init(cfg)
+    for i in range(0, 1200, 300):
+        st = qsketch.update_pruned(cfg, st, ids[i : i + 300], w[i : i + 300])
+    np.testing.assert_array_equal(np.asarray(whole.regs), np.asarray(st.regs))
+
+
+def test_prune_mask_is_sound():
+    """Pruned-away elements must not be able to change the sketch."""
+    cfg = SketchConfig(m=64, b=8, seed=6)
+    ids, w = _stream(2000, seed=30)
+    st = qsketch.update_pruned(cfg, qsketch.init(cfg), ids[:1500], w[:1500])
+    mask = np.asarray(qsketch.prune_mask(cfg, st, ids[1500:], w[1500:]))
+    # Feed ONLY the pruned-away elements; sketch must not change.
+    dead_ids = ids[1500:][~mask]
+    dead_w = w[1500:][~mask]
+    if dead_ids.shape[0]:
+        st2 = qsketch.update_pruned(cfg, st, dead_ids, dead_w)
+        np.testing.assert_array_equal(np.asarray(st.regs), np.asarray(st2.regs))
+    # And the mask actually prunes something once the sketch saturates.
+    assert (~mask).sum() > 0
+
+
+def test_mask_rows_ignored():
+    cfg = SketchConfig(m=64, b=8, seed=7)
+    ids, w = _stream(100, seed=40)
+    mask = jnp.asarray(np.arange(100) < 60)
+    a = qsketch.update(cfg, qsketch.init(cfg), ids, w, mask=mask)
+    b = qsketch.update(cfg, qsketch.init(cfg), ids[:60], w[:60])
+    np.testing.assert_array_equal(np.asarray(a.regs), np.asarray(b.regs))

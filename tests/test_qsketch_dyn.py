@@ -1,0 +1,111 @@
+"""QSketch-Dyn: exact-scan vs numpy oracle, unbiasedness, batch-mode bias."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SketchConfig, qsketch_dyn
+
+
+def _stream(n, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, 2**32, n, dtype=np.uint32)
+    w = rng.uniform(0.1, 2.0, n).astype(np.float32)
+    return ids, w
+
+
+def test_scan_matches_numpy_oracle():
+    cfg = SketchConfig(m=64, b=8, seed=5)
+    ids, w = _stream(400, seed=1)
+    d = qsketch_dyn.update_scan(cfg, qsketch_dyn.init(cfg), jnp.asarray(ids), jnp.asarray(w))
+    regs, hist, chat = qsketch_dyn.update_numpy(cfg, ids, np.zeros_like(ids), w)
+    np.testing.assert_array_equal(np.asarray(d.regs, np.int64), regs)
+    np.testing.assert_array_equal(np.asarray(d.hist, np.int64), hist)
+    assert abs(float(d.chat) - chat) / max(chat, 1e-9) < 1e-4
+
+
+def test_duplicates_do_not_double_count():
+    """Feeding the same stream twice must leave Ĉ unchanged (Thm. 2 premise)."""
+    cfg = SketchConfig(m=128, b=8, seed=6)
+    ids, w = _stream(500, seed=2)
+    d1 = qsketch_dyn.update_scan(cfg, qsketch_dyn.init(cfg), jnp.asarray(ids), jnp.asarray(w))
+    d2 = qsketch_dyn.update_scan(cfg, d1, jnp.asarray(ids), jnp.asarray(w))
+    assert float(d1.chat) == float(d2.chat)
+    np.testing.assert_array_equal(np.asarray(d1.regs), np.asarray(d2.regs))
+
+
+def test_estimator_unbiased():
+    """Mean of Ĉ over trials within a few stderr of true C (Thm. 2)."""
+    n = 2000
+    ests = []
+    true_c = None
+    for t in range(25):
+        cfg = SketchConfig(m=256, b=8, seed=3000 + t)
+        ids, w = _stream(n, seed=t)
+        true_c = float(w.astype(np.float64).sum())
+        d = qsketch_dyn.update_batch(cfg, qsketch_dyn.init(cfg), jnp.asarray(ids), jnp.asarray(w))
+        ests.append(float(d.chat))
+    mean = np.mean(ests)
+    stderr = np.std(ests) / np.sqrt(len(ests))
+    assert abs(mean - true_c) < 4 * stderr + 0.01 * true_c, (mean, true_c, stderr)
+
+
+def test_batch_vs_scan_bias_small():
+    """Batch-stale q_R deviates from the exact chain by << sketch noise."""
+    cfg = SketchConfig(m=256, b=8, seed=8)
+    ids, w = _stream(4000, seed=9)
+    exact = qsketch_dyn.update_scan(cfg, qsketch_dyn.init(cfg), jnp.asarray(ids), jnp.asarray(w))
+    batched = qsketch_dyn.init(cfg)
+    for i in range(0, 4000, 512):
+        batched = qsketch_dyn.update_batch(cfg, batched, jnp.asarray(ids[i : i + 512]), jnp.asarray(w[i : i + 512]))
+    # Registers identical (same hash randomness, max-scatter).
+    np.testing.assert_array_equal(np.asarray(exact.regs), np.asarray(batched.regs))
+    c_exact, c_batch = float(exact.chat), float(batched.chat)
+    assert abs(c_exact - c_batch) / c_exact < 0.05, (c_exact, c_batch)
+
+
+def test_within_batch_duplicates_counted_once():
+    cfg = SketchConfig(m=128, b=8, seed=10)
+    ids, w = _stream(100, seed=11)
+    dup_ids = np.concatenate([ids, ids])
+    dup_w = np.concatenate([w, w])
+    a = qsketch_dyn.update_batch(cfg, qsketch_dyn.init(cfg), jnp.asarray(ids), jnp.asarray(w))
+    b = qsketch_dyn.update_batch(cfg, qsketch_dyn.init(cfg), jnp.asarray(dup_ids), jnp.asarray(dup_w))
+    assert float(a.chat) == pytest.approx(float(b.chat), rel=1e-6)
+    np.testing.assert_array_equal(np.asarray(a.regs), np.asarray(b.regs))
+
+
+def test_merge_reestimates():
+    cfg = SketchConfig(m=256, b=8, seed=12)
+    ids1, w1 = _stream(1500, seed=20)
+    ids2, w2 = _stream(1500, seed=21)
+    a = qsketch_dyn.update_batch(cfg, qsketch_dyn.init(cfg), jnp.asarray(ids1), jnp.asarray(w1))
+    b = qsketch_dyn.update_batch(cfg, qsketch_dyn.init(cfg), jnp.asarray(ids2), jnp.asarray(w2))
+    merged = qsketch_dyn.merge(cfg, a, b)
+    true_c = float(w1.astype(np.float64).sum() + w2.astype(np.float64).sum())
+    # MLE over merged registers: statistical tolerance at m=256.
+    assert abs(float(merged.chat) - true_c) / true_c < 0.35
+    # Merged registers are the element-wise max.
+    np.testing.assert_array_equal(
+        np.asarray(merged.regs), np.maximum(np.asarray(a.regs), np.asarray(b.regs))
+    )
+
+
+def test_hist_consistent_with_regs():
+    cfg = SketchConfig(m=128, b=8, seed=13)
+    ids, w = _stream(2000, seed=22)
+    d = qsketch_dyn.update_batch(cfg, qsketch_dyn.init(cfg), jnp.asarray(ids), jnp.asarray(w))
+    regs = np.asarray(d.regs, np.int64)
+    expected = np.bincount(regs[regs > cfg.r_min] - cfg.r_min, minlength=cfg.num_bins)
+    np.testing.assert_array_equal(np.asarray(d.hist), expected)
+
+
+def test_mle_reestimate_close_to_running():
+    cfg = SketchConfig(m=512, b=8, seed=14)
+    ids, w = _stream(5000, seed=23)
+    d = qsketch_dyn.update_batch(cfg, qsketch_dyn.init(cfg), jnp.asarray(ids), jnp.asarray(w))
+    running = float(d.chat)
+    mle = float(qsketch_dyn.estimate_mle(cfg, d))
+    true_c = float(w.astype(np.float64).sum())
+    assert abs(running - true_c) / true_c < 0.2
+    assert abs(mle - true_c) / true_c < 0.2

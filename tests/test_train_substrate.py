@@ -1,0 +1,211 @@
+"""Optimizer / compression / checkpoint / monitor / data-pipeline tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import paper_qsketch
+from repro.data.tokens import TokenStream
+from repro.sketchstream import monitor
+from repro.train import checkpoint, compression, optimizer
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def _toy_params(key=0):
+    k = jax.random.PRNGKey(key)
+    return {
+        "w": jax.random.normal(k, (64, 300)) * 0.1,  # 300: non-multiple of block
+        "b": jnp.zeros((300,)),
+    }
+
+
+def test_adam_reduces_quadratic_loss():
+    params = _toy_params()
+    target = jax.tree.map(lambda p: p * 0.0 + 0.5, params)
+    ocfg = optimizer.OptConfig(lr=0.05, warmup_steps=0, total_steps=200, weight_decay=0.0)
+    state = optimizer.init(params, ocfg)
+
+    def loss(p):
+        return sum(jnp.mean((a - b) ** 2) for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(target)))
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state, _ = optimizer.apply(params, g, state, ocfg)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_quantized_adam_tracks_exact():
+    params = _toy_params(1)
+    g = jax.tree.map(lambda p: jnp.ones_like(p) * 0.01, params)
+    oc_e = optimizer.OptConfig(lr=0.01, warmup_steps=0, quantized=False, weight_decay=0.0)
+    oc_q = optimizer.OptConfig(lr=0.01, warmup_steps=0, quantized=True, weight_decay=0.0)
+    se, sq = optimizer.init(params, oc_e), optimizer.init(params, oc_q)
+    pe, pq = params, params
+    for _ in range(10):
+        pe, se, _ = optimizer.apply(pe, g, se, oc_e)
+        pq, sq, _ = optimizer.apply(pq, g, sq, oc_q)
+    for a, b in zip(jax.tree.leaves(pe), jax.tree.leaves(pq)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=2e-3)
+
+
+def test_quantize_blockwise_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(2), (7, 500)) * jnp.exp(
+        jax.random.normal(jax.random.PRNGKey(3), (7, 1)) * 3
+    )
+    q, s = optimizer.quantize_blockwise(x)
+    x2 = optimizer.dequantize_blockwise(q, s, x.shape)
+    err = np.abs(np.asarray(x2 - x))
+    scale = np.asarray(jnp.abs(x).max(axis=-1, keepdims=True))
+    assert (err <= scale / 127.0 * 0.51 + 1e-12).all()
+    assert q.dtype == jnp.int8
+
+
+def test_schedule_warmup_and_decay():
+    ocfg = optimizer.OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    lrs = [float(optimizer.schedule(ocfg, jnp.int32(s))) for s in [0, 5, 10, 55, 100]]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert lrs[3] < lrs[2]
+    assert abs(lrs[4] - 0.1) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+
+def test_error_feedback_is_unbiased_longrun():
+    """Sum of compressed grads converges to sum of true grads (EF property)."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=(4, 600)).astype(np.float32)) * 0.01
+    e = {"g": jnp.zeros_like(g_true)}
+    total = jnp.zeros_like(g_true)
+    for _ in range(50):
+        out, e = compression.compress({"g": g_true}, e)
+        total = total + out["g"]
+    np.testing.assert_allclose(np.asarray(total / 50), np.asarray(g_true), atol=1e-4)
+
+
+def test_wire_bytes():
+    params = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((5,))}
+    assert compression.wire_bytes(params, compressed=False) == 105 * 4
+    assert compression.wire_bytes(params, compressed=True) == 105
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32), "n": {"b": jnp.ones((3, 4), jnp.int8)}}
+    d = str(tmp_path / "ck")
+    checkpoint.save(d, 7, tree, {"note": "x"})
+    assert checkpoint.latest_step(d) == 7
+    restored, manifest = checkpoint.restore(d, 7, tree)
+    assert manifest["step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity_and_retention(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.zeros(4)}
+    for s in [1, 2, 3, 4, 5]:
+        checkpoint.save(d, s, tree)
+    checkpoint.retain(d, keep=2)
+    assert checkpoint.latest_step(d) == 5
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(d) if n.startswith("step_"))
+    assert steps == [4, 5]
+    # A stale tmp dir must not be picked up as a checkpoint.
+    os.makedirs(os.path.join(d, ".tmp_step_00000099"), exist_ok=True)
+    assert checkpoint.latest_step(d) == 5
+
+
+def test_async_checkpointer(tmp_path):
+    d = str(tmp_path / "ck")
+    ck = checkpoint.AsyncCheckpointer(d, keep=2)
+    tree = {"a": jnp.arange(6)}
+    ck.save(3, tree)
+    ck.wait()
+    assert checkpoint.latest_step(d) == 3
+    ck.close()
+
+
+# ---------------------------------------------------------------------------
+# sketch monitor
+# ---------------------------------------------------------------------------
+
+
+def test_monitor_estimates_distinct_tokens():
+    cfg = paper_qsketch.suite(m=2048, b=8)
+    st = monitor.init(cfg)
+    rng = np.random.default_rng(0)
+    tokens = rng.zipf(1.3, 60_000) % 12_000  # heavy repeats
+    st = monitor.update(cfg, st, jnp.asarray(tokens.astype(np.uint32)))
+    est = float(monitor.estimate(cfg, st))
+    true = len(np.unique(tokens))
+    assert abs(est - true) / true < 0.15, (est, true)
+
+
+def test_monitor_merge_equals_union():
+    cfg = paper_qsketch.suite(m=512, b=8)
+    a_ids = jnp.asarray(np.arange(0, 3000, dtype=np.uint32))
+    b_ids = jnp.asarray(np.arange(2000, 5000, dtype=np.uint32))
+    sa = monitor.update(cfg, monitor.init(cfg), a_ids)
+    sb = monitor.update(cfg, monitor.init(cfg), b_ids)
+    merged = monitor.merge(cfg, sa, sb)
+    both = monitor.update(cfg, monitor.update(cfg, monitor.init(cfg), a_ids), b_ids)
+    np.testing.assert_array_equal(np.asarray(merged.regs), np.asarray(both.regs))
+    est = float(monitor.estimate(cfg, merged))
+    assert abs(est - 5000) / 5000 < 0.25
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_token_stream_deterministic_and_sharded():
+    full = TokenStream(1000, batch=8, seq=16, seed=3)
+    b0 = full.batch_at(5)
+    b1 = full.batch_at(5)
+    np.testing.assert_array_equal(b0["tokens"], b1["tokens"])
+    # Shards partition the work deterministically per (step, shard).
+    s0 = TokenStream(1000, batch=8, seq=16, seed=3, n_shards=2, shard=0).batch_at(5)
+    s1 = TokenStream(1000, batch=8, seq=16, seed=3, n_shards=2, shard=1).batch_at(5)
+    assert s0["tokens"].shape == (4, 16)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+    # Targets are next-token shifted.
+    np.testing.assert_array_equal(b0["tokens"][:, 1:], b0["targets"][:, :-1])
+
+
+def test_monitor_weighted_expert_stream():
+    """MoE routing telemetry: element = expert id, weight = prob mass.
+
+    Weighted cardinality over experts with fixed per-expert weights counts
+    'total routed probability mass over DISTINCT experts touched' — the
+    expert-collapse signal (a collapsed router touches few experts)."""
+    cfg = paper_qsketch.suite(m=512, b=8)
+    rng = np.random.default_rng(0)
+    n_experts = 64
+    # Healthy router: all experts touched.
+    ids = rng.integers(0, n_experts, 20_000).astype(np.uint32)
+    w = np.full_like(ids, 1.0 / n_experts, dtype=np.float32)
+    st = monitor.update(cfg, monitor.init(cfg), jnp.asarray(ids), jnp.asarray(w))
+    est = float(monitor.estimate(cfg, st))
+    assert abs(est - 1.0) < 0.25, est  # 64 distinct x 1/64 = 1.0
+    # Collapsed router: only 4 experts ever chosen.
+    ids_c = rng.integers(0, 4, 20_000).astype(np.uint32)
+    st_c = monitor.update(cfg, monitor.init(cfg), jnp.asarray(ids_c), jnp.asarray(w[: len(ids_c)]))
+    est_c = float(monitor.estimate(cfg, st_c))
+    assert est_c < 0.25 * est, (est_c, est)  # collapse is unmistakable
