@@ -19,7 +19,15 @@ def main() -> None:
     ap.add_argument("--only", default="", help="comma list of benchmark names")
     args = ap.parse_args()
 
-    from . import accuracy, batch_bias, kernels, netflow, register_size, throughput
+    from . import (
+        accuracy,
+        batch_bias,
+        kernels,
+        netflow,
+        register_size,
+        sketch_array,
+        throughput,
+    )
 
     suite = {
         "accuracy": accuracy.run,  # Figs 2-4
@@ -28,6 +36,7 @@ def main() -> None:
         "batch_bias": batch_bias.run,  # beyond-paper
         "netflow": netflow.run,  # App A.4 (CAIDA analogue)
         "kernels": kernels.run,  # kernel block sweep + core throughput
+        "sketch_array": sketch_array.run,  # fused K-sketch vs naive loop
     }
     only = [s for s in args.only.split(",") if s]
     names = only or list(suite)

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 test entry: one command, correct env.
+#
+#   scripts/test.sh                 # full tier-1 suite
+#   scripts/test.sh tests/test_kernels.py -k qsketch   # pass-through args
+#
+# - PYTHONPATH=src so `repro` imports without an install step.
+# - XLA_FLAGS exposes 8 host devices (per SNIPPETS.md) so mesh/sharding tests
+#   exercise multi-device code paths on a CPU-only box; an existing
+#   XLA_FLAGS setting is preserved and extended.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+
+exec python -m pytest -x -q "$@"

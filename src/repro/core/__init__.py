@@ -15,8 +15,14 @@ Baselines (LM / FastGM / FastExpSketch) live in ``baselines``; the uniform
 ``METHODS`` registry below drives benchmarks and examples.
 """
 
-from . import baselines, estimators, hashing, qsketch, qsketch_dyn
-from .types import DynState, FloatSketchState, QSketchState, SketchConfig
+from . import baselines, estimators, hashing, qsketch, qsketch_dyn, sketch_array
+from .types import (
+    DynState,
+    FloatSketchState,
+    QSketchState,
+    SketchArrayState,
+    SketchConfig,
+)
 
 # Uniform method registry: name -> dict of the five standard operations.
 # Signatures: init(cfg); update(cfg, state, ids, weights, mask=None);
@@ -62,10 +68,12 @@ METHODS = {
 __all__ = [
     "SketchConfig",
     "QSketchState",
+    "SketchArrayState",
     "DynState",
     "FloatSketchState",
     "qsketch",
     "qsketch_dyn",
+    "sketch_array",
     "baselines",
     "estimators",
     "hashing",

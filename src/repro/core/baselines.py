@@ -31,7 +31,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import hashing
+from . import estimators, hashing
 from .types import FloatSketchState, SketchConfig
 
 _INIT = jnp.float32(jnp.finfo(jnp.float32).max)
@@ -42,8 +42,8 @@ def init(cfg: SketchConfig) -> FloatSketchState:
 
 
 def estimate(state: FloatSketchState) -> jnp.ndarray:
-    m = state.regs.shape[0]
-    return (m - 1) / jnp.sum(state.regs)
+    """Eq. 2 with the untouched-sketch guard (estimators.lm_estimate)."""
+    return estimators.lm_estimate(state.regs)
 
 
 def merge(a: FloatSketchState, b: FloatSketchState) -> FloatSketchState:

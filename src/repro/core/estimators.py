@@ -38,9 +38,20 @@ _EPS_Z = 1e-4  # series-switch threshold for z = C*s
 
 
 def lm_estimate(regs: jnp.ndarray) -> jnp.ndarray:
-    """Unbiased estimator for LM/FastGM/FastExp float min-registers (Eq. 2)."""
+    """Unbiased estimator for LM/FastGM/FastExp float min-registers (Eq. 2).
+
+    Contract: a register still at its init sentinel (f32-max / +inf) means
+    "no element ever touched this register". If NO register was touched the
+    stream is empty and the estimate is exactly 0.0; with sum(regs) at
+    f32-max scale the division would otherwise return a tiny-but-nonzero
+    garbage value (or 0/inf by accident of m). Partially-touched sketches
+    still estimate through Eq. 2 — its variance already prices registers
+    that happen to be large.
+    """
     m = regs.shape[0]
-    return (m - 1) / jnp.sum(regs)
+    untouched = jnp.min(regs) >= jnp.float32(jnp.finfo(jnp.float32).max)
+    est = (m - 1) / jnp.sum(regs)
+    return jnp.where(untouched, jnp.float32(0.0), est)
 
 
 def histogram(cfg: SketchConfig, regs: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,119 @@
+"""SketchArray: K independent QSketches updated from one keyed stream.
+
+The paper's target settings (per-flow anomaly detection, per-user DAU) need
+*many* weighted cardinalities at once — one sketch per flow/user/expert — and
+the production-shaped workload is a single stream of ``(key, id, weight)``
+triples where ``key`` selects which sketch the element belongs to (Wang et
+al., PAPERS.md, make the same observation for user-cardinality monitoring).
+
+Maintaining K ``QSketchState``s in a Python loop costs K dispatches per
+batch. ``SketchArray`` instead holds an ``int8[K, m]`` register matrix and
+folds a whole keyed batch in ONE fused op:
+
+    y   = quantized_values(cfg, ids, weights)        # (B, m) — same table as
+                                                     #   the single-sketch path
+    R   = R.at[keys].max(y)                          # segment scatter-max
+
+Because row k only ever receives max-contributions from elements with key k,
+and the quantized table is computed by the *same* hash family as
+``qsketch.update`` (the key does not enter the hash), row k is bit-identical
+to a standalone QSketch fed the key-k sub-stream. All single-sketch algebra
+therefore lifts row-wise: merge is element-wise max, estimation is a vmapped
+histogram-MLE, and any row can be extracted as a plain ``QSketchState``.
+
+Estimation is "anytime" in the paper's sense but batched: ``estimate_all``
+runs the O(2^b) Newton solve for all K sketches as one vmap — O(K·2^b) work
+plus a (K, m) bincount, cheap enough to log every step even at K ~ 1e6.
+
+The Pallas path (kernels/sketch_array_update.py via
+``kernels.ops.sketch_array_update_op``) computes the identical y-table tile
+by tile in VMEM and routes rows with a scatter-max loop; it is bit-identical
+to ``update`` here, which is itself bit-identical to the K-loop reference
+(tests/test_sketch_array.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import estimators, qsketch
+from .types import QSketchState, SketchArrayState, SketchConfig
+
+
+def init(cfg: SketchConfig, k: int) -> SketchArrayState:
+    """K fresh sketches; K is carried by the state shape, cfg stays shared."""
+    if k < 1:
+        raise ValueError("SketchArray needs k >= 1 sketches")
+    return SketchArrayState(regs=jnp.full((k, cfg.m), cfg.r_min, dtype=jnp.int8))
+
+
+def num_sketches(state: SketchArrayState) -> int:
+    return state.regs.shape[0]
+
+
+def row(state: SketchArrayState, k: int) -> QSketchState:
+    """Extract sketch k as a standalone (bit-identical) QSketchState."""
+    return QSketchState(regs=state.regs[k])
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def update(
+    cfg: SketchConfig, state: SketchArrayState, keys, ids, weights, mask=None
+) -> SketchArrayState:
+    """One fused pass over a keyed batch: R <- R.at[keys].max(y).
+
+    keys: int[B] in [0, K) routing each element to its sketch row. Out-of-range
+      keys are clipped (callers pad with key 0 + mask=False).
+    mask: optional bool[B]; False rows contribute r_min everywhere (no-ops),
+      exactly as in ``qsketch.update``.
+    """
+    k = state.regs.shape[0]
+    y = qsketch.quantized_values(cfg, ids, weights)
+    if mask is not None:
+        y = jnp.where(mask[:, None], y, jnp.int8(cfg.r_min))
+    keys = jnp.clip(keys.astype(jnp.int32), 0, k - 1)
+    regs = state.regs.astype(jnp.int32).at[keys].max(y.astype(jnp.int32))
+    return SketchArrayState(regs=regs.astype(jnp.int8))
+
+
+def histograms(cfg: SketchConfig, state: SketchArrayState) -> jnp.ndarray:
+    """Per-sketch register histograms, int32[K, 2^b]."""
+    return jax.vmap(lambda r: estimators.histogram(cfg, r))(state.regs)
+
+
+def estimate_all(cfg: SketchConfig, state: SketchArrayState) -> jnp.ndarray:
+    """Ĉ for every sketch: one vmapped histogram-MLE, O(K·2^b) + bincount."""
+    return estimate_all_with_ci(cfg, state)[0]
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def estimate_all_with_ci(cfg: SketchConfig, state: SketchArrayState):
+    """(Ĉ[K], stddev[K], converged[K]) — the vmapped estimate_with_ci."""
+    hists = histograms(cfg, state)
+    return jax.vmap(lambda h: estimators.qsketch_mle(cfg, h))(hists)
+
+
+def merge(a: SketchArrayState, b: SketchArrayState) -> SketchArrayState:
+    """Row-wise union merge (max monoid) — exact at any scale, as for rows."""
+    return SketchArrayState(regs=jnp.maximum(a.regs, b.regs))
+
+
+def update_reference(
+    cfg: SketchConfig, state: SketchArrayState, keys, ids, weights
+) -> SketchArrayState:
+    """Oracle: partition the stream by key, run K independent single-sketch
+    updates. O(K) dispatches — tests/benchmarks only, never the hot path."""
+    import numpy as np
+
+    keys_np = np.asarray(keys)
+    regs = [None] * state.regs.shape[0]
+    for k in range(state.regs.shape[0]):
+        sel = keys_np == k
+        st_k = QSketchState(regs=state.regs[k])
+        if sel.any():
+            st_k = qsketch.update(cfg, st_k, ids[sel], weights[sel])
+        regs[k] = st_k.regs
+    return SketchArrayState(regs=jnp.stack(regs))

@@ -81,6 +81,18 @@ class QSketchState(NamedTuple):
     regs: jnp.ndarray  # int8[m], initialized to r_min
 
 
+class SketchArrayState(NamedTuple):
+    """K independent QSketches as one register matrix (core/sketch_array.py).
+
+    Row k is bit-identical to a standalone ``QSketchState`` fed the
+    sub-stream of elements whose key is k (same cfg, same hash family), so
+    per-row slicing, merging, and estimation all reuse the single-sketch
+    machinery unchanged.
+    """
+
+    regs: jnp.ndarray  # int8[K, m], initialized to r_min
+
+
 class DynState(NamedTuple):
     """QSketch-Dyn state: registers + value histogram + running estimate."""
 

@@ -58,3 +58,23 @@ def netflow(n_flows: int, n_packets: int, seed: int = 0):
     ranks = rng.zipf(1.2, n_packets) % n_flows
     true_c = float(sizes[np.unique(ranks)].astype(np.float64).sum())
     return flow_ids[ranks], sizes[ranks], true_c
+
+
+def netflow_keyed(n_keys: int, n_flows: int, n_packets: int, seed: int = 0):
+    """Keyed CAIDA-like stream for per-key monitoring (SketchArray workload).
+
+    Each packet carries (key, flow id, size): ``key`` is the monitored entity
+    (destination host / user bucket) drawn Zipf over n_keys, the flow id is
+    drawn Zipf from a shared pool, and the weight is the flow's fixed size.
+    Returns (keys int32, flow ids uint32, sizes f32, true_c float64[n_keys])
+    where true_c[k] sums the sizes of DISTINCT flows seen under key k.
+    """
+    rng = np.random.default_rng(seed)
+    flow_ids = rng.choice(np.iinfo(np.uint32).max, size=n_flows, replace=False).astype(np.uint32)
+    sizes = np.clip(rng.lognormal(6.0, 1.0, n_flows), 40, 65535).astype(np.float32)
+    keys = (rng.zipf(1.3, n_packets) % n_keys).astype(np.int32)
+    ranks = rng.zipf(1.2, n_packets) % n_flows
+    pairs = np.unique(np.stack([keys, ranks], axis=1), axis=0)
+    true_c = np.zeros(n_keys, dtype=np.float64)
+    np.add.at(true_c, pairs[:, 0], sizes[pairs[:, 1]].astype(np.float64))
+    return keys, flow_ids[ranks], sizes[ranks], true_c

@@ -1,17 +1,19 @@
 """Pallas TPU kernels for the sketch hot paths.
 
-Three kernels (each with a pure-jnp oracle in ref.py and a jit'd public
-wrapper in ops.py):
+Four kernels (each with a pure-jnp oracle in ref.py or core/, and a jit'd
+public wrapper in ops.py):
 
-* qsketch_update  — batched QSketch register update (max semantics, int).
-* float_sketch    — LM/FastGM-family update (min semantics, float32).
-* qdyn_qr         — QSketch-Dyn batch update-probability q_R.
+* qsketch_update      — batched QSketch register update (max semantics, int).
+* float_sketch        — LM/FastGM-family update (min semantics, float32).
+* qdyn_qr             — QSketch-Dyn batch update-probability q_R.
+* sketch_array_update — keyed multi-sketch (SketchArray) update: batch rows
+                        routed to K register rows resident in VMEM.
 
 On this CPU container the kernels run in interpret mode (the kernel body
 executes in Python); on TPU the identical code lowers through Mosaic. ops.py
 auto-selects based on the backend.
 """
 
-from . import ops, qdyn_qr, qsketch_update, ref
+from . import ops, qdyn_qr, qsketch_update, ref, sketch_array_update
 
-__all__ = ["ops", "ref", "qsketch_update", "qdyn_qr"]
+__all__ = ["ops", "ref", "qsketch_update", "qdyn_qr", "sketch_array_update"]

@@ -23,9 +23,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashing
-from repro.core.types import FloatSketchState, QSketchState, SketchConfig
+from repro.core.types import (
+    FloatSketchState,
+    QSketchState,
+    SketchArrayState,
+    SketchConfig,
+)
 
-from . import qdyn_qr, qsketch_update
+from . import qdyn_qr, qsketch_update, sketch_array_update
 
 _NEG_INF = float(np.finfo(np.float32).min)
 _POS_INF = float(np.finfo(np.float32).max)
@@ -90,6 +95,67 @@ def qsketch_update_op(
         interpret=interpret,
     )
     return QSketchState(regs=out[0, : cfg.m].astype(jnp.int8))
+
+
+def sketch_array_update_op(
+    cfg: SketchConfig,
+    state: SketchArrayState,
+    keys,
+    ids,
+    weights,
+    mask=None,
+    *,
+    block_b: int | None = None,
+    block_m: int | None = None,
+    interpret: bool | None = None,
+) -> SketchArrayState:
+    """Kernel-backed equivalent of ``core.sketch_array.update`` (bit-identical).
+
+    ``mask`` is folded into log2w (masked rows -> -inf -> y = r_min), which is
+    exactly the core's post-clip masking, so bit-identity is preserved.
+    The register slab (K_pad x block_m, int32) must sit in VMEM next to the
+    y tile; block_m is halved until the slab fits a ~6 MiB budget.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    k = state.regs.shape[0]
+    lo, hi = hashing.split_id64(ids)
+    b = lo.shape[0]
+
+    bb = block_b or min(sketch_array_update.DEFAULT_BLOCK_B, _round_up(b, 8))
+    bm = block_m or min(sketch_array_update.DEFAULT_BLOCK_M, _round_up(cfg.m, 128))
+    kp = _round_up(k, 8)
+    if block_m is None:
+        # Halve in 128-aligned steps: M_blk must stay a lane-tile multiple.
+        # Residency = regs_ref + out_ref slabs (int32 each) + the y tile.
+        while (2 * kp + bb) * bm * 4 > 6 * 2**20 and bm > 128:
+            bm = max(128, (bm // 2) // 128 * 128)
+    bp, mp = _round_up(b, bb), _round_up(cfg.m, bm)
+
+    log2w = jnp.log2(weights.astype(jnp.float32))
+    if mask is not None:
+        log2w = jnp.where(mask, log2w, _NEG_INF)
+    keys = jnp.clip(keys.astype(jnp.int32), 0, k - 1)
+    lo2, hi2, lw2, keys2 = _pad_batch([lo, hi, log2w, keys], bp, [0, 0, _NEG_INF, 0])
+    regs = jnp.pad(
+        state.regs.astype(jnp.int32),
+        ((0, kp - k), (0, mp - cfg.m)),
+        constant_values=cfg.r_min,
+    )
+
+    out = sketch_array_update.sketch_array_update_padded(
+        lo2,
+        hi2,
+        lw2,
+        keys2,
+        regs,
+        block_b=bb,
+        block_m=bm,
+        salt=cfg.salt_h,
+        r_min=cfg.r_min,
+        r_max=cfg.r_max,
+        interpret=interpret,
+    )
+    return SketchArrayState(regs=out[:k, : cfg.m].astype(jnp.int8))
 
 
 def float_sketch_update_op(

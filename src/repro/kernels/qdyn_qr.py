@@ -19,7 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from . import compat
 
 DEFAULT_BLOCK_B = 512
 
@@ -51,6 +51,6 @@ def qdyn_qr_padded(weights, hist, scales, *, m: int, block_b: int = DEFAULT_BLOC
         ],
         out_specs=pl.BlockSpec((block_b, 1), lambda bi: (bi, 0)),
         out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        compiler_params=compat.CompilerParams(dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(weights, hist, scales)

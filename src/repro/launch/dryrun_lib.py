@@ -210,6 +210,9 @@ def run_cell(arch: str, shape: str, mesh, opts: CellOptions = CellOptions(), par
         t2 = time.time()
 
         cost = compiled.cost_analysis()
+        # Older JAX returns one properties-dict per device instead of a dict.
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
         mem = compiled.memory_analysis()
         chips = meta["chips"]
         # Loop-aware structural stats (while bodies x trip count). The raw
@@ -271,13 +274,25 @@ def run_cell(arch: str, shape: str, mesh, opts: CellOptions = CellOptions(), par
 
 
 def _save_hlo(meta, text: str, out_dir: str = DEFAULT_OUT, variant: str = ""):
-    import zstandard
+    """Persist the optimized HLO, zstd if available, stdlib gzip otherwise.
 
+    ``zstandard`` is an optional dep (not in every container); the HLO
+    artifact is a side-channel for reanalyze.py, so a missing codec must
+    never fail the dry-run cell itself.
+    """
     os.makedirs(out_dir, exist_ok=True)
     tag = ("_multipod" if "pod" in meta["mesh"] else "_singlepod") + variant
-    path = os.path.join(out_dir, f"{meta['arch']}_{meta['shape']}{tag}.hlo.zst")
-    with open(path, "wb") as f:
-        f.write(zstandard.ZstdCompressor(level=6).compress(text.encode()))
+    stem = os.path.join(out_dir, f"{meta['arch']}_{meta['shape']}{tag}")
+    try:
+        import zstandard
+
+        with open(stem + ".hlo.zst", "wb") as f:
+            f.write(zstandard.ZstdCompressor(level=6).compress(text.encode()))
+    except ImportError:
+        import gzip
+
+        with gzip.open(stem + ".hlo.gz", "wb", compresslevel=6) as f:
+            f.write(text.encode())
 
 
 def parse_collective_bytes_safe(compiled):

@@ -8,10 +8,14 @@ from __future__ import annotations
 
 import argparse
 import glob
+import gzip
 import json
 import os
 
-import zstandard
+try:
+    import zstandard
+except ImportError:  # optional codec; .hlo.gz fallback still readable
+    zstandard = None
 
 from repro import configs
 from repro.roofline import analysis as ra, hlo_stats
@@ -21,10 +25,14 @@ def reanalyze_record(json_path: str) -> bool:
     rec = json.load(open(json_path))
     if rec.get("status") != "ok":
         return False
-    hlo_path = json_path.replace(".json", ".hlo.zst")
-    if not os.path.exists(hlo_path):
+    zst_path = json_path.replace(".json", ".hlo.zst")
+    gz_path = json_path.replace(".json", ".hlo.gz")
+    if zstandard is not None and os.path.exists(zst_path):
+        text = zstandard.ZstdDecompressor().decompress(open(zst_path, "rb").read(), max_output_size=2**33).decode()
+    elif os.path.exists(gz_path):
+        text = gzip.open(gz_path, "rb").read().decode()
+    else:
         return False
-    text = zstandard.ZstdDecompressor().decompress(open(hlo_path, "rb").read(), max_output_size=2**33).decode()
     stats = hlo_stats.analyze(text)
     pd = rec["per_device"]
     pd.update({

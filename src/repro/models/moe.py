@@ -27,6 +27,12 @@ import jax.numpy as jnp
 from . import common, sharding
 from .common import ParamDef
 
+# jax.shard_map only exists on newer JAX; fall back to the experimental home.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 def defs(cfg):
     m = cfg.moe
@@ -78,6 +84,22 @@ def apply(params, x, cfg, mesh=None):
     return apply_scatter(params, x, cfg, mesh)
 
 
+def _pack_by_owner(owner, n_owners: int, cap: int):
+    """Stage-1 capacity packing: stable owner sort + per-owner rank.
+
+    Returns (order, owner_sorted, rank, keep). The SAME routine computes the
+    in-shard dispatch inside apply_a2a's local_fn and the drop_fraction
+    replay outside it — keep them shared so the reported metric can't drift
+    from what the dispatch actually drops.
+    """
+    order = jnp.argsort(owner)
+    own_s = owner[order]
+    cnt = jnp.bincount(own_s, length=n_owners)
+    start = jnp.cumsum(cnt) - cnt
+    rank = jnp.arange(owner.shape[0]) - start[own_s]
+    return order, own_s, rank, rank < cap
+
+
 def apply_a2a(params, x, cfg, mesh):
     """Explicit expert parallelism: two-hop all-to-all under shard_map.
 
@@ -125,12 +147,8 @@ def apply_a2a(params, x, cfg, mesh):
 
         # ---- stage 1: pack per-owner send buffers -------------------------
         owner = e_flat // x_l
-        order1 = jnp.argsort(owner)
-        own_s, e_s, tok_s, p_s = owner[order1], e_flat[order1], tok_flat[order1], p_flat[order1]
-        cnt1 = jnp.bincount(own_s, length=nm)
-        start1 = jnp.cumsum(cnt1) - cnt1
-        rank1 = jnp.arange(tl * k) - start1[own_s]
-        keep1 = rank1 < cap_send
+        order1, own_s, rank1, keep1 = _pack_by_owner(owner, nm, cap_send)
+        e_s, tok_s, p_s = e_flat[order1], tok_flat[order1], p_flat[order1]
         dest1 = jnp.where(keep1, own_s * cap_send + rank1, nm * cap_send)
 
         send_x = jnp.zeros((nm * cap_send + 1, e), xl.dtype).at[dest1].set(xl[tok_s])
@@ -173,22 +191,38 @@ def apply_a2a(params, x, cfg, mesh):
         y = jnp.zeros((tl, e), xl.dtype).at[tok_s].add(
             ret_flat[dest1] * (p_s * keep1).astype(xl.dtype)[:, None]
         )
+        return y
 
-        # ---- aux (pmean'd across the whole mesh) --------------------------
-        frac = jnp.bincount(e_flat, length=nx).astype(jnp.float32) / (tl * k)
-        lb = nx * jnp.sum(frac * probs.mean(0))
-        zl = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
-        drop = 1.0 - keep1.mean()
-        aux = {"load_balance": lb, "router_z": zl, "drop_fraction": drop}
-        aux = jax.tree.map(lambda a: jax.lax.pmean(a, axes), aux)
-        return y, aux
-
-    y, aux = jax.shard_map(
+    y = _shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(axes, None), P(), P("model", None, None), P("model", None, None), P("model", None, None)),
-        out_specs=(P(axes, None), P()),
+        out_specs=P(axes, None),
     )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
+
+    # ---- aux losses, computed OUTSIDE the shard_map ------------------------
+    # Two reasons: (1) shard_map transposition on some JAX versions chokes on
+    # outputs whose cotangent is a symbolic Zero (any caller that grads
+    # through y alone, as the equivalence tests do, hits that path); (2) the
+    # global statistic matches apply_scatter's aux definition exactly, where
+    # the pmean of per-shard products is a slightly different estimator. The
+    # duplicated router pass is a (T, X) einsum — noise next to the expert
+    # FFN, and load_balance/router_z keep their gradients for the train loss.
+    logits = jnp.einsum("te,ex->tx", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, top_e = jax.lax.top_k(probs, k)
+    e_flat = top_e.reshape(-1)
+    frac = jnp.bincount(e_flat, length=nx).astype(jnp.float32) / (t * k)
+    lb = nx * jnp.sum(frac * probs.mean(0))
+    zl = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+
+    # drop_fraction: replay stage-1's per-device capacity packing on the
+    # (n_dev, t_loc*k) block view — _pack_by_owner is the same routine
+    # local_fn dispatches with, so the metric tracks the real drops.
+    n_dev = mesh.size
+    owner_blk = (top_e.reshape(n_dev, -1) // x_l).astype(jnp.int32)
+    drop = 1.0 - jax.vmap(lambda own: _pack_by_owner(own, nm, cap_send)[3])(owner_blk).mean()
+    aux = {"load_balance": lb, "router_z": zl, "drop_fraction": drop}
 
     if m.shared_expert:
         p = params["shared"]
@@ -243,6 +277,14 @@ def apply_scatter(params, x, cfg, mesh=None):
 
     # ---- combine -------------------------------------------------------------
     out_flat = jnp.concatenate([out.reshape(nx * cap, e), jnp.zeros((1, e), x.dtype)])
+    if mesh is not None:
+        # Replicate before the combine gather. GSPMD's partitioned gather from
+        # a "model"-sharded operand mis-accumulates across a second (data)
+        # mesh axis on some JAX versions (each data replica's partial gets
+        # summed), doubling every expert output; an explicit all-gather here
+        # is what the correct fallback lowers to anyway and keeps the expert
+        # FFN itself on the EP layout.
+        out_flat = sharding.constrain(out_flat, mesh, None, None)
     contrib = out_flat[dest] * (p_sorted * keep).astype(x.dtype)[:, None]
     y = jnp.zeros((t, e), x.dtype).at[tok_sorted].add(contrib)
 

@@ -26,6 +26,18 @@ Streams monitored:
   * weighted coverage: element = token id, weight supplied by the pipeline
   * MoE routing:      element = expert id, weight = routed prob mass
   * serving DAU:      element = session id, weight = engagement weight
+
+Padding: pipeline tails carry dead rows. ``update`` takes an optional
+boolean ``mask`` (same leading shape as ``ids``); masked-off rows neither
+touch the sketch nor count toward ``n_seen``.
+
+Per-key telemetry (the multi-tenant upgrade): ``ArrayMonitorState`` tracks K
+independent sketches — one per expert / session bucket / flow — via
+``core.sketch_array``. One ``update_array`` call folds a whole keyed batch
+in a single fused segment scatter-max, and ``estimate_array`` returns all K
+weighted cardinalities from one vmapped histogram-MLE. Merge stays the exact
+max monoid row-wise, so per-key telemetry crosses the mesh the same way the
+single sketch does.
 """
 
 from __future__ import annotations
@@ -34,8 +46,8 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
-from repro.core import SketchConfig, estimators, qsketch
-from repro.core.types import QSketchState
+from repro.core import SketchConfig, estimators, qsketch, sketch_array
+from repro.core.types import QSketchState, SketchArrayState
 
 
 class MonitorState(NamedTuple):
@@ -47,16 +59,27 @@ def init(cfg: SketchConfig) -> MonitorState:
     return MonitorState(regs=qsketch.init(cfg).regs, n_seen=jnp.int32(0))
 
 
-def update(cfg: SketchConfig, state: MonitorState, ids, weights=None) -> MonitorState:
-    """Batched full-QSketch update (ids flattened; weight 1.0 if not given)."""
+def _flatten(ids, weights, mask):
     ids = ids.reshape(-1)
     w = (
         jnp.ones(ids.shape, jnp.float32)
         if weights is None
         else weights.reshape(-1).astype(jnp.float32)
     )
-    st = qsketch.update(cfg, QSketchState(regs=state.regs), ids, w)
-    return MonitorState(regs=st.regs, n_seen=state.n_seen + ids.shape[0])
+    mask = None if mask is None else mask.reshape(-1)
+    n_live = ids.shape[0] if mask is None else jnp.sum(mask.astype(jnp.int32))
+    return ids, w, mask, n_live
+
+
+def update(cfg: SketchConfig, state: MonitorState, ids, weights=None, mask=None) -> MonitorState:
+    """Batched full-QSketch update (ids flattened; weight 1.0 if not given).
+
+    ``mask`` (bool, same leading shape as ids) drops padding rows: they are
+    no-ops in the sketch AND excluded from the ``n_seen`` occurrence count.
+    """
+    ids, w, mask, n_live = _flatten(ids, weights, mask)
+    st = qsketch.update(cfg, QSketchState(regs=state.regs), ids, w, mask=mask)
+    return MonitorState(regs=st.regs, n_seen=state.n_seen + n_live)
 
 
 def estimate(cfg: SketchConfig, state: MonitorState) -> jnp.ndarray:
@@ -69,3 +92,48 @@ def estimate(cfg: SketchConfig, state: MonitorState) -> jnp.ndarray:
 def merge(cfg: SketchConfig, a: MonitorState, b: MonitorState) -> MonitorState:
     """Exact union-stream merge (max monoid) — the cross-pod collective."""
     return MonitorState(regs=jnp.maximum(a.regs, b.regs), n_seen=a.n_seen + b.n_seen)
+
+
+# ---------------------------------------------------------------------------
+# Per-key telemetry: K sketches (experts / session buckets / flows) at once
+# ---------------------------------------------------------------------------
+
+
+class ArrayMonitorState(NamedTuple):
+    regs: jnp.ndarray  # int8[K, m]
+    n_seen: jnp.ndarray  # int32 live-element counter across all keys
+
+
+def init_array(cfg: SketchConfig, k: int) -> ArrayMonitorState:
+    return ArrayMonitorState(
+        regs=sketch_array.init(cfg, k).regs, n_seen=jnp.int32(0)
+    )
+
+
+def update_array(
+    cfg: SketchConfig, state: ArrayMonitorState, keys, ids, weights=None, mask=None
+) -> ArrayMonitorState:
+    """One fused keyed update: element i lands in sketch row keys[i].
+
+    keys/ids/weights/mask share a leading shape and are flattened, so MoE
+    routing tensors ((batch, experts) ids + prob-mass weights) drop in
+    directly.
+    """
+    keys = keys.reshape(-1)
+    ids, w, mask, n_live = _flatten(ids, weights, mask)
+    st = sketch_array.update(
+        cfg, SketchArrayState(regs=state.regs), keys, ids, w, mask=mask
+    )
+    return ArrayMonitorState(regs=st.regs, n_seen=state.n_seen + n_live)
+
+
+def estimate_array(cfg: SketchConfig, state: ArrayMonitorState) -> jnp.ndarray:
+    """All K weighted cardinalities: one vmapped histogram-MLE, Ĉ[K]."""
+    return sketch_array.estimate_all(cfg, SketchArrayState(regs=state.regs))
+
+
+def merge_array(cfg: SketchConfig, a: ArrayMonitorState, b: ArrayMonitorState) -> ArrayMonitorState:
+    """Row-wise exact union merge across shards/pods."""
+    return ArrayMonitorState(
+        regs=jnp.maximum(a.regs, b.regs), n_seen=a.n_seen + b.n_seen
+    )

@@ -27,7 +27,7 @@ def make_prefill(mcfg, mesh=None, *, max_len: int):
 
 
 def make_decode_step(mcfg, mesh=None, *, sketch_cfg: SketchConfig | None = None, temperature: float = 0.0):
-    def decode_one(params, cache, cur_len, tokens, sk_state=None, session_ids=None, session_weights=None, rng=None):
+    def decode_one(params, cache, cur_len, tokens, sk_state=None, session_ids=None, session_weights=None, rng=None, session_mask=None):
         logits, cache = transformer.decode_step(params, cache, cur_len, tokens, mcfg, mesh)
         if temperature > 0.0 and rng is not None:
             next_tok = jax.random.categorical(rng, logits / temperature, axis=-1)
@@ -36,7 +36,11 @@ def make_decode_step(mcfg, mesh=None, *, sketch_cfg: SketchConfig | None = None,
         next_tok = next_tok.astype(jnp.int32)[:, None]
 
         if sketch_cfg is not None and session_ids is not None:
-            sk_state = monitor.update(sketch_cfg, sk_state, session_ids, session_weights)
+            # session_mask drops empty decode slots (batch padding): they
+            # neither pollute the DAU sketch nor inflate its n_seen counter.
+            sk_state = monitor.update(
+                sketch_cfg, sk_state, session_ids, session_weights, mask=session_mask
+            )
 
         return next_tok, cache, sk_state
 

@@ -71,8 +71,15 @@ def make_train_step(
         metrics["loss"] = loss
 
         if sketch_cfg is not None:
-            # Token-coverage telemetry: distinct token ids, weight 1.
-            sk_state = monitor.update(sketch_cfg, sk_state, batch["tokens"].astype(jnp.uint32))
+            # Token-coverage telemetry: distinct token ids, weight 1. A
+            # "tokens_mask" batch field (pipeline-tail padding) gates which
+            # rows reach the sketch and the occurrence counter.
+            sk_state = monitor.update(
+                sketch_cfg,
+                sk_state,
+                batch["tokens"].astype(jnp.uint32),
+                mask=batch.get("tokens_mask"),
+            )
             metrics["distinct_tokens_est"] = monitor.estimate(sketch_cfg, sk_state)
 
         return params, opt_state, comp_state, sk_state, metrics

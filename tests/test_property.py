@@ -1,7 +1,14 @@
-"""Hypothesis property tests on the sketch algebra's invariants."""
+"""Hypothesis property tests on the sketch algebra's invariants.
+
+``hypothesis`` is an optional test extra (requirements-test.txt); without it
+this module degrades to a skip rather than a collection error.
+"""
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import SketchConfig, baselines, qsketch, qsketch_dyn

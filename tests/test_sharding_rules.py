@@ -10,14 +10,23 @@ from repro.models import sharding as ms
 from repro.models.common import ParamDef
 
 
+def _abstract_mesh(sizes, names):
+    """AbstractMesh across the signature change: newer JAX takes
+    (axis_sizes, axis_names); 0.4.x takes ((name, size), ...) pairs."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
 @pytest.fixture(scope="module")
 def meshes():
     # Abstract meshes: no XLA device initialization issues on CPU (uses the
     # single real device repeated logically via AbstractMesh).
-    from jax.sharding import AbstractMesh
-
-    two = AbstractMesh((16, 16), ("data", "model"))
-    three = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    two = _abstract_mesh((16, 16), ("data", "model"))
+    three = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     return two, three
 
 

@@ -1,0 +1,190 @@
+"""SketchArray tests: K-loop bit-identity, kernel-vs-core (ragged shapes),
+vmapped MLE vs the f64 oracle, merge algebra, masking, and the monitor layer.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SketchConfig, estimators, qsketch, sketch_array
+from repro.kernels import ops
+from repro.sketchstream import monitor
+
+# (batch, m, K, block_b, block_m) — deliberately NOT multiples of 8/128 in
+# batch/m/K to exercise the padding contracts end to end.
+SHAPES = [
+    (64, 128, 8, 64, 128),
+    (100, 130, 7, 64, 128),  # ragged everything
+    (256, 384, 16, 128, 128),
+    (513, 257, 33, 256, 128),  # ragged batch + m + K
+    (8, 128, 1, 8, 128),  # single sketch degenerates to qsketch
+]
+
+
+def _keyed_stream(n, k, seed, wscale=1.0):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, k, n, dtype=np.int32)
+    ids = rng.integers(0, 2**32, n, dtype=np.uint32)
+    w = (rng.gamma(1.0, 2.0, n) * wscale).astype(np.float32) + 1e-5
+    return jnp.asarray(keys), jnp.asarray(ids), jnp.asarray(w)
+
+
+@pytest.mark.parametrize("batch,m,k,bb,bm", SHAPES)
+def test_update_matches_k_independent_sketches(batch, m, k, bb, bm):
+    """Row r of the array == a standalone QSketch fed the key-r sub-stream."""
+    cfg = SketchConfig(m=m, b=8, seed=batch + m + k)
+    keys, ids, w = _keyed_stream(batch, k, seed=batch * 7 + k)
+    st = sketch_array.update(cfg, sketch_array.init(cfg, k), keys, ids, w)
+    ref = sketch_array.update_reference(cfg, sketch_array.init(cfg, k), keys, ids, w)
+    np.testing.assert_array_equal(np.asarray(st.regs), np.asarray(ref.regs))
+
+
+@pytest.mark.parametrize("batch,m,k,bb,bm", SHAPES)
+@pytest.mark.parametrize("b", [4, 8])
+def test_kernel_vs_core_bit_identity(batch, m, k, bb, bm, b):
+    """Pallas (interpret) vs core segment scatter: BITWISE equal, any shape."""
+    cfg = SketchConfig(m=m, b=b, seed=batch + m)
+    keys, ids, w = _keyed_stream(batch, k, seed=batch * 3 + m)
+    st = sketch_array.init(cfg, k)
+    # Warm so the clipping paths both hit.
+    st = sketch_array.update(cfg, st, *_keyed_stream(batch, k, seed=1))
+    out_kernel = ops.sketch_array_update_op(
+        cfg, st, keys, ids, w, block_b=bb, block_m=bm, interpret=True
+    )
+    out_core = sketch_array.update(cfg, st, keys, ids, w)
+    np.testing.assert_array_equal(np.asarray(out_kernel.regs), np.asarray(out_core.regs))
+
+
+def test_kernel_mask_bit_identity():
+    cfg = SketchConfig(m=128, b=8, seed=2)
+    keys, ids, w = _keyed_stream(300, 9, seed=11)
+    mask = jnp.asarray(np.random.default_rng(0).random(300) < 0.6)
+    a = ops.sketch_array_update_op(
+        cfg, sketch_array.init(cfg, 9), keys, ids, w, mask=mask, interpret=True
+    )
+    b = sketch_array.update(cfg, sketch_array.init(cfg, 9), keys, ids, w, mask=mask)
+    np.testing.assert_array_equal(np.asarray(a.regs), np.asarray(b.regs))
+
+
+def test_masked_rows_are_noops():
+    cfg = SketchConfig(m=64, b=8, seed=4)
+    keys, ids, w = _keyed_stream(400, 5, seed=21)
+    mask = np.random.default_rng(1).random(400) < 0.5
+    st = sketch_array.update(
+        cfg, sketch_array.init(cfg, 5), keys, ids, w, mask=jnp.asarray(mask)
+    )
+    ref = sketch_array.update(
+        cfg, sketch_array.init(cfg, 5), keys[mask], ids[mask], w[mask]
+    )
+    np.testing.assert_array_equal(np.asarray(st.regs), np.asarray(ref.regs))
+
+
+def test_estimate_all_matches_numpy_oracle():
+    """Per-key vmapped f32 MLE vs the per-row f64 oracle (test_estimators
+    tolerance: rel < 1e-4)."""
+    cfg = SketchConfig(m=256, b=8, seed=6)
+    k = 12
+    keys, ids, w = _keyed_stream(6000, k, seed=31)
+    st = sketch_array.update(cfg, sketch_array.init(cfg, k), keys, ids, w)
+    est = np.asarray(sketch_array.estimate_all(cfg, st))
+    for r in range(k):
+        oracle = estimators.mle_numpy(cfg, np.asarray(st.regs[r]))
+        assert abs(est[r] - oracle) / max(oracle, 1e-30) < 1e-4
+
+
+def test_estimate_all_statistical_accuracy():
+    """Each per-key estimate tracks that key's true weighted cardinality."""
+    cfg = SketchConfig(m=512, b=8, seed=8)
+    k = 6
+    rng = np.random.default_rng(41)
+    keys = jnp.asarray(rng.integers(0, k, 8000, dtype=np.int32))
+    ids = jnp.asarray(rng.integers(0, 2**32, 8000, dtype=np.uint32))
+    w = jnp.asarray(rng.uniform(0.5, 1.5, 8000).astype(np.float32))
+    st = sketch_array.update(cfg, sketch_array.init(cfg, k), keys, ids, w)
+    est = np.asarray(sketch_array.estimate_all(cfg, st))
+    keys_np, w_np = np.asarray(keys), np.asarray(w, dtype=np.float64)
+    for r in range(k):
+        true_c = w_np[keys_np == r].sum()
+        assert abs(est[r] - true_c) / true_c < 0.35  # m=512 statistical bound
+
+
+def test_empty_rows_estimate_zero():
+    cfg = SketchConfig(m=64, b=8, seed=9)
+    k = 4
+    keys = jnp.zeros((50,), jnp.int32)  # all traffic on key 0
+    ids = jnp.asarray(np.arange(50, dtype=np.uint32))
+    w = jnp.ones((50,), jnp.float32)
+    st = sketch_array.update(cfg, sketch_array.init(cfg, k), keys, ids, w)
+    est = np.asarray(sketch_array.estimate_all(cfg, st))
+    assert est[0] > 0
+    np.testing.assert_array_equal(est[1:], 0.0)
+
+
+def test_merge_matches_union_stream():
+    cfg = SketchConfig(m=128, b=8, seed=12)
+    k = 5
+    ka, ia, wa = _keyed_stream(300, k, seed=51)
+    kb, ib, wb = _keyed_stream(300, k, seed=52)
+    sa = sketch_array.update(cfg, sketch_array.init(cfg, k), ka, ia, wa)
+    sb = sketch_array.update(cfg, sketch_array.init(cfg, k), kb, ib, wb)
+    merged = sketch_array.merge(sa, sb)
+    both = sketch_array.update(cfg, sa, kb, ib, wb)
+    np.testing.assert_array_equal(np.asarray(merged.regs), np.asarray(both.regs))
+
+
+def test_row_extraction_is_plain_qsketch():
+    cfg = SketchConfig(m=64, b=8, seed=13)
+    keys, ids, w = _keyed_stream(200, 3, seed=61)
+    st = sketch_array.update(cfg, sketch_array.init(cfg, 3), keys, ids, w)
+    keys_np = np.asarray(keys)
+    sel = keys_np == 1
+    solo = qsketch.update(cfg, qsketch.init(cfg), ids[sel], w[sel])
+    np.testing.assert_array_equal(
+        np.asarray(sketch_array.row(st, 1).regs), np.asarray(solo.regs)
+    )
+    est_row = float(qsketch.estimate(cfg, sketch_array.row(st, 1)))
+    est_all = float(sketch_array.estimate_all(cfg, st)[1])
+    assert est_row == pytest.approx(est_all, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# monitor layer
+# ---------------------------------------------------------------------------
+
+
+def test_monitor_mask_excludes_padding():
+    cfg = SketchConfig(m=64, b=8, seed=14)
+    ids = jnp.asarray(np.arange(100, dtype=np.uint32))
+    mask = jnp.asarray(np.arange(100) < 70)
+    st = monitor.update(cfg, monitor.init(cfg), ids, mask=mask)
+    assert int(st.n_seen) == 70
+    ref = monitor.update(cfg, monitor.init(cfg), ids[:70])
+    np.testing.assert_array_equal(np.asarray(st.regs), np.asarray(ref.regs))
+
+
+def test_array_monitor_per_key_estimates():
+    cfg = SketchConfig(m=256, b=8, seed=15)
+    k = 4
+    keys, ids, w = _keyed_stream(2000, k, seed=71)
+    st = monitor.update_array(cfg, monitor.init_array(cfg, k), keys, ids, w)
+    assert int(st.n_seen) == 2000
+    est = np.asarray(monitor.estimate_array(cfg, st))
+    direct = np.asarray(
+        sketch_array.estimate_all(
+            cfg, sketch_array.update(cfg, sketch_array.init(cfg, k), keys, ids, w)
+        )
+    )
+    np.testing.assert_array_equal(est, direct)
+
+
+def test_array_monitor_merge():
+    cfg = SketchConfig(m=64, b=8, seed=16)
+    k = 3
+    ka, ia, wa = _keyed_stream(150, k, seed=81)
+    kb, ib, wb = _keyed_stream(150, k, seed=82)
+    sa = monitor.update_array(cfg, monitor.init_array(cfg, k), ka, ia, wa)
+    sb = monitor.update_array(cfg, monitor.init_array(cfg, k), kb, ib, wb)
+    merged = monitor.merge_array(cfg, sa, sb)
+    both = monitor.update_array(cfg, sa, kb, ib, wb)
+    np.testing.assert_array_equal(np.asarray(merged.regs), np.asarray(both.regs))
+    assert int(merged.n_seen) == 300
