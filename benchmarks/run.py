@@ -3,8 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV rows (harness contract) and writes
 JSON result files under experiments/bench/. ``--full`` runs the paper-scale
 sweeps (much slower); default is the quick profile used by bench_output.txt.
+``--smoke`` is the CI tier-2 entry (scripts/test.sh --tier2): the quick
+profile restricted to the fast suites, just enough to prove every exercised
+benchmark path still runs end to end.
 
-  python -m benchmarks.run [--full] [--only accuracy,throughput,...]
+  python -m benchmarks.run [--full | --smoke] [--only accuracy,throughput,...]
 """
 
 from __future__ import annotations
@@ -12,12 +15,19 @@ from __future__ import annotations
 import argparse
 import time
 
+# Fast enough for CI while still covering the fused + sharded paths.
+SMOKE_SUITES = ("sketch_array", "sketch_array_sharded")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sweeps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: quick profile over the fast suite subset")
     ap.add_argument("--only", default="", help="comma list of benchmark names")
     args = ap.parse_args()
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
 
     from . import (
         accuracy,
@@ -37,9 +47,10 @@ def main() -> None:
         "netflow": netflow.run,  # App A.4 (CAIDA analogue)
         "kernels": kernels.run,  # kernel block sweep + core throughput
         "sketch_array": sketch_array.run,  # fused K-sketch vs naive loop
+        "sketch_array_sharded": sketch_array.run_sharded,  # mesh-sharded K sweep
     }
     only = [s for s in args.only.split(",") if s]
-    names = only or list(suite)
+    names = only or (list(SMOKE_SUITES) if args.smoke else list(suite))
 
     print("name,us_per_call,derived")
     t0 = time.time()

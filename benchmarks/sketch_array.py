@@ -17,6 +17,11 @@ at K=1024, m=256.
 
 Also timed: ``estimate_all`` (one vmapped histogram-MLE for all K) vs a
 Python loop of K single-sketch MLE calls.
+
+``run_sharded`` extends the sweep past one host: the same keyed workload
+into a mesh-sharded register matrix (core/sharded_array.py) across every
+visible device, K up to 2^20 — update throughput, estimate_all latency, and
+bit-identity between the two schedules.
 """
 
 from __future__ import annotations
@@ -27,7 +32,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SketchArrayState, SketchConfig, qsketch, sketch_array
+from repro.core import (
+    SketchArrayState,
+    SketchConfig,
+    key_directory,
+    qsketch,
+    sharded_array,
+    sketch_array,
+)
 
 from . import common
 
@@ -161,4 +173,111 @@ def run(quick=True):
         f"sketch_array/K{n_keys}/estimate_all", est_all_s * 1e6, "vmapped histogram-MLE, all K"
     )
     common.save("sketch_array", rows)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Sharded vs single-host scaling sweep (core/sharded_array.py)
+# ---------------------------------------------------------------------------
+
+
+def _tenant_batches(dcfg, n_batches, batch, seed=0):
+    """Keyed batches carrying PRE-ROUTED slots (uniform over the sparse
+    64-bit tenant space), so both schedules time pure sketch work."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_batches):
+        lo, hi = key_directory.split_uint64(rng.integers(0, 2**64, batch, dtype=np.uint64))
+        slots = key_directory.route_slots(dcfg, (lo, hi))
+        ids = jnp.asarray(rng.integers(0, 2**32, batch, dtype=np.uint32))
+        w = jnp.asarray((rng.gamma(1.0, 2.0, batch) + 1e-5).astype(np.float32))
+        out.append((slots, ids, w))
+    return out
+
+
+def _throughput(update_fn, state, batches):
+    state = update_fn(state, *batches[0])  # warm: compile + occupancy
+    jax.block_until_ready(jax.tree.leaves(state))
+    t0 = time.perf_counter()
+    n = 0
+    for slots, ids, w in batches[1:]:
+        state = update_fn(state, slots, ids, w)
+        n += len(ids)
+    jax.block_until_ready(jax.tree.leaves(state))
+    return n / (time.perf_counter() - t0), state
+
+
+def run_sharded(quick=True):
+    """Sharded-vs-single-host SketchArray scaling: update throughput and
+    estimate_all latency as K grows past one host's comfort zone.
+
+    Uses every visible device as a shard of the ``sketch`` mesh axis (run
+    under scripts/test.sh / XLA_FLAGS for the 8-device host mesh). The two
+    schedules are bit-identical (asserted), so the deltas are pure routing +
+    shard_map overhead vs the O(K) single-host register residency.
+    """
+    from repro.launch.mesh import make_sketch_mesh
+
+    mesh = make_sketch_mesh()
+    n_dev = sharded_array.num_shards(mesh)
+    m, batch = 128, 8192
+    n_batches = 4 if quick else 10
+    ks = [4096, 65536] if quick else [4096, 65536, 1048576]
+
+    rows = []
+    for k in ks:
+        cfg = SketchConfig(m=m, b=8, seed=17)
+        dcfg = key_directory.DirectoryConfig(capacity=k, seed=23)
+        batches = _tenant_batches(dcfg, n_batches, batch, seed=k)
+
+        eps_single, st_single = _throughput(
+            lambda s, sl, i, w: sketch_array.update(cfg, s, sl, i, w),
+            sketch_array.init(cfg, k),
+            batches,
+        )
+        eps_shard, st_shard = _throughput(
+            lambda s, sl, i, w: sharded_array.update(cfg, mesh, s, sl, i, w),
+            sharded_array.init(cfg, k, mesh),
+            batches,
+        )
+        if not np.array_equal(np.asarray(st_shard.regs), np.asarray(st_single.regs)):
+            raise AssertionError(f"sharded and single-host registers diverged at K={k}")
+
+        est_single_s = common.time_fn(
+            lambda r: sketch_array.estimate_all(cfg, SketchArrayState(regs=r)),
+            st_single.regs, warmup=1, iters=3,
+        )
+        est_shard_s = common.time_fn(
+            lambda r: sharded_array.estimate_all(
+                cfg, mesh, sharded_array.ShardedArrayState(regs=r)
+            ),
+            st_shard.regs, warmup=1, iters=3,
+        )
+
+        for method, eps, est_s in (
+            ("single_host", eps_single, est_single_s),
+            (f"sharded_x{n_dev}", eps_shard, est_shard_s),
+        ):
+            rows.append(
+                {
+                    "figure": "sketch_array_sharded_scaling",
+                    "method": method,
+                    "k": k,
+                    "m": m,
+                    "shards": 1 if method == "single_host" else n_dev,
+                    "update_mops": eps / 1e6,
+                    "estimate_all_ms": est_s * 1e3,
+                }
+            )
+            common.csv_row(
+                f"sketch_array_sharded/K{k}/{method}",
+                1e6 / eps,
+                f"update={eps / 1e6:.3f}Mops estimate_all={est_s * 1e3:.1f}ms",
+            )
+        common.csv_row(
+            f"sketch_array_sharded/K{k}/estimate_speedup",
+            0.0,
+            f"single/sharded={est_single_s / max(est_shard_s, 1e-12):.2f}x on {n_dev} shards",
+        )
+    common.save("sketch_array_sharded", rows)
     return rows

@@ -2,16 +2,31 @@
 # Tier-1 test entry: one command, correct env.
 #
 #   scripts/test.sh                 # full tier-1 suite
+#   scripts/test.sh --tier2         # tier-1 + benchmark smoke paths
 #   scripts/test.sh tests/test_kernels.py -k qsketch   # pass-through args
 #
 # - PYTHONPATH=src so `repro` imports without an install step.
 # - XLA_FLAGS exposes 8 host devices (per SNIPPETS.md) so mesh/sharding tests
 #   exercise multi-device code paths on a CPU-only box; an existing
 #   XLA_FLAGS setting is preserved and extended.
+# - --tier2 additionally runs `python -m benchmarks.run --smoke` (the quick
+#   profile over the fast suites, incl. the sharded SketchArray sweep) so CI
+#   catches benchmark-path rot without paying for the paper-scale sweeps.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
 
-exec python -m pytest -x -q "$@"
+tier2=0
+if [[ "${1:-}" == "--tier2" ]]; then
+  tier2=1
+  shift
+fi
+
+python -m pytest -x -q "$@"
+
+if [[ "$tier2" == 1 ]]; then
+  echo "== tier-2: benchmark smoke paths =="
+  python -m benchmarks.run --smoke
+fi

@@ -15,11 +15,22 @@ Baselines (LM / FastGM / FastExpSketch) live in ``baselines``; the uniform
 ``METHODS`` registry below drives benchmarks and examples.
 """
 
-from . import baselines, estimators, hashing, qsketch, qsketch_dyn, sketch_array
+from . import (
+    baselines,
+    estimators,
+    hashing,
+    key_directory,
+    qsketch,
+    qsketch_dyn,
+    sharded_array,
+    sketch_array,
+)
+from .key_directory import DirectoryConfig, DirectoryState
 from .types import (
     DynState,
     FloatSketchState,
     QSketchState,
+    ShardedArrayState,
     SketchArrayState,
     SketchConfig,
 )
@@ -69,11 +80,16 @@ __all__ = [
     "SketchConfig",
     "QSketchState",
     "SketchArrayState",
+    "ShardedArrayState",
+    "DirectoryConfig",
+    "DirectoryState",
     "DynState",
     "FloatSketchState",
     "qsketch",
     "qsketch_dyn",
     "sketch_array",
+    "sharded_array",
+    "key_directory",
     "baselines",
     "estimators",
     "hashing",

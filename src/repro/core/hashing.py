@@ -95,17 +95,32 @@ def hash_mod(words, salt: int, m: int):
     """Map words uniformly onto {0, ..., m-1} (register chooser g(x)).
 
     Uses multiply-shift on the high bits rather than ``% m`` so the map stays
-    unbiased for non-power-of-two m (bias < 2^-32 via the 64-bit-free
-    fixed-point trick: floor(h * m / 2^32) computed in two 16-bit halves).
+    unbiased for non-power-of-two m (bias < 2^-32): floor(h * m / 2^32),
+    computed 64-bit-free in 16-bit limbs with explicit carries so it is exact
+    for any m < 2^31 — tenant-directory capacities (core/key_directory.py)
+    exceed 2^16, where a single-limb shortcut would silently wrap and crush
+    the slot space. For m <= 2^16 this is bit-identical to the historical
+    two-halves form (m_hi = 0 kills the extra terms), so register choosers
+    are unchanged.
     """
+    if not 0 < m < 2**31:
+        raise ValueError(f"hash_mod needs 0 < m < 2^31, got {m}")
     h = hash_words(words, salt)
-    # floor(h * m / 2^32) without 64-bit ints: split h into hi/lo 16-bit.
     m32 = _u32(m)
-    hi = h >> _u32(16)
-    lo = h & _u32(0xFFFF)
-    # (hi*2^16 + lo) * m / 2^32 = (hi*m)/2^16 + (lo*m)/2^32
-    t = hi * m32 + ((lo * m32) >> _u32(16))
-    return (t >> _u32(16)).astype(jnp.int32)
+    h_hi, h_lo = h >> _u32(16), h & _u32(0xFFFF)
+    m_hi, m_lo = m32 >> _u32(16), m32 & _u32(0xFFFF)
+    # h*m = h_hi*m_hi*2^32 + (h_hi*m_lo + h_lo*m_hi)*2^16 + h_lo*m_lo;
+    # floor(h*m / 2^32) = h_hi*m_hi + (mid-sum + lo-carry) >> 16, where the
+    # mid-sum of two <2^32 products can itself wrap — detect and re-add the
+    # carry at bit 16 of the result.
+    lo_prod = (h_lo * m_lo) >> _u32(16)  # < 2^16
+    mid = h_hi * m_lo
+    mid2 = mid + h_lo * m_hi
+    carry = (mid2 < mid).astype(jnp.uint32)
+    mid3 = mid2 + lo_prod
+    carry = carry + (mid3 < lo_prod).astype(jnp.uint32)
+    t = h_hi * m_hi + (mid3 >> _u32(16)) + (carry << _u32(16))
+    return t.astype(jnp.int32)
 
 
 def split_id64(ids):

@@ -1,0 +1,206 @@
+"""Sparse tenant-key directory: 64-bit tenant ids -> SketchArray slots.
+
+Production streams do not carry dense keys in [0, K): they carry sparse
+64-bit tenant ids (user ids, flow 5-tuples hashes, org ids) drawn from a
+space of 2^64. This module is the layer between those ids and the dense row
+index a ``SketchArray`` / ``ShardedSketchArray`` wants, replacing the
+dense-int key contract PR 1 baked into every update entry point.
+
+Routing is *stateless*: slot(x) is a pure function of the tenant id and a
+frozen ``DirectoryConfig`` (the same murmur-style family as every other hash
+role, ``core/hashing.py``), so two hosts route the same tenant identically
+and the sharded max-monoid merge stays exact. Two refinements on top of the
+plain hash:
+
+* **Pinned hot keys.** ``DirectoryConfig.pinned`` is a small static tuple of
+  tenant ids with *dedicated* slots [0, len(pinned)): a pinned tenant can
+  never collide and never be collided with (hashed tenants land in
+  [num_pinned, capacity)). This is the classic elephant-flow table: the few
+  tenants you bill/alert on get exact rows, the long tail shares.
+* **Collision telemetry.** Hash routing aliases tenants at the birthday
+  rate; aliasing inflates the aliased rows' estimates (union of two
+  tenants' streams — still an exact QSketch of that union, per Wang et
+  al.'s shared-register analysis in PAPERS.md). ``route`` keeps a per-slot
+  32-bit fingerprint of the first claiming tenant and counts routings whose
+  fingerprint mismatches, so operators can watch the actual collision rate
+  and grow ``capacity`` when it drifts.
+
+Telemetry approximations (documented contract):
+  * first-contact claims within ONE batch are resolved by max-fingerprint
+    and not counted as collisions until the next batch that revisits the
+    slot (scatter sees the pre-batch claim table);
+  * a fingerprint match is necessary but not sufficient for identity
+    (32-bit: false-negative rate 2^-32 per routing) — counters are
+    telemetry, never correctness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashing
+
+
+@dataclasses.dataclass(frozen=True)
+class DirectoryConfig:
+    """Frozen (hashable) routing config — a valid ``jax.jit`` static arg.
+
+    Attributes:
+      capacity: total slot count K (== the SketchArray row count it fronts).
+      seed: base salt; routing and fingerprint roles derive sub-salts.
+      pinned: static tuple of 64-bit tenant ids with dedicated slots
+        [0, len(pinned)); everyone else hashes into [len(pinned), capacity).
+    """
+
+    capacity: int
+    seed: int = 0x5EED
+    pinned: tuple = ()
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError("directory capacity must be >= 1")
+        if len(self.pinned) >= self.capacity:
+            raise ValueError("pinned table must leave at least one hashed slot")
+        if len(set(self.pinned)) != len(self.pinned):
+            raise ValueError("pinned tenant ids must be distinct")
+        for t in self.pinned:
+            if not 0 <= int(t) < 2**64:
+                raise ValueError(f"pinned tenant id out of 64-bit range: {t}")
+
+    @property
+    def num_pinned(self) -> int:
+        return len(self.pinned)
+
+    @property
+    def num_hashed(self) -> int:
+        return self.capacity - self.num_pinned
+
+    @property
+    def salt_route(self) -> int:
+        return (self.seed * 0x9E3779B1 + 11) & 0xFFFFFFFF
+
+    @property
+    def salt_fp(self) -> int:
+        return (self.seed * 0x9E3779B1 + 12) & 0xFFFFFFFF
+
+
+class DirectoryState(NamedTuple):
+    """Collision-telemetry state (routing itself is stateless).
+
+    fingerprints: uint32[capacity]; 0 = slot never claimed, else the (nonzero)
+      fingerprint of the first tenant observed on that slot.
+    n_routed: int32 — live elements routed so far (occurrences).
+    n_collisions: int32 — routings whose slot fingerprint mismatched (i.e.
+      traffic landing on a row already owned by a different tenant).
+    """
+
+    fingerprints: jnp.ndarray
+    n_routed: jnp.ndarray
+    n_collisions: jnp.ndarray
+
+
+def init(dcfg: DirectoryConfig) -> DirectoryState:
+    return DirectoryState(
+        fingerprints=jnp.zeros((dcfg.capacity,), jnp.uint32),
+        n_routed=jnp.int32(0),
+        n_collisions=jnp.int32(0),
+    )
+
+
+def split_uint64(ids) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Host-side helper: numpy uint64/int tenant ids -> (lo, hi) uint32 pair.
+
+    JAX x64 is off by default, so 64-bit ids cross the host boundary as two
+    uint32 words (the same convention as ``hashing.split_id64``).
+    """
+    ids = np.asarray(ids, dtype=np.uint64)
+    lo = (ids & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (ids >> np.uint64(32)).astype(np.uint32)
+    return jnp.asarray(lo), jnp.asarray(hi)
+
+
+def _fingerprint(dcfg: DirectoryConfig, lo, hi):
+    """Nonzero uint32 tenant fingerprint (0 is the unclaimed sentinel)."""
+    fp = hashing.hash_words((lo, hi), dcfg.salt_fp)
+    return jnp.where(fp == 0, jnp.uint32(1), fp)
+
+
+def route_slots(dcfg: DirectoryConfig, keys) -> jnp.ndarray:
+    """Stateless tenant -> slot map, int32[B] in [0, capacity).
+
+    ``keys`` is a uint32/int32 array (hi word 0) or a (lo, hi) uint32 pair.
+    Hashed tenants land in [num_pinned, capacity) via the unbiased
+    multiply-shift of ``hashing.hash_mod``; pinned tenants override to their
+    dedicated slot. Pure function of (dcfg, keys): identical on every host.
+    """
+    lo, hi = hashing.split_id64(keys)
+    slots = dcfg.num_pinned + hashing.hash_mod((lo, hi), dcfg.salt_route, dcfg.num_hashed)
+    for i, t in enumerate(dcfg.pinned):
+        t = int(t)
+        t_lo, t_hi = jnp.uint32(t & 0xFFFFFFFF), jnp.uint32(t >> 32)
+        slots = jnp.where((lo == t_lo) & (hi == t_hi), jnp.int32(i), slots)
+    return slots
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def route(dcfg: DirectoryConfig, state: DirectoryState, keys, mask=None):
+    """Route a batch AND update collision telemetry: -> (slots, state').
+
+    Masked-off rows get a valid slot (callers pair them with the same mask
+    downstream) but touch neither the claim table nor the counters.
+    """
+    lo, hi = hashing.split_id64(keys)
+    slots = route_slots(dcfg, (lo, hi))
+    fp = _fingerprint(dcfg, lo, hi)
+    live = jnp.ones(lo.shape, bool) if mask is None else mask
+
+    cur = state.fingerprints[slots]
+    collided = live & (cur != 0) & (cur != fp)
+    # First-writer claim as a scatter-max: claimed slots contribute 0 (the
+    # existing nonzero fingerprint wins); contested fresh slots resolve to the
+    # max fingerprint — deterministic under any scatter order.
+    claim = jnp.where(live & (cur == 0), fp, jnp.uint32(0))
+    fps = state.fingerprints.at[slots].max(claim)
+    return slots, DirectoryState(
+        fingerprints=fps,
+        n_routed=state.n_routed + jnp.sum(live).astype(jnp.int32),
+        n_collisions=state.n_collisions + jnp.sum(collided).astype(jnp.int32),
+    )
+
+
+def merge(a: DirectoryState, b: DirectoryState) -> DirectoryState:
+    """Cross-host telemetry merge.
+
+    Claims resolve by max fingerprint (same rule as in-batch contention);
+    slots claimed by *different* tenants on the two hosts are surfaced as one
+    collision each — the cross-host analogue of a mismatched routing.
+    """
+    if a.fingerprints.shape != b.fingerprints.shape:
+        raise ValueError(
+            "directory merge needs equal capacities, got "
+            f"{a.fingerprints.shape} vs {b.fingerprints.shape}"
+        )
+    cross = jnp.sum((a.fingerprints != 0) & (b.fingerprints != 0) & (a.fingerprints != b.fingerprints))
+    return DirectoryState(
+        fingerprints=jnp.maximum(a.fingerprints, b.fingerprints),
+        n_routed=a.n_routed + b.n_routed,
+        n_collisions=a.n_collisions + b.n_collisions + cross.astype(jnp.int32),
+    )
+
+
+def occupancy(state: DirectoryState) -> jnp.ndarray:
+    """Fraction of slots ever claimed (f32 scalar)."""
+    claimed = jnp.sum((state.fingerprints != 0).astype(jnp.float32))
+    return claimed / state.fingerprints.shape[0]
+
+
+def collision_rate(state: DirectoryState) -> jnp.ndarray:
+    """Collided routings / total routings (f32 scalar; 0 for an empty dir)."""
+    n = jnp.maximum(state.n_routed.astype(jnp.float32), 1.0)
+    return state.n_collisions.astype(jnp.float32) / n

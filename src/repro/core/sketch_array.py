@@ -39,7 +39,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import estimators, qsketch
+from . import estimators, key_directory, qsketch
 from .types import QSketchState, SketchArrayState, SketchConfig
 
 
@@ -55,7 +55,14 @@ def num_sketches(state: SketchArrayState) -> int:
 
 
 def row(state: SketchArrayState, k: int) -> QSketchState:
-    """Extract sketch k as a standalone (bit-identical) QSketchState."""
+    """Extract sketch k as a standalone (bit-identical) QSketchState.
+
+    Host-side API: ``k`` must be a concrete int in [0, K) — out-of-range
+    indices raise instead of silently wrapping python-style.
+    """
+    n = state.regs.shape[0]
+    if not 0 <= k < n:
+        raise IndexError(f"sketch row {k} out of range for K={n}")
     return QSketchState(regs=state.regs[k])
 
 
@@ -97,21 +104,60 @@ def estimate_all_with_ci(cfg: SketchConfig, state: SketchArrayState):
 
 
 def merge(a: SketchArrayState, b: SketchArrayState) -> SketchArrayState:
-    """Row-wise union merge (max monoid) — exact at any scale, as for rows."""
+    """Row-wise union merge (max monoid) — exact at any scale, as for rows.
+
+    Shapes must agree exactly: a (K, m) mismatch means the operands are not
+    sketches of the same tenant space / register geometry, and broadcasting
+    would silently cross-contaminate rows.
+    """
+    if a.regs.shape != b.regs.shape:
+        raise ValueError(
+            f"SketchArray merge needs matching (K, m), got {a.regs.shape} vs {b.regs.shape}"
+        )
     return SketchArrayState(regs=jnp.maximum(a.regs, b.regs))
 
 
+def update_tenants(
+    cfg: SketchConfig,
+    dcfg: key_directory.DirectoryConfig,
+    state: SketchArrayState,
+    dir_state: key_directory.DirectoryState,
+    tenant_keys,
+    ids,
+    weights,
+    mask=None,
+):
+    """Sparse-tenant entry: route 64-bit tenant ids through the key directory,
+    then run the fused keyed update. Returns (state, directory telemetry).
+
+    This is the production-keyed form of ``update`` — raw streams carry
+    sparse tenant ids, not dense rows; ``update``'s int[B]-in-[0, K) contract
+    is the *slot* contract downstream of ``key_directory.route``.
+    """
+    if dcfg.capacity != state.regs.shape[0]:
+        raise ValueError(
+            f"directory capacity {dcfg.capacity} != SketchArray rows {state.regs.shape[0]}"
+        )
+    slots, dir_state = key_directory.route(dcfg, dir_state, tenant_keys, mask=mask)
+    return update(cfg, state, slots, ids, weights, mask=mask), dir_state
+
+
 def update_reference(
-    cfg: SketchConfig, state: SketchArrayState, keys, ids, weights
+    cfg: SketchConfig, state: SketchArrayState, keys, ids, weights, mask=None
 ) -> SketchArrayState:
     """Oracle: partition the stream by key, run K independent single-sketch
-    updates. O(K) dispatches — tests/benchmarks only, never the hot path."""
+    updates. O(K) dispatches — tests/benchmarks only, never the hot path.
+
+    ``mask`` mirrors the fused path: masked-off rows are dropped from their
+    key's sub-stream entirely, so the oracle verifies padded batches too.
+    """
     import numpy as np
 
     keys_np = np.asarray(keys)
+    live = np.ones(keys_np.shape, bool) if mask is None else np.asarray(mask)
     regs = [None] * state.regs.shape[0]
     for k in range(state.regs.shape[0]):
-        sel = keys_np == k
+        sel = (keys_np == k) & live
         st_k = QSketchState(regs=state.regs[k])
         if sel.any():
             st_k = qsketch.update(cfg, st_k, ids[sel], weights[sel])

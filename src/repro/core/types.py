@@ -93,6 +93,20 @@ class SketchArrayState(NamedTuple):
     regs: jnp.ndarray  # int8[K, m], initialized to r_min
 
 
+class ShardedArrayState(NamedTuple):
+    """A SketchArray whose rows are sharded over a mesh axis
+    (core/sharded_array.py).
+
+    Same register semantics as ``SketchArrayState`` — row k is bit-identical
+    to a standalone QSketch of the slot-k sub-stream — but the [K, m] matrix
+    lives row-sharded over the ``"sketch"`` mesh axis, so K scales with the
+    fleet instead of one host's memory. All algebra stays the max monoid;
+    conversion to/from the single-host form is a pure reshard.
+    """
+
+    regs: jnp.ndarray  # int8[K, m], K divisible by the shard count
+
+
 class DynState(NamedTuple):
     """QSketch-Dyn state: registers + value histogram + running estimate."""
 

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hashing
+from repro.core import hashing, key_directory
 from repro.core.types import (
     FloatSketchState,
     QSketchState,
@@ -111,6 +111,10 @@ def sketch_array_update_op(
 ) -> SketchArrayState:
     """Kernel-backed equivalent of ``core.sketch_array.update`` (bit-identical).
 
+    ``keys`` follows the *slot* contract: dense int[B] in [0, K), i.e. the
+    output of ``core.key_directory.route`` (sparse 64-bit tenant streams go
+    through ``sketch_array_update_tenants_op`` below).
+
     ``mask`` is folded into log2w (masked rows -> -inf -> y = r_min), which is
     exactly the core's post-clip masking, so bit-identity is preserved.
     The register slab (K_pad x block_m, int32) must sit in VMEM next to the
@@ -156,6 +160,33 @@ def sketch_array_update_op(
         interpret=interpret,
     )
     return SketchArrayState(regs=out[:k, : cfg.m].astype(jnp.int8))
+
+
+def sketch_array_update_tenants_op(
+    cfg: SketchConfig,
+    dcfg: key_directory.DirectoryConfig,
+    state: SketchArrayState,
+    dir_state: key_directory.DirectoryState,
+    tenant_keys,
+    ids,
+    weights,
+    mask=None,
+    **kernel_kwargs,
+):
+    """Sparse-tenant front of ``sketch_array_update_op``.
+
+    Routes 64-bit tenant ids (uint32 array or pre-split (lo, hi) pair)
+    through the key directory — collision telemetry included — then runs the
+    Pallas-backed keyed update on the resulting slots. Returns
+    (SketchArrayState, DirectoryState).
+    """
+    if dcfg.capacity != state.regs.shape[0]:
+        raise ValueError(
+            f"directory capacity {dcfg.capacity} != SketchArray rows {state.regs.shape[0]}"
+        )
+    slots, dir_state = key_directory.route(dcfg, dir_state, tenant_keys, mask=mask)
+    out = sketch_array_update_op(cfg, state, slots, ids, weights, mask=mask, **kernel_kwargs)
+    return out, dir_state
 
 
 def float_sketch_update_op(

@@ -21,3 +21,17 @@ def make_local_mesh(model: int | None = None):
     n = len(jax.devices())
     model = model or (2 if n % 2 == 0 and n > 1 else 1)
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_sketch_mesh(n_shards: int | None = None):
+    """1-D mesh over the ``"sketch"`` axis: rows of a ShardedSketchArray.
+
+    The multi-tenant register matrix (core/sharded_array.py) shards its K
+    rows over this axis; K ~ 1e7 tenants then costs K*m/n_shards bytes per
+    device instead of one host's worth. Defaults to every visible device.
+    Telemetry embedded in a training step can instead reuse an existing mesh
+    axis (``sharded_array.update(..., axis="data")``) — this builder is for
+    the standalone monitoring fleet / examples / benchmarks.
+    """
+    n = n_shards or len(jax.devices())
+    return jax.make_mesh((n,), ("sketch",))

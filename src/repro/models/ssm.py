@@ -5,7 +5,7 @@ length L; within a chunk the recurrence is materialized as a (masked)
 attention-like quadratic form; across chunks a tiny (H, N, P) state is
 carried by a scan. Total work O(S·L·H·P + S·H·N·P) — linear in S, matmul-
 heavy inside chunks (MXU-friendly: the TPU adaptation is exactly "pick L so
-the intra-chunk einsums are 128-aligned", DESIGN.md §4).
+the intra-chunk einsums are 128-aligned", DESIGN.md §5).
 
 Decode keeps an O(1)-per-token state: h <- h * exp(dt·A) + dt · B ⊗ x. This
 is why mamba2 / jamba run the long_500k shape while pure-attention archs

@@ -38,16 +38,31 @@ in a single fused segment scatter-max, and ``estimate_array`` returns all K
 weighted cardinalities from one vmapped histogram-MLE. Merge stays the exact
 max monoid row-wise, so per-key telemetry crosses the mesh the same way the
 single sketch does.
+
+Production scale (this file's third layer): ``ShardedArrayMonitor`` fronts
+sparse 64-bit tenant ids with a key directory (collision telemetry, pinned
+hot keys — core/key_directory.py) and shards the [K, m] register matrix over
+a mesh axis (core/sharded_array.py), the path to K ~ 1e7 tenants. Train and
+serve steps thread a ``TelemetryState`` (scalar sketch + tenant array) when
+both monitors are on.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax.numpy as jnp
 
-from repro.core import SketchConfig, estimators, qsketch, sketch_array
-from repro.core.types import QSketchState, SketchArrayState
+from repro.core import (
+    SketchConfig,
+    estimators,
+    key_directory,
+    qsketch,
+    sharded_array,
+    sketch_array,
+)
+from repro.core.key_directory import DirectoryConfig, DirectoryState
+from repro.core.types import QSketchState, ShardedArrayState, SketchArrayState
 
 
 class MonitorState(NamedTuple):
@@ -110,16 +125,37 @@ def init_array(cfg: SketchConfig, k: int) -> ArrayMonitorState:
     )
 
 
+def _flatten_keys(keys):
+    """Flatten dense-slot or (lo, hi) sparse tenant keys uniformly."""
+    if isinstance(keys, tuple):
+        lo, hi = keys
+        return lo.reshape(-1), hi.reshape(-1)
+    return keys.reshape(-1)
+
+
 def update_array(
-    cfg: SketchConfig, state: ArrayMonitorState, keys, ids, weights=None, mask=None
+    cfg: SketchConfig,
+    state: ArrayMonitorState,
+    keys,
+    ids,
+    weights=None,
+    mask=None,
+    dcfg: DirectoryConfig | None = None,
 ) -> ArrayMonitorState:
     """One fused keyed update: element i lands in sketch row keys[i].
 
     keys/ids/weights/mask share a leading shape and are flattened, so MoE
     routing tensors ((batch, experts) ids + prob-mass weights) drop in
     directly.
+
+    With ``dcfg`` set, ``keys`` are sparse 64-bit tenant ids (uint32 array or
+    (lo, hi) pair) routed statelessly through the key directory; without it,
+    they follow the dense-slot contract in [0, K). Collision telemetry lives
+    in ``ShardedArrayMonitor`` — this path stays a single pytree in/out.
     """
-    keys = keys.reshape(-1)
+    keys = _flatten_keys(keys)
+    if dcfg is not None:
+        keys = key_directory.route_slots(dcfg, keys)
     ids, w, mask, n_live = _flatten(ids, weights, mask)
     st = sketch_array.update(
         cfg, SketchArrayState(regs=state.regs), keys, ids, w, mask=mask
@@ -137,3 +173,108 @@ def merge_array(cfg: SketchConfig, a: ArrayMonitorState, b: ArrayMonitorState) -
     return ArrayMonitorState(
         regs=jnp.maximum(a.regs, b.regs), n_seen=a.n_seen + b.n_seen
     )
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded per-tenant telemetry: sparse 64-bit keys, K beyond one host
+# ---------------------------------------------------------------------------
+
+
+class ShardedArrayMonitorState(NamedTuple):
+    """Pytree state of a ShardedArrayMonitor (threads through jit/scan/ckpt)."""
+
+    regs: jnp.ndarray  # int8[K, m], row-sharded over the monitor's mesh axis
+    directory: DirectoryState  # key-collision telemetry
+    n_seen: jnp.ndarray  # int32 live-element counter across all tenants
+
+
+class TelemetryState(NamedTuple):
+    """Combined sketch state a train/serve step threads when BOTH the scalar
+    stream sketch and the per-tenant sharded array are enabled. Either field
+    may be an empty dict when that monitor is off — the tuple stays a valid
+    pytree for jit/donation/checkpointing either way."""
+
+    scalar: Any  # MonitorState | {}
+    tenants: Any  # ShardedArrayMonitorState | {}
+
+
+class ShardedArrayMonitor:
+    """Per-tenant weighted-cardinality telemetry at production K.
+
+    Wraps the three-layer subsystem — key directory (sparse 64-bit tenant ids
+    -> slots, collision counters, pinned hot keys), mesh-sharded register
+    matrix (core/sharded_array.py), shard-local vmapped estimation — behind
+    the same init/update/estimate/merge surface as the scalar monitor, so
+    train/serve steps thread ONE more pytree and nothing else.
+
+    The instance is configuration (closed over by jit); all mutable data
+    lives in ``ShardedArrayMonitorState``. ``axis`` names the mesh axis the
+    rows shard over: ``"sketch"`` on a dedicated monitoring mesh
+    (launch/mesh.make_sketch_mesh), or an existing training-mesh axis (e.g.
+    ``"data"``) when telemetry rides inside the train step's jit.
+    """
+
+    def __init__(self, cfg: SketchConfig, dcfg: DirectoryConfig, mesh, axis: str = sharded_array.AXIS):
+        if dcfg.capacity % sharded_array.num_shards(mesh, axis):
+            raise ValueError(
+                f"directory capacity {dcfg.capacity} must be divisible by the "
+                f"'{axis}' axis shard count ({sharded_array.num_shards(mesh, axis)}); "
+                "use ShardedArrayMonitor.for_mesh to round it up"
+            )
+        self.cfg = cfg
+        self.dcfg = dcfg
+        self.mesh = mesh
+        self.axis = axis
+
+    @classmethod
+    def for_mesh(cls, cfg: SketchConfig, capacity: int, mesh, *, axis: str = sharded_array.AXIS, seed: int | None = None, pinned: tuple = ()):
+        """Build with ``capacity`` rounded up to a shard multiple."""
+        cap = sharded_array.padded_k(capacity, mesh, axis)
+        dcfg = DirectoryConfig(capacity=cap, seed=cfg.seed if seed is None else seed, pinned=pinned)
+        return cls(cfg, dcfg, mesh, axis=axis)
+
+    def init(self) -> ShardedArrayMonitorState:
+        return ShardedArrayMonitorState(
+            regs=sharded_array.init(self.cfg, self.dcfg.capacity, self.mesh, axis=self.axis).regs,
+            directory=key_directory.init(self.dcfg),
+            n_seen=jnp.int32(0),
+        )
+
+    def update(self, state: ShardedArrayMonitorState, tenant_keys, ids, weights=None, mask=None) -> ShardedArrayMonitorState:
+        """Fold a keyed batch: tenant_keys are sparse ids (uint32 or (lo, hi)
+        pair), flattened together with ids/weights/mask like ``update``."""
+        keys = _flatten_keys(tenant_keys)
+        ids, w, mask, n_live = _flatten(ids, weights, mask)
+        st, dir_state = sharded_array.update_tenants(
+            self.cfg, self.dcfg, self.mesh,
+            ShardedArrayState(regs=state.regs), state.directory,
+            keys, ids, w, mask=mask, axis=self.axis,
+        )
+        return ShardedArrayMonitorState(
+            regs=st.regs, directory=dir_state, n_seen=state.n_seen + n_live
+        )
+
+    def estimate(self, state: ShardedArrayMonitorState) -> jnp.ndarray:
+        """Ĉ[K] — the vmapped Newton runs shard-local, no register gather."""
+        return sharded_array.estimate_all(
+            self.cfg, self.mesh, ShardedArrayState(regs=state.regs), axis=self.axis
+        )
+
+    def merge(self, a: ShardedArrayMonitorState, b: ShardedArrayMonitorState) -> ShardedArrayMonitorState:
+        """Cross-pod union: all-max registers, directory telemetry merge."""
+        regs = sharded_array.merge(
+            ShardedArrayState(regs=a.regs), ShardedArrayState(regs=b.regs)
+        ).regs
+        return ShardedArrayMonitorState(
+            regs=regs,
+            directory=key_directory.merge(a.directory, b.directory),
+            n_seen=a.n_seen + b.n_seen,
+        )
+
+    def metrics(self, state: ShardedArrayMonitorState) -> dict:
+        """Cheap per-step scalars (NO estimation): stream + directory health."""
+        return {
+            "tenant_elements_seen": state.n_seen,
+            "tenant_slots_claimed": jnp.sum((state.directory.fingerprints != 0).astype(jnp.int32)),
+            "tenant_collision_rate": key_directory.collision_rate(state.directory),
+        }

@@ -26,8 +26,20 @@ def make_prefill(mcfg, mesh=None, *, max_len: int):
     return prefill_step
 
 
-def make_decode_step(mcfg, mesh=None, *, sketch_cfg: SketchConfig | None = None, temperature: float = 0.0):
-    def decode_one(params, cache, cur_len, tokens, sk_state=None, session_ids=None, session_weights=None, rng=None, session_mask=None):
+def make_decode_step(
+    mcfg,
+    mesh=None,
+    *,
+    sketch_cfg: SketchConfig | None = None,
+    tenant_monitor: monitor.ShardedArrayMonitor | None = None,
+    temperature: float = 0.0,
+):
+    """With ``tenant_monitor`` set, ``sk_state`` is a ``TelemetryState`` and
+    ``tenant_ids`` (sparse 64-bit org/customer ids, one per decode slot) route
+    each session into its tenant's sketch — per-tenant weighted DAU next to
+    the global one, sharded over the monitor's mesh axis."""
+
+    def decode_one(params, cache, cur_len, tokens, sk_state=None, session_ids=None, session_weights=None, rng=None, session_mask=None, tenant_ids=None):
         logits, cache = transformer.decode_step(params, cache, cur_len, tokens, mcfg, mesh)
         if temperature > 0.0 and rng is not None:
             next_tok = jax.random.categorical(rng, logits / temperature, axis=-1)
@@ -35,13 +47,32 @@ def make_decode_step(mcfg, mesh=None, *, sketch_cfg: SketchConfig | None = None,
             next_tok = jnp.argmax(logits, axis=-1)
         next_tok = next_tok.astype(jnp.int32)[:, None]
 
+        # sk_state=None (telemetry off for this call) stays valid even when
+        # the step was built with a tenant monitor.
+        telemetry_on = tenant_monitor is not None and sk_state is not None
+        scalar_state, tenant_state = (
+            (sk_state.scalar, sk_state.tenants) if telemetry_on else (sk_state, {})
+        )
+
         if sketch_cfg is not None and session_ids is not None:
             # session_mask drops empty decode slots (batch padding): they
             # neither pollute the DAU sketch nor inflate its n_seen counter.
-            sk_state = monitor.update(
-                sketch_cfg, sk_state, session_ids, session_weights, mask=session_mask
+            scalar_state = monitor.update(
+                sketch_cfg, scalar_state, session_ids, session_weights, mask=session_mask
             )
 
+        if telemetry_on and tenant_ids is not None and session_ids is not None:
+            # Per-tenant DAU: element = session id, weight = engagement,
+            # key = the session's tenant (routed through the key directory).
+            tenant_state = tenant_monitor.update(
+                tenant_state, tenant_ids, session_ids, session_weights, mask=session_mask
+            )
+
+        sk_state = (
+            monitor.TelemetryState(scalar=scalar_state, tenants=tenant_state)
+            if telemetry_on
+            else scalar_state
+        )
         return next_tok, cache, sk_state
 
     return decode_one

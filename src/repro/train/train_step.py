@@ -32,11 +32,19 @@ def make_train_step(
     mesh=None,
     *,
     sketch_cfg: SketchConfig | None = None,
+    tenant_monitor: monitor.ShardedArrayMonitor | None = None,
     compress: bool = False,
     microbatches: int = 1,
     remat=True,
     sharded_xent: bool = False,
 ):
+    """Build the step fn. With ``tenant_monitor`` set, ``sk_state`` is a
+    ``monitor.TelemetryState`` (scalar sketch + sharded per-tenant array) and
+    batches may carry a ``doc_ids`` field — sparse document/source ids (one
+    per sequence) routed through the tenant key directory, giving per-
+    document distinct-token coverage next to the global sketch. 64-bit ids
+    arrive as two uint32 words: ``doc_ids`` (lo) + optional ``doc_ids_hi``
+    (JAX x64 is off, a single field would silently truncate the high word)."""
     def _loss(params, mb):
         return transformer.loss_fn(params, mb, mcfg, mesh, remat=remat, sharded_xent=sharded_xent)
 
@@ -70,26 +78,58 @@ def make_train_step(
         metrics.update(om)
         metrics["loss"] = loss
 
+        scalar_state, tenant_state = (
+            (sk_state.scalar, sk_state.tenants) if tenant_monitor is not None else (sk_state, {})
+        )
+
         if sketch_cfg is not None:
             # Token-coverage telemetry: distinct token ids, weight 1. A
             # "tokens_mask" batch field (pipeline-tail padding) gates which
             # rows reach the sketch and the occurrence counter.
-            sk_state = monitor.update(
+            scalar_state = monitor.update(
                 sketch_cfg,
-                sk_state,
+                scalar_state,
                 batch["tokens"].astype(jnp.uint32),
                 mask=batch.get("tokens_mask"),
             )
-            metrics["distinct_tokens_est"] = monitor.estimate(sketch_cfg, sk_state)
+            metrics["distinct_tokens_est"] = monitor.estimate(sketch_cfg, scalar_state)
 
+        if tenant_monitor is not None and "doc_ids" in batch:
+            # Per-document coverage: tenant key = sparse doc/source id (one
+            # per sequence, lo + optional hi uint32 word), element = token
+            # id. Estimation is NOT run here — O(K·2^b) is a logging-cadence
+            # cost, the update is not.
+            tokens = batch["tokens"]
+
+            def per_token(word):
+                return jnp.broadcast_to(word.astype(jnp.uint32)[:, None], tokens.shape)
+
+            doc_keys = per_token(batch["doc_ids"])
+            if "doc_ids_hi" in batch:
+                doc_keys = (doc_keys, per_token(batch["doc_ids_hi"]))
+            tenant_state = tenant_monitor.update(
+                tenant_state,
+                doc_keys,
+                tokens.astype(jnp.uint32),
+                mask=batch.get("tokens_mask"),
+            )
+            metrics.update(tenant_monitor.metrics(tenant_state))
+
+        sk_state = (
+            monitor.TelemetryState(scalar=scalar_state, tenants=tenant_state)
+            if tenant_monitor is not None
+            else scalar_state
+        )
         return params, opt_state, comp_state, sk_state, metrics
 
     return train_step
 
 
-def init_states(mcfg, ocfg, params, *, sketch_cfg=None, compress=False):
+def init_states(mcfg, ocfg, params, *, sketch_cfg=None, tenant_monitor=None, compress=False):
     """(opt_state, comp_state, sketch_state) matching make_train_step."""
     opt_state = optimizer.init(params, ocfg)
     comp_state = compression.init_error_state(params) if compress else {}
     sk_state = monitor.init(sketch_cfg) if sketch_cfg is not None else {}
+    if tenant_monitor is not None:
+        sk_state = monitor.TelemetryState(scalar=sk_state, tenants=tenant_monitor.init())
     return opt_state, comp_state, sk_state

@@ -67,6 +67,24 @@ def test_hash_mod_range_and_balance(m):
     assert (np.abs(counts - expected) < 6 * np.sqrt(expected) + 6).all()
 
 
+@pytest.mark.parametrize("m", [65_537, 10**6, 2**20, 2**30 - 1])
+def test_hash_mod_exact_beyond_16_bits(m):
+    """Directory capacities exceed 2^16: the limb arithmetic must equal the
+    true floor(h*m / 2^32) (the old two-halves shortcut wrapped silently)."""
+    ids = jnp.asarray(np.random.default_rng(0).integers(0, 2**32, 20_000, dtype=np.uint32))
+    got = np.asarray(hashing.hash_mod((ids,), salt=9, m=m)).astype(np.int64)
+    h = np.asarray(hashing.hash_words((ids,), salt=9)).astype(np.uint64)
+    np.testing.assert_array_equal(got, ((h * np.uint64(m)) >> np.uint64(32)).astype(np.int64))
+
+
+def test_hash_mod_rejects_bad_m():
+    ids = jnp.arange(8, dtype=jnp.uint32)
+    with pytest.raises(ValueError):
+        hashing.hash_mod((ids,), salt=1, m=0)
+    with pytest.raises(ValueError):
+        hashing.hash_mod((ids,), salt=1, m=2**31)
+
+
 def test_neg_log_uniform_is_exponential():
     ids = jnp.arange(200_000, dtype=jnp.uint32)
     e = np.asarray(hashing.neg_log_uniform((ids,), salt=3), dtype=np.float64)

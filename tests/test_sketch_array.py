@@ -66,6 +66,68 @@ def test_kernel_mask_bit_identity():
     np.testing.assert_array_equal(np.asarray(a.regs), np.asarray(b.regs))
 
 
+def test_masked_update_matches_reference_oracle():
+    """The K-loop oracle takes ``mask`` too, so padded batches are verified
+    against truly-dropped rows (not just against the fused path itself)."""
+    cfg = SketchConfig(m=96, b=8, seed=3)
+    keys, ids, w = _keyed_stream(350, 6, seed=17)
+    mask = np.random.default_rng(2).random(350) < 0.55
+    fused = sketch_array.update(
+        cfg, sketch_array.init(cfg, 6), keys, ids, w, mask=jnp.asarray(mask)
+    )
+    oracle = sketch_array.update_reference(
+        cfg, sketch_array.init(cfg, 6), keys, ids, w, mask=mask
+    )
+    np.testing.assert_array_equal(np.asarray(fused.regs), np.asarray(oracle.regs))
+    # All-masked batch: the oracle must be a strict no-op as well.
+    none = sketch_array.update_reference(
+        cfg, sketch_array.init(cfg, 6), keys, ids, w, mask=np.zeros(350, bool)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(none.regs), np.asarray(sketch_array.init(cfg, 6).regs)
+    )
+
+
+def test_merge_rejects_mismatched_shapes():
+    cfg = SketchConfig(m=64, b=8, seed=5)
+    a = sketch_array.init(cfg, 4)
+    with pytest.raises(ValueError, match="matching"):
+        sketch_array.merge(a, sketch_array.init(cfg, 5))
+    with pytest.raises(ValueError, match="matching"):
+        sketch_array.merge(a, sketch_array.init(SketchConfig(m=128, b=8, seed=5), 4))
+
+
+def test_row_rejects_out_of_range():
+    cfg = SketchConfig(m=64, b=8, seed=5)
+    st = sketch_array.init(cfg, 4)
+    with pytest.raises(IndexError):
+        sketch_array.row(st, 4)
+    with pytest.raises(IndexError):
+        sketch_array.row(st, -1)
+
+
+def test_estimate_all_untouched_rows_zero_with_flag():
+    """Fresh rows must report Ĉ = 0 and converged=False (degenerate all-r_min
+    likelihood has no interior extremum); touched rows report converged=True."""
+    cfg = SketchConfig(m=128, b=8, seed=21)
+    k = 5
+    st = sketch_array.init(cfg, k)
+    est0, _, conv0 = sketch_array.estimate_all_with_ci(cfg, st)
+    np.testing.assert_array_equal(np.asarray(est0), 0.0)
+    assert not np.asarray(conv0).any()
+
+    keys = jnp.full((400,), 2, jnp.int32)  # traffic only on row 2
+    ids = jnp.asarray(np.arange(400, dtype=np.uint32))
+    w = jnp.ones((400,), jnp.float32)
+    st = sketch_array.update(cfg, st, keys, ids, w)
+    est, _, conv = sketch_array.estimate_all_with_ci(cfg, st)
+    est, conv = np.asarray(est), np.asarray(conv)
+    assert est[2] > 0 and conv[2]
+    untouched = np.arange(k) != 2
+    np.testing.assert_array_equal(est[untouched], 0.0)
+    assert not conv[untouched].any()
+
+
 def test_masked_rows_are_noops():
     cfg = SketchConfig(m=64, b=8, seed=4)
     keys, ids, w = _keyed_stream(400, 5, seed=21)
@@ -175,6 +237,54 @@ def test_array_monitor_per_key_estimates():
         )
     )
     np.testing.assert_array_equal(est, direct)
+
+
+def test_array_monitor_sparse_keys_via_directory():
+    """update_array with dcfg routes sparse 64-bit tenant ids statelessly."""
+    from repro.core import key_directory
+    from repro.core.key_directory import DirectoryConfig
+
+    cfg = SketchConfig(m=64, b=8, seed=18)
+    dcfg = DirectoryConfig(capacity=16, seed=19)
+    rng = np.random.default_rng(91)
+    keys = key_directory.split_uint64(rng.integers(0, 2**64, 200, dtype=np.uint64))
+    ids = jnp.asarray(rng.integers(0, 2**32, 200, dtype=np.uint32))
+    w = jnp.asarray(rng.uniform(0.5, 1.5, 200).astype(np.float32))
+
+    st = monitor.update_array(cfg, monitor.init_array(cfg, 16), keys, ids, w, dcfg=dcfg)
+    slots = key_directory.route_slots(dcfg, keys)
+    ref = monitor.update_array(cfg, monitor.init_array(cfg, 16), slots, ids, w)
+    np.testing.assert_array_equal(np.asarray(st.regs), np.asarray(ref.regs))
+    assert int(st.n_seen) == 200
+
+
+def test_kernel_tenants_op_matches_core():
+    """Pallas-backed sparse-tenant entry == core update_tenants, bitwise,
+    telemetry included."""
+    from repro.core import key_directory
+    from repro.core.key_directory import DirectoryConfig
+
+    cfg = SketchConfig(m=128, b=8, seed=22)
+    dcfg = DirectoryConfig(capacity=9, seed=23)
+    rng = np.random.default_rng(92)
+    keys = key_directory.split_uint64(rng.integers(0, 2**64, 300, dtype=np.uint64))
+    ids = jnp.asarray(rng.integers(0, 2**32, 300, dtype=np.uint32))
+    w = jnp.asarray(rng.uniform(0.5, 1.5, 300).astype(np.float32))
+    mask = jnp.asarray(rng.random(300) < 0.7)
+
+    st_k, dir_k = ops.sketch_array_update_tenants_op(
+        cfg, dcfg, sketch_array.init(cfg, 9), key_directory.init(dcfg),
+        keys, ids, w, mask=mask, interpret=True,
+    )
+    st_c, dir_c = sketch_array.update_tenants(
+        cfg, dcfg, sketch_array.init(cfg, 9), key_directory.init(dcfg),
+        keys, ids, w, mask=mask,
+    )
+    np.testing.assert_array_equal(np.asarray(st_k.regs), np.asarray(st_c.regs))
+    np.testing.assert_array_equal(
+        np.asarray(dir_k.fingerprints), np.asarray(dir_c.fingerprints)
+    )
+    assert int(dir_k.n_routed) == int(dir_c.n_routed)
 
 
 def test_array_monitor_merge():
