@@ -1,0 +1,166 @@
+"""DynArray: fused keyed Dyn update vs the K-loop oracle, and the headline —
+O(K)-anytime estimate reads vs the SketchArray vmapped Newton.
+
+Two questions this suite answers (ROADMAP: "estimate_all at K ~ 1e6"):
+
+  * update — what does maintaining per-key histograms + martingales cost per
+    element vs (a) the naive K-loop of single ``qsketch_dyn`` sketches
+    (dispatch-bound, like the SketchArray naive loop) and (b) the plain
+    ``sketch_array`` update that defers all estimation cost to query time?
+  * estimate — at K ∈ {2^10 .. 2^20}, how does reading the running chats
+    (``dyn_array.estimate_all``, a device->host transfer of K floats)
+    compare to ``sketch_array.estimate_all`` (O(K·2^b) vmapped Newton)? The
+    acceptance bar is >= 100x at K = 2^20.
+
+The sweep is cumulative: quick/smoke runs re-measure only the small-K cells
+and MERGE into experiments/bench/dyn_array.json, preserving the paper-scale
+K = 2^20 rows produced by ``--full`` — otherwise every CI smoke would erase
+the expensive evidence.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    SketchArrayState,
+    SketchConfig,
+    dyn_array,
+    qsketch_dyn,
+    sketch_array,
+)
+
+from . import common
+
+
+def _keyed_batches(n_keys, n_batches, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_batches):
+        keys = jnp.asarray(rng.integers(0, n_keys, batch, dtype=np.int32))
+        ids = jnp.asarray(rng.integers(0, 2**32, batch, dtype=np.uint32))
+        w = jnp.asarray((rng.gamma(1.0, 2.0, batch) + 1e-5).astype(np.float32))
+        out.append((keys, ids, w))
+    return out
+
+
+def _throughput(update_fn, state, batches):
+    state = update_fn(state, *batches[0])  # warm: compile + occupancy
+    jax.block_until_ready(jax.tree.leaves(state))
+    t0 = time.perf_counter()
+    n = 0
+    for keys, ids, w in batches[1:]:
+        state = update_fn(state, keys, ids, w)
+        n += len(ids)
+    jax.block_until_ready(jax.tree.leaves(state))
+    return n / (time.perf_counter() - t0), state
+
+
+def _merge_save(name, rows, swept_ks):
+    """Cumulative save: keep prior rows whose k was NOT re-measured."""
+    path = os.path.join(common.RESULTS_DIR, f"{name}.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            old = json.load(f)
+        rows = [r for r in old if r.get("k") not in swept_ks] + rows
+    return common.save(name, rows)
+
+
+def run(quick=True):
+    rows = []
+
+    # --- fused DynArray vs K-loop of single Dyn sketches -------------------
+    n_keys, m, batch = 256, 128, 4096
+    n_batches = 4 if quick else 10
+    cfg = SketchConfig(m=m, b=8, seed=5)
+    batches = _keyed_batches(n_keys, n_batches, batch, seed=7)
+
+    eps_fused, st_fused = _throughput(
+        lambda s, k, i, w: dyn_array.update_batch(cfg, s, k, i, w),
+        dyn_array.init(cfg, n_keys),
+        batches,
+    )
+
+    def loop_update(states, keys, ids, w):
+        keys_np = np.asarray(keys)
+        order = np.argsort(keys_np, kind="stable")
+        ids_np, w_np = np.asarray(ids)[order], np.asarray(w)[order]
+        bounds = np.searchsorted(keys_np[order], np.arange(n_keys + 1))
+        for k in range(n_keys):
+            lo, hi = bounds[k], bounds[k + 1]
+            if lo == hi:
+                continue
+            states[k] = qsketch_dyn.update_batch(
+                cfg, states[k], jnp.asarray(ids_np[lo:hi]), jnp.asarray(w_np[lo:hi])
+            )
+        return states
+
+    eps_loop, states_loop = _throughput(
+        loop_update, [qsketch_dyn.init(cfg) for _ in range(n_keys)], batches
+    )
+    # The schedules must agree: registers/hists bitwise, chats to f32 noise.
+    loop_regs = np.stack([np.asarray(s.regs) for s in states_loop])
+    if not np.array_equal(np.asarray(st_fused.regs), loop_regs):
+        raise AssertionError("fused and K-loop DynArray registers diverged")
+    loop_chats = np.array([float(s.chat) for s in states_loop])
+    if not np.allclose(np.asarray(st_fused.chats), loop_chats, rtol=1e-4):
+        raise AssertionError("fused and K-loop DynArray chats diverged")
+
+    speedup = eps_fused / eps_loop
+    rows += [
+        {"figure": "dyn_array_throughput", "method": "fused", "k": n_keys, "m": m, "mops": eps_fused / 1e6},
+        {"figure": "dyn_array_throughput", "method": "k_loop", "k": n_keys, "m": m, "mops": eps_loop / 1e6},
+        {"figure": "dyn_array_throughput", "method": "speedup", "k": n_keys, "m": m, "x": speedup},
+    ]
+    common.csv_row(f"dyn_array/K{n_keys}/m{m}/fused", 1e6 / eps_fused, f"mops={eps_fused/1e6:.3f}")
+    common.csv_row(f"dyn_array/K{n_keys}/m{m}/k_loop", 1e6 / eps_loop, f"mops={eps_loop/1e6:.3f}")
+    common.csv_row(f"dyn_array/K{n_keys}/m{m}/speedup", 0.0, f"fused/loop={speedup:.1f}x")
+
+    # --- anytime read vs vmapped-Newton estimate_all, K sweep --------------
+    m_est, batch_est = 128, 65536
+    ks = [2**10, 2**14] if quick else [2**10, 2**14, 2**17, 2**20]
+    for k in ks:
+        cfg_k = SketchConfig(m=m_est, b=8, seed=17)
+        # Load enough traffic that most rows are live: Newton on an untouched
+        # row exits immediately and would undersell the MLE cost.
+        n_load = max(4 * k, batch_est)
+        dyn_st = dyn_array.init(cfg_k, k)
+        arr_st = sketch_array.init(cfg_k, k)
+        rng = np.random.default_rng(k)
+        for i in range(0, n_load, batch_est):
+            keys = jnp.asarray(rng.integers(0, k, batch_est, dtype=np.int32))
+            ids = jnp.asarray(rng.integers(0, 2**32, batch_est, dtype=np.uint32))
+            w = jnp.asarray((rng.gamma(1.0, 2.0, batch_est) + 1e-5).astype(np.float32))
+            dyn_st = dyn_array.update_batch(cfg_k, dyn_st, keys, ids, w)
+            arr_st = sketch_array.update(cfg_k, arr_st, keys, ids, w)
+        jax.block_until_ready((dyn_st.chats, arr_st.regs))
+        live = float(np.mean(np.asarray(dyn_st.chats) > 0))
+
+        iters = 3 if k <= 2**14 else 1
+        t_read = common.time_fn(
+            lambda s: np.asarray(dyn_array.estimate_all(s)), dyn_st, warmup=1, iters=iters
+        )
+        t_newton = common.time_fn(
+            lambda r: sketch_array.estimate_all(cfg_k, SketchArrayState(regs=r)),
+            arr_st.regs, warmup=1, iters=iters,
+        )
+        x = t_newton / max(t_read, 1e-9)
+        rows += [
+            {"figure": "dyn_array_estimate", "method": "anytime_read", "k": k, "m": m_est, "ms": t_read * 1e3, "live_frac": live},
+            {"figure": "dyn_array_estimate", "method": "newton_mle", "k": k, "m": m_est, "ms": t_newton * 1e3, "live_frac": live},
+            {"figure": "dyn_array_estimate", "method": "speedup", "k": k, "m": m_est, "x": x},
+        ]
+        common.csv_row(f"dyn_array_estimate/K{k}/anytime_read", t_read * 1e6, f"ms={t_read*1e3:.3f}")
+        common.csv_row(f"dyn_array_estimate/K{k}/newton_mle", t_newton * 1e6, f"ms={t_newton*1e3:.1f}")
+        common.csv_row(
+            f"dyn_array_estimate/K{k}/speedup", 0.0, f"newton/read={x:.0f}x (>=100x required at K=2^20)"
+        )
+
+    _merge_save("dyn_array", rows, {n_keys, *ks})
+    return rows

@@ -15,8 +15,8 @@ from __future__ import annotations
 import argparse
 import time
 
-# Fast enough for CI while still covering the fused + sharded paths.
-SMOKE_SUITES = ("sketch_array", "sketch_array_sharded")
+# Fast enough for CI while still covering the fused + sharded + Dyn paths.
+SMOKE_SUITES = ("sketch_array", "sketch_array_sharded", "dyn_array")
 
 
 def main() -> None:
@@ -32,6 +32,7 @@ def main() -> None:
     from . import (
         accuracy,
         batch_bias,
+        dyn_array,
         kernels,
         netflow,
         register_size,
@@ -48,6 +49,7 @@ def main() -> None:
         "kernels": kernels.run,  # kernel block sweep + core throughput
         "sketch_array": sketch_array.run,  # fused K-sketch vs naive loop
         "sketch_array_sharded": sketch_array.run_sharded,  # mesh-sharded K sweep
+        "dyn_array": dyn_array.run,  # anytime reads vs Newton estimate_all
     }
     only = [s for s in args.only.split(",") if s]
     names = only or (list(SMOKE_SUITES) if args.smoke else list(suite))

@@ -17,6 +17,7 @@ Baselines (LM / FastGM / FastExpSketch) live in ``baselines``; the uniform
 
 from . import (
     baselines,
+    dyn_array,
     estimators,
     hashing,
     key_directory,
@@ -27,6 +28,7 @@ from . import (
 )
 from .key_directory import DirectoryConfig, DirectoryState
 from .types import (
+    DynArrayState,
     DynState,
     FloatSketchState,
     QSketchState,
@@ -83,12 +85,14 @@ __all__ = [
     "ShardedArrayState",
     "DirectoryConfig",
     "DirectoryState",
+    "DynArrayState",
     "DynState",
     "FloatSketchState",
     "qsketch",
     "qsketch_dyn",
     "sketch_array",
     "sharded_array",
+    "dyn_array",
     "key_directory",
     "baselines",
     "estimators",

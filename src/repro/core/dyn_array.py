@@ -1,0 +1,281 @@
+"""DynArray: K independent QSketch-Dyn sketches with O(1)-anytime reads.
+
+``core/sketch_array.py`` gives K QSketches one fused keyed update, but every
+``estimate_all`` query still pays the O(K·2^b) vmapped Newton — 55 s at
+K = 2^20 on the host mesh (ROADMAP). ``qsketch_dyn`` already carries the
+paper's §4.3 martingale, which makes the estimate a running scalar that is
+simply *read*. This module lifts that to the keyed array: per-tenant
+weighted cardinality becomes an O(K) device read (``estimate_all`` returns
+``state.chats``), paid for by a slightly heavier update that maintains
+per-key histograms and martingales.
+
+State (``DynArrayState``): ``int8[K, m]`` registers + ``int32[K, 2^b]``
+touched-register histograms + ``f32[K]`` running estimates. Row k is
+bit-identical to a standalone ``DynState`` fed the key-k sub-stream — the
+register choice g(x) and quantized value y(x, w) never see the key, dedup is
+per (key, id), and each element's update probability q_R comes from ITS
+key's batch-start histogram (Eq. 12 semantics per row). The K-loop oracle
+``update_reference`` verifies this (registers/histograms bitwise; chats
+accumulate the same per-key terms in a different — but fixed — float32
+association order, equal to the loop within rounding).
+
+Update cost is O(B log B) (dedup sort) + O(B·2^b) (q_R) + O(B) scatters —
+independent of K. The histogram is maintained *incrementally*: each register
+changed by the batch moves one unit of mass old-bin -> new-bin, counted once
+via a per-(key, register) dedup — exactly equivalent to the single sketch's
+rebuild-from-registers because untouched registers hold r_min and bin 0 is
+pinned to zero (asserted against ``rebuild_hists`` in tests).
+
+Keyed martingale semantics (DESIGN.md §8.4): per-key chats ARE additive
+across disjoint batches of one stream (the martingale telescopes), but NOT
+across shards/pods that may have seen the same element — cross-shard
+``merge`` therefore max-merges registers and re-estimates every chat with
+the per-key histogram MLE, mirroring ``qsketch_dyn.merge``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import estimators, hashing, key_directory, qsketch_dyn
+from .types import DynArrayState, DynState, SketchConfig
+
+
+def init(cfg: SketchConfig, k: int) -> DynArrayState:
+    """K fresh Dyn sketches; K is carried by the state shape, cfg stays shared."""
+    if k < 1:
+        raise ValueError("DynArray needs k >= 1 sketches")
+    return DynArrayState(
+        regs=jnp.full((k, cfg.m), cfg.r_min, dtype=jnp.int8),
+        hists=jnp.zeros((k, cfg.num_bins), dtype=jnp.int32),
+        chats=jnp.zeros((k,), dtype=jnp.float32),
+    )
+
+
+def num_sketches(state: DynArrayState) -> int:
+    return state.regs.shape[0]
+
+
+def row(state: DynArrayState, k: int) -> DynState:
+    """Extract sketch k as a standalone (bit-identical) DynState.
+
+    Host-side API: ``k`` must be a concrete int in [0, K).
+    """
+    n = state.regs.shape[0]
+    if not 0 <= k < n:
+        raise IndexError(f"dyn sketch row {k} out of range for K={n}")
+    return DynState(regs=state.regs[k], hist=state.hists[k], chat=state.chats[k])
+
+
+def _keyed_dedup_mask(keys, lo, hi, live):
+    """First live occurrence per (key, id): the per-key form of
+    ``qsketch_dyn._dedup_mask``. Same id under two keys is two distinct
+    elements (one per sketch); live rows sort ahead of dead rows of the same
+    (key, id) so padding can never shadow a live element (the fixed
+    dedup/mask ordering contract, DESIGN.md §4.2)."""
+    dead = (~live).astype(jnp.uint32)
+    order = jnp.lexsort((dead, lo, hi, keys))
+    sk, slo, shi = keys[order], lo[order], hi[order]
+    first = jnp.concatenate(
+        [
+            jnp.array([True]),
+            (sk[1:] != sk[:-1]) | (slo[1:] != slo[:-1]) | (shi[1:] != shi[:-1]),
+        ]
+    )
+    mask = jnp.zeros_like(first).at[order].set(first)
+    return mask
+
+
+def _apply_update(cfg: SketchConfig, state: DynArrayState, keys, lo, hi, w, live, q):
+    """Shared tail of the jnp and Pallas-backed update paths: dedup, batch-
+    start change indicators, register scatter-max, incremental histogram
+    moves, per-key martingale accumulation. ``q`` is the per-element update
+    probability from the element's key's batch-start histogram."""
+    j, y = qsketch_dyn._choose_and_quantize(cfg, lo, hi, w)
+
+    alive = _keyed_dedup_mask(keys, lo, hi, live) & live
+    old = state.regs[keys, j].astype(jnp.int32)
+    changed = alive & (y > old)
+
+    chats = state.chats.at[keys].add(jnp.where(changed, w / q, 0.0))
+
+    # y_eff is r_min (unchanged) or in (old, r_max] (changed), so the
+    # scatter-max runs on int8 directly — no int32 round-trip of the whole
+    # [K, m] matrix on the hot path.
+    y_eff = jnp.where(changed, y, jnp.int32(cfg.r_min))
+    regs = state.regs.at[keys, j].max(y_eff.astype(jnp.int8))
+
+    # Incremental histogram: every register the batch changed moves one unit
+    # of mass old-bin -> final-bin, counted ONCE per (key, register) — the
+    # gathered final value is identical for every element routed there, so
+    # any first occurrence may report it. Equivalent to a full rebuild
+    # (bin 0 pinned to zero) at O(B) instead of O(K·m).
+    final = regs[keys, j].astype(jnp.int32)
+    reg_order = jnp.lexsort((j, keys))
+    rk, rj = keys[reg_order], j[reg_order]
+    reg_first = jnp.concatenate(
+        [jnp.array([True]), (rk[1:] != rk[:-1]) | (rj[1:] != rj[:-1])]
+    )
+    reg_first = jnp.zeros_like(reg_first).at[reg_order].set(reg_first)
+    reg_changed = reg_first & (final > old)
+    dec = reg_changed & (old > cfg.r_min)  # old at r_min was never tracked
+    hists = state.hists.at[keys, old - cfg.r_min].add(jnp.where(dec, -1, 0))
+    hists = hists.at[keys, final - cfg.r_min].add(jnp.where(reg_changed, 1, 0))
+    return DynArrayState(regs=regs, hists=hists, chats=chats)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def update_batch(
+    cfg: SketchConfig, state: DynArrayState, keys, ids, weights, mask=None
+) -> DynArrayState:
+    """One fused keyed batch, batch-stale per row (qsketch_dyn.update_batch
+    semantics lifted to K rows).
+
+    keys: int[B] in [0, K) routing each element to its sketch row;
+      out-of-range keys are clipped (callers pad with key 0 + mask=False).
+    mask: optional bool[B]; masked rows and degenerate (non-positive /
+      non-finite) weights are dropped before dedup — they neither shadow a
+      live duplicate nor enter the martingale.
+    """
+    k = state.regs.shape[0]
+    lo, hi = hashing.split_id64(ids)
+    w = weights.astype(jnp.float32)
+    keys = jnp.clip(keys.astype(jnp.int32), 0, k - 1)
+    live = qsketch_dyn._live_weight_mask(w, mask)
+    # Per-element q_R against the element's key's batch-start histogram —
+    # the same expression as the single sketch, broadcast over gathered rows.
+    q = qsketch_dyn._q_update_prob(cfg, state.hists[keys], w)
+    return _apply_update(cfg, state, keys, lo, hi, w, live, q)
+
+
+def rebuild_hists(cfg: SketchConfig, regs) -> jnp.ndarray:
+    """Per-key touched-register histograms from scratch (bin 0 pinned to 0).
+
+    O(K·m) — the reference the incremental maintenance is tested against,
+    and the rebuild used by ``merge``.
+    """
+    hists = jax.vmap(lambda r: estimators.histogram(cfg, r))(regs)
+    return hists.at[:, 0].set(0)
+
+
+def estimate_all(state: DynArrayState) -> jnp.ndarray:
+    """Ĉ for every sketch: a pure O(K) read of the running martingales.
+
+    This is the whole point of the Dyn array — no Newton, no histogram walk;
+    at K = 2^20 this is a device read where ``sketch_array.estimate_all``
+    pays an O(K·2^b) vmapped solve (benchmarks/dyn_array.py).
+    """
+    return state.chats
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def estimate_mle_all(cfg: SketchConfig, state: DynArrayState) -> jnp.ndarray:
+    """Per-key histogram-MLE re-estimate from the registers, Ĉ[K].
+
+    The vmapped form of ``qsketch_dyn.estimate_mle`` (each row's MLE recovers
+    C_k/m and is scaled by m); untouched rows report 0. Use after cross-shard
+    merges or as a self-check — the hot path reads ``estimate_all``.
+    """
+
+    def one(regs_row):
+        hist = estimators.histogram(cfg, regs_row)
+        chat, _, _ = estimators.qsketch_mle(cfg, hist)
+        return jnp.where(hist[0] == cfg.m, jnp.float32(0.0), chat * cfg.m)
+
+    return jax.vmap(one)(state.regs)
+
+
+def merge(cfg: SketchConfig, a: DynArrayState, b: DynArrayState) -> DynArrayState:
+    """Merge two fleets sketching (possibly overlapping) sub-streams.
+
+    Registers: row-wise max (exact union). Histograms: rebuilt. Chats:
+    re-estimated per key via the histogram MLE — running martingales are NOT
+    additive across shards that may share elements (DESIGN.md §8.4), exactly
+    as in ``qsketch_dyn.merge``. Shapes must agree: a (K, m) mismatch means
+    different tenant spaces / register geometries.
+    """
+    if a.regs.shape != b.regs.shape:
+        raise ValueError(
+            f"DynArray merge needs matching (K, m), got {a.regs.shape} vs {b.regs.shape}"
+        )
+    regs = jnp.maximum(a.regs, b.regs)
+    merged = DynArrayState(
+        regs=regs, hists=rebuild_hists(cfg, regs), chats=a.chats
+    )
+    return merged._replace(chats=estimate_mle_all(cfg, merged))
+
+
+def merge_disjoint(cfg: SketchConfig, a: DynArrayState, b: DynArrayState) -> DynArrayState:
+    """Merge fleets whose streams are known element-disjoint: chats ADD.
+
+    The production sharding is BY KEY — a tenant's stream lands on exactly
+    one shard — so two shards never see the same element and the per-key
+    martingales telescope across them: Ĉ_merged = Ĉ_a + Ĉ_b, exactly and
+    with no MLE (which ``merge`` needs for possibly-overlapping streams and
+    which is misspecified for lightly-loaded rows, DESIGN.md §8.4).
+    Registers still max-merge (the union sketch) and histograms rebuild, so
+    subsequent batches see correct q_R state. The caller asserts
+    disjointness; on overlapping streams this double-counts.
+    """
+    if a.regs.shape != b.regs.shape:
+        raise ValueError(
+            f"DynArray merge needs matching (K, m), got {a.regs.shape} vs {b.regs.shape}"
+        )
+    regs = jnp.maximum(a.regs, b.regs)
+    return DynArrayState(
+        regs=regs, hists=rebuild_hists(cfg, regs), chats=a.chats + b.chats
+    )
+
+
+def update_tenants(
+    cfg: SketchConfig,
+    dcfg: key_directory.DirectoryConfig,
+    state: DynArrayState,
+    dir_state: key_directory.DirectoryState,
+    tenant_keys,
+    ids,
+    weights,
+    mask=None,
+):
+    """Sparse-tenant entry: route 64-bit tenant ids through the key directory,
+    then run the fused keyed update. Returns (state, directory telemetry) —
+    the same production contract as ``sketch_array.update_tenants``.
+    """
+    if dcfg.capacity != state.regs.shape[0]:
+        raise ValueError(
+            f"directory capacity {dcfg.capacity} != DynArray rows {state.regs.shape[0]}"
+        )
+    slots, dir_state = key_directory.route(dcfg, dir_state, tenant_keys, mask=mask)
+    return update_batch(cfg, state, slots, ids, weights, mask=mask), dir_state
+
+
+def update_reference(
+    cfg: SketchConfig, state: DynArrayState, keys, ids, weights, mask=None
+) -> DynArrayState:
+    """Oracle: partition the stream by key (order preserved), run K
+    independent ``qsketch_dyn.update_batch`` calls. O(K) dispatches —
+    tests/benchmarks only, never the hot path. ``mask`` rows are dropped from
+    their key's sub-stream entirely, so padded batches are verified too.
+    """
+    import numpy as np
+
+    keys_np = np.asarray(jnp.clip(keys.astype(jnp.int32), 0, state.regs.shape[0] - 1))
+    live = np.ones(keys_np.shape, bool) if mask is None else np.asarray(mask)
+    ids_np, w_np = np.asarray(ids), np.asarray(weights)
+    rows = []
+    for k in range(state.regs.shape[0]):
+        st_k = DynState(regs=state.regs[k], hist=state.hists[k], chat=state.chats[k])
+        sel = (keys_np == k) & live
+        if sel.any():
+            st_k = qsketch_dyn.update_batch(
+                cfg, st_k, jnp.asarray(ids_np[sel]), jnp.asarray(w_np[sel])
+            )
+        rows.append(st_k)
+    return DynArrayState(
+        regs=jnp.stack([r.regs for r in rows]),
+        hists=jnp.stack([r.hist for r in rows]),
+        chats=jnp.stack([r.chat for r in rows]),
+    )

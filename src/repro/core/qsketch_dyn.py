@@ -77,11 +77,14 @@ def _q_update_prob(cfg: SketchConfig, hist, w):
 
 @functools.partial(jax.jit, static_argnums=(0,))
 def update_scan(cfg: SketchConfig, state: DynState, ids, weights, mask=None) -> DynState:
-    """Exact sequential update of a batch (Alg. 3 semantics, Eq. 12 estimator)."""
+    """Exact sequential update of a batch (Alg. 3 semantics, Eq. 12 estimator).
+
+    Degenerate (non-positive / non-finite) weights are dropped as if masked —
+    same contract as ``update_batch``.
+    """
     lo, hi = hashing.split_id64(ids)
     w = weights.astype(jnp.float32)
-    if mask is None:
-        mask = jnp.ones_like(w, dtype=bool)
+    mask = _live_weight_mask(w, mask)
 
     def step(carry, inp):
         regs, hist, chat = carry
@@ -104,9 +107,34 @@ def update_scan(cfg: SketchConfig, state: DynState, ids, weights, mask=None) -> 
     return DynState(regs=regs, hist=hist, chat=chat)
 
 
-def _dedup_mask(lo, hi):
-    """Exact within-batch first-occurrence mask via sort on the id pair."""
-    order = jnp.lexsort((lo, hi))
+def _live_weight_mask(w, mask):
+    """Rows that may touch the sketch: caller mask AND a usable weight.
+
+    Non-positive / non-finite weights are *dropped as if masked* rather than
+    quantized to a silent r_min floor: a degenerate w can never raise a
+    register, but before this guard it still competed in the within-batch
+    dedup, where a w=0 duplicate sorting first would shadow a live positive
+    row of the same id out of the batch entirely.
+    """
+    live = jnp.isfinite(w) & (w > 0)
+    return live if mask is None else live & mask
+
+
+def _dedup_mask(lo, hi, live=None):
+    """Exact within-batch first-occurrence mask via sort on the id pair.
+
+    ``live`` joins the sort as the LAST lexsort key (after the id pair), so
+    live rows order ahead of dead (padding / degenerate-weight) rows sharing
+    their id: the first-occurrence winner of any id group that contains a
+    live row is itself live. Computing first-occurrence over all rows and
+    intersecting with the mask afterwards — the pre-fix behaviour — let a
+    padded duplicate claim the slot and silently drop the live row's weight.
+    Ties among live rows keep batch order (lexsort is stable).
+    """
+    dead = (
+        jnp.zeros(lo.shape, jnp.uint32) if live is None else (~live).astype(jnp.uint32)
+    )
+    order = jnp.lexsort((dead, lo, hi))
     slo, shi = lo[order], hi[order]
     first = jnp.concatenate(
         [jnp.array([True]), (slo[1:] != slo[:-1]) | (shi[1:] != shi[:-1])]
@@ -122,14 +150,20 @@ def update_batch(cfg: SketchConfig, state: DynState, ids, weights, mask=None) ->
     Exact within-batch dedup; register scatter-max; histogram rebuilt from
     registers (equivalent to the incremental moves because untouched
     registers hold r_min and bin 0 is pinned to zero).
+
+    Dedup/mask ordering contract (DESIGN.md §4.2): first-occurrence is
+    decided among *live* rows only — ``mask=False`` padding rows and
+    degenerate (non-positive / non-finite) weights are dropped before they
+    can shadow a live row sharing their id. Within-batch duplicates are
+    assumed to carry the element's weight (weight is a function of the id,
+    the paper's weighted-stream model); the first live occurrence wins.
     """
     lo, hi = hashing.split_id64(ids)
     w = weights.astype(jnp.float32)
     j, y = _choose_and_quantize(cfg, lo, hi, w)
 
-    alive = _dedup_mask(lo, hi)
-    if mask is not None:
-        alive = alive & mask
+    live = _live_weight_mask(w, mask)
+    alive = _dedup_mask(lo, hi, live) & live
 
     old = state.regs[j].astype(jnp.int32)
     changed = alive & (y > old)
@@ -168,10 +202,16 @@ def estimate_mle(cfg: SketchConfig, state: DynState):
     above r_min' event, whose probability e^{-C_j 2^{-(r_min+1)}} is exactly
     the truncated-low bin of the same likelihood (empty sub-stream -> C_j=0
     -> probability 1), so untouched registers need no special-casing.
+
+    Fully untouched state (all registers at r_min, hist all zero): Ĉ = 0 by
+    contract — guarded explicitly here rather than relying on the MLE's
+    internal all-r_min degenerate fallback, the same untouched-row contract
+    as ``sketch_array.estimate_all``.
     """
     hist = estimators.histogram(cfg, state.regs)
+    untouched = hist[0] == cfg.m
     chat, _, _ = estimators.qsketch_mle(cfg, hist)
-    return chat * cfg.m
+    return jnp.where(untouched, jnp.float32(0.0), chat * cfg.m)
 
 
 def merge(cfg: SketchConfig, a: DynState, b: DynState) -> DynState:
@@ -179,7 +219,9 @@ def merge(cfg: SketchConfig, a: DynState, b: DynState) -> DynState:
 
     Registers: element-wise max (exact union semantics).
     Histogram: rebuilt. Running Ĉ: re-estimated via MLE — the local running
-    estimates are NOT additive when sub-streams may share elements.
+    estimates are NOT additive when sub-streams may share elements. Merging
+    two fully untouched states yields Ĉ = 0 (empty union), not an MLE
+    iteration on an empty histogram.
     """
     regs = jnp.maximum(a.regs, b.regs)
     hist = jnp.zeros((cfg.num_bins,), jnp.int32).at[
@@ -189,8 +231,10 @@ def merge(cfg: SketchConfig, a: DynState, b: DynState) -> DynState:
     # Full histogram (including untouched registers in bin 0) for the MLE;
     # the stored hist keeps the Alg.-3 'touched only' convention.
     full_hist = hist.at[0].set(cfg.m - jnp.sum(hist))
+    untouched = full_hist[0] == cfg.m
     chat, _, _ = estimators.qsketch_mle(cfg, full_hist)
-    return DynState(regs=regs, hist=hist, chat=chat * cfg.m)
+    chat = jnp.where(untouched, jnp.float32(0.0), chat * cfg.m)
+    return DynState(regs=regs, hist=hist, chat=chat)
 
 
 # ---------------------------------------------------------------------------
@@ -198,14 +242,24 @@ def merge(cfg: SketchConfig, a: DynState, b: DynState) -> DynState:
 # ---------------------------------------------------------------------------
 
 
-def update_numpy(cfg: SketchConfig, ids_lo, ids_hi, weights):
-    """Pure-numpy sequential reference; returns (regs, hist, chat)."""
+def update_numpy(cfg: SketchConfig, ids_lo, ids_hi, weights, mask=None):
+    """Pure-numpy sequential reference; returns (regs, hist, chat).
+
+    ``mask`` mirrors the jit'd paths; degenerate (non-positive / non-finite)
+    weights are likewise dropped, so the oracle verifies the live-row
+    contract and never evaluates log2 of a non-positive w.
+    """
     regs = np.full(cfg.m, cfg.r_min, dtype=np.int64)
     hist = np.zeros(cfg.num_bins, dtype=np.int64)
     chat = 0.0
     ks = np.arange(cfg.num_bins, dtype=np.float64) + cfg.r_min + 1.0
     s = np.exp2(-ks)
-    for xlo, xhi, w in zip(np.asarray(ids_lo), np.asarray(ids_hi), np.asarray(weights)):
+    live = np.ones(np.asarray(ids_lo).shape, bool) if mask is None else np.asarray(mask)
+    for xlo, xhi, w, lv in zip(
+        np.asarray(ids_lo), np.asarray(ids_hi), np.asarray(weights), live
+    ):
+        if not (lv and np.isfinite(w) and w > 0):
+            continue
         jl = hashing.hash_mod(
             (jnp.uint32(int(xlo)), jnp.uint32(int(xhi))), cfg.salt_g, cfg.m
         )

@@ -115,6 +115,20 @@ class DynState(NamedTuple):
     chat: jnp.ndarray  # float32 scalar, running weighted-cardinality estimate
 
 
+class DynArrayState(NamedTuple):
+    """K independent QSketch-Dyn sketches as one state (core/dyn_array.py).
+
+    Row k is the key-k sub-stream's ``DynState`` (same cfg, same hash family
+    — the key never enters the hash), so registers and histograms are
+    bit-identical to a K-loop of single Dyn sketches and ``estimate_all`` is
+    a pure O(K) read of the running martingales — no per-query Newton.
+    """
+
+    regs: jnp.ndarray  # int8[K, m]
+    hists: jnp.ndarray  # int32[K, 2^b]; per-key counts of *touched* registers
+    chats: jnp.ndarray  # float32[K], running weighted-cardinality estimates
+
+
 class FloatSketchState(NamedTuple):
     """LM / FastGM / FastExpSketch state: float32 min-registers."""
 

@@ -22,15 +22,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hashing, key_directory
+from repro.core import dyn_array, hashing, key_directory, qsketch_dyn
 from repro.core.types import (
+    DynArrayState,
     FloatSketchState,
     QSketchState,
     SketchArrayState,
     SketchConfig,
 )
 
-from . import qdyn_qr, qsketch_update, sketch_array_update
+from . import dyn_array_update, qdyn_qr, qsketch_update, sketch_array_update
 
 _NEG_INF = float(np.finfo(np.float32).min)
 _POS_INF = float(np.finfo(np.float32).max)
@@ -186,6 +187,84 @@ def sketch_array_update_tenants_op(
         )
     slots, dir_state = key_directory.route(dcfg, dir_state, tenant_keys, mask=mask)
     out = sketch_array_update_op(cfg, state, slots, ids, weights, mask=mask, **kernel_kwargs)
+    return out, dir_state
+
+
+def dyn_array_update_op(
+    cfg: SketchConfig,
+    state: DynArrayState,
+    keys,
+    ids,
+    weights,
+    mask=None,
+    *,
+    block_b: int | None = None,
+    interpret: bool | None = None,
+) -> DynArrayState:
+    """Kernel-backed equivalent of ``core.dyn_array.update_batch`` (bit-identical).
+
+    The dense inner stage — per-element q_R against the element's key's
+    batch-start histogram — runs in the Pallas kernel
+    (``kernels/dyn_array_update.py``) on gathered rows; the data-dependent
+    tail (dedup lexsort, segment scatter-max, incremental histogram moves)
+    is shared with the core path via ``dyn_array._apply_update``, so the two
+    entries agree bitwise on every state field.
+
+    ``keys`` follows the slot contract (dense int[B], clipped to [0, K));
+    sparse 64-bit tenant streams go through ``dyn_array_update_tenants_op``.
+    Padding batch rows carry w = 1 against a zero histogram row (q = 1) and
+    are sliced off before the tail.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    from repro.core import estimators
+
+    k = state.regs.shape[0]
+    lo, hi = hashing.split_id64(ids)
+    w = weights.astype(jnp.float32)
+    keys = jnp.clip(keys.astype(jnp.int32), 0, k - 1)
+    live = qsketch_dyn._live_weight_mask(w, mask)
+
+    b = lo.shape[0]
+    bb = block_b or min(dyn_array_update.DEFAULT_BLOCK_B, _round_up(b, 8))
+    bp = _round_up(b, bb)
+    nbp = _round_up(cfg.num_bins, 128)
+
+    scales = jnp.pad(
+        jnp.asarray(estimators._bin_scales(cfg)), ((0, nbp - cfg.num_bins),)
+    )[None, :]
+    rows = jnp.pad(
+        state.hists[keys].astype(jnp.float32),
+        ((0, bp - b), (0, nbp - cfg.num_bins)),
+    )
+    w2 = jnp.pad(w, ((0, bp - b),), constant_values=1.0)[:, None]
+
+    q = dyn_array_update.dyn_array_qr_padded(
+        w2, rows, scales, m=cfg.m, block_b=bb, interpret=interpret
+    )
+    q = jnp.maximum(q[:b, 0], qsketch_dyn._QR_FLOOR)
+    return dyn_array._apply_update(cfg, state, keys, lo, hi, w, live, q)
+
+
+def dyn_array_update_tenants_op(
+    cfg: SketchConfig,
+    dcfg: key_directory.DirectoryConfig,
+    state: DynArrayState,
+    dir_state: key_directory.DirectoryState,
+    tenant_keys,
+    ids,
+    weights,
+    mask=None,
+    **kernel_kwargs,
+):
+    """Sparse-tenant front of ``dyn_array_update_op`` (key-directory routing,
+    collision telemetry included). Returns (DynArrayState, DirectoryState).
+    """
+    if dcfg.capacity != state.regs.shape[0]:
+        raise ValueError(
+            f"directory capacity {dcfg.capacity} != DynArray rows {state.regs.shape[0]}"
+        )
+    slots, dir_state = key_directory.route(dcfg, dir_state, tenant_keys, mask=mask)
+    out = dyn_array_update_op(cfg, state, slots, ids, weights, mask=mask, **kernel_kwargs)
     return out, dir_state
 
 

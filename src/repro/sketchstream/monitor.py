@@ -45,6 +45,12 @@ hot keys — core/key_directory.py) and shards the [K, m] register matrix over
 a mesh axis (core/sharded_array.py), the path to K ~ 1e7 tenants. Train and
 serve steps thread a ``TelemetryState`` (scalar sketch + tenant array) when
 both monitors are on.
+
+Anytime per-tenant reads (fourth layer): ``DynArrayMonitor`` swaps the
+register matrix for ``core/dyn_array.py`` — per-key §4.3 martingales make
+``estimate`` an O(K) read instead of the O(K·2^b) vmapped Newton. Same
+init/update/estimate/merge/metrics surface, so train/serve steps accept
+either tenant monitor unchanged.
 """
 
 from __future__ import annotations
@@ -55,6 +61,7 @@ import jax.numpy as jnp
 
 from repro.core import (
     SketchConfig,
+    dyn_array,
     estimators,
     key_directory,
     qsketch,
@@ -62,7 +69,12 @@ from repro.core import (
     sketch_array,
 )
 from repro.core.key_directory import DirectoryConfig, DirectoryState
-from repro.core.types import QSketchState, ShardedArrayState, SketchArrayState
+from repro.core.types import (
+    DynArrayState,
+    QSketchState,
+    ShardedArrayState,
+    SketchArrayState,
+)
 
 
 class MonitorState(NamedTuple):
@@ -277,4 +289,106 @@ class ShardedArrayMonitor:
             "tenant_elements_seen": state.n_seen,
             "tenant_slots_claimed": jnp.sum((state.directory.fingerprints != 0).astype(jnp.int32)),
             "tenant_collision_rate": key_directory.collision_rate(state.directory),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Anytime per-tenant telemetry: QSketch-Dyn martingales, O(1) per-key reads
+# ---------------------------------------------------------------------------
+
+
+class DynArrayMonitorState(NamedTuple):
+    """Pytree state of a DynArrayMonitor (threads through jit/scan/ckpt)."""
+
+    regs: jnp.ndarray  # int8[K, m]
+    hists: jnp.ndarray  # int32[K, 2^b] batch-start q_R histograms
+    chats: jnp.ndarray  # f32[K] running per-tenant estimates
+    directory: DirectoryState  # key-collision telemetry
+    n_seen: jnp.ndarray  # int32 live-element counter across all tenants
+
+
+class DynArrayMonitor:
+    """Per-tenant weighted-cardinality telemetry with O(1)-anytime reads.
+
+    Same surface as ``ShardedArrayMonitor`` (init/update/estimate/merge/
+    metrics, sparse 64-bit tenant ids through the key directory) but backed
+    by ``core/dyn_array.py``: every update also advances a per-key §4.3
+    martingale, so ``estimate`` is a pure O(K) read of the running chats
+    instead of the O(K·2^b) vmapped Newton — the right trade at K ~ 1e6
+    when estimates are consumed every step (per-tenant DAU dashboards,
+    serving-time quota checks), at the cost of a heavier update (per-element
+    q_R + histogram maintenance).
+
+    Caveat (DESIGN.md §8.4): the running chats are per-STREAM martingales.
+    They are exact across disjoint batches folded into one state, but two
+    monitors that may have seen the same element must ``merge`` (register
+    max + per-key MLE re-estimate), never add their chats.
+
+    The instance is configuration (closed over by jit); all mutable data
+    lives in ``DynArrayMonitorState``.
+    """
+
+    def __init__(self, cfg: SketchConfig, dcfg: DirectoryConfig):
+        self.cfg = cfg
+        self.dcfg = dcfg
+
+    @classmethod
+    def for_capacity(cls, cfg: SketchConfig, capacity: int, *, seed: int | None = None, pinned: tuple = ()):
+        dcfg = DirectoryConfig(capacity=capacity, seed=cfg.seed if seed is None else seed, pinned=pinned)
+        return cls(cfg, dcfg)
+
+    def init(self) -> DynArrayMonitorState:
+        st = dyn_array.init(self.cfg, self.dcfg.capacity)
+        return DynArrayMonitorState(
+            regs=st.regs,
+            hists=st.hists,
+            chats=st.chats,
+            directory=key_directory.init(self.dcfg),
+            n_seen=jnp.int32(0),
+        )
+
+    def update(self, state: DynArrayMonitorState, tenant_keys, ids, weights=None, mask=None) -> DynArrayMonitorState:
+        """Fold a keyed batch: tenant_keys are sparse ids (uint32 or (lo, hi)
+        pair), flattened together with ids/weights/mask like ``update``."""
+        keys = _flatten_keys(tenant_keys)
+        ids, w, mask, n_live = _flatten(ids, weights, mask)
+        st, dir_state = dyn_array.update_tenants(
+            self.cfg, self.dcfg,
+            DynArrayState(regs=state.regs, hists=state.hists, chats=state.chats),
+            state.directory, keys, ids, w, mask=mask,
+        )
+        return DynArrayMonitorState(
+            regs=st.regs, hists=st.hists, chats=st.chats,
+            directory=dir_state, n_seen=state.n_seen + n_live,
+        )
+
+    def estimate(self, state: DynArrayMonitorState) -> jnp.ndarray:
+        """Ĉ[K] — the anytime read; no Newton, no histogram walk."""
+        return dyn_array.estimate_all(
+            DynArrayState(regs=state.regs, hists=state.hists, chats=state.chats)
+        )
+
+    def merge(self, a: DynArrayMonitorState, b: DynArrayMonitorState) -> DynArrayMonitorState:
+        """Cross-pod union: register max, per-key MLE re-estimated chats,
+        directory telemetry merge."""
+        st = dyn_array.merge(
+            self.cfg,
+            DynArrayState(regs=a.regs, hists=a.hists, chats=a.chats),
+            DynArrayState(regs=b.regs, hists=b.hists, chats=b.chats),
+        )
+        return DynArrayMonitorState(
+            regs=st.regs, hists=st.hists, chats=st.chats,
+            directory=key_directory.merge(a.directory, b.directory),
+            n_seen=a.n_seen + b.n_seen,
+        )
+
+    def metrics(self, state: DynArrayMonitorState) -> dict:
+        """Cheap per-step scalars: stream + directory health, plus the total
+        tracked weight — an O(K) sum of the anytime estimates, affordable
+        every step precisely because no solve is involved."""
+        return {
+            "tenant_elements_seen": state.n_seen,
+            "tenant_slots_claimed": jnp.sum((state.directory.fingerprints != 0).astype(jnp.int32)),
+            "tenant_collision_rate": key_directory.collision_rate(state.directory),
+            "tenant_weight_total": jnp.sum(state.chats),
         }

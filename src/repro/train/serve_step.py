@@ -31,13 +31,16 @@ def make_decode_step(
     mesh=None,
     *,
     sketch_cfg: SketchConfig | None = None,
-    tenant_monitor: monitor.ShardedArrayMonitor | None = None,
+    tenant_monitor: monitor.ShardedArrayMonitor | monitor.DynArrayMonitor | None = None,
     temperature: float = 0.0,
 ):
     """With ``tenant_monitor`` set, ``sk_state`` is a ``TelemetryState`` and
     ``tenant_ids`` (sparse 64-bit org/customer ids, one per decode slot) route
     each session into its tenant's sketch — per-tenant weighted DAU next to
-    the global one, sharded over the monitor's mesh axis."""
+    the global one. A ``ShardedArrayMonitor`` shards registers over the
+    monitor's mesh axis; a ``DynArrayMonitor`` instead keeps per-tenant
+    martingales so the serving loop can read every tenant's DAU weight O(1)
+    per key, every step."""
 
     def decode_one(params, cache, cur_len, tokens, sk_state=None, session_ids=None, session_weights=None, rng=None, session_mask=None, tenant_ids=None):
         logits, cache = transformer.decode_step(params, cache, cur_len, tokens, mcfg, mesh)

@@ -109,3 +109,132 @@ def test_mle_reestimate_close_to_running():
     true_c = float(w.astype(np.float64).sum())
     assert abs(running - true_c) / true_c < 0.2
     assert abs(mle - true_c) / true_c < 0.2
+
+
+# ---------------------------------------------------------------------------
+# padded-duplicate shadowing regression + degenerate-input contracts
+# ---------------------------------------------------------------------------
+
+
+def test_padded_duplicate_does_not_shadow_live_row():
+    """Regression: a masked-off padding row sharing an id with a live row
+    must not claim the dedup first-occurrence slot — the padded batch must be
+    bit-identical (regs/hist) to the numpy oracle fed only the live rows."""
+    cfg = SketchConfig(m=64, b=8, seed=5)
+    ids, w = _stream(40, seed=1)
+    # Padding rows duplicate live ids and sort FIRST (prepended -> lowest
+    # original index, which the pre-fix stable lexsort rewarded).
+    pad_ids = np.concatenate([ids[:7], ids])
+    pad_w = np.concatenate([np.ones(7, np.float32), w])
+    mask = np.concatenate([np.zeros(7, bool), np.ones(40, bool)])
+
+    d = qsketch_dyn.update_batch(
+        cfg, qsketch_dyn.init(cfg), jnp.asarray(pad_ids), jnp.asarray(pad_w), mask=jnp.asarray(mask)
+    )
+    regs, hist, chat = qsketch_dyn.update_numpy(cfg, ids, np.zeros_like(ids), w)
+    np.testing.assert_array_equal(np.asarray(d.regs, np.int64), regs)
+    np.testing.assert_array_equal(np.asarray(d.hist, np.int64), hist)
+    # chat deviates from the oracle only by the batch-staleness of q_R and
+    # of the change-indicators — a dropped live row would be a missing w/q
+    # term far beyond this bound.
+    assert abs(chat - float(d.chat)) < 0.05 * chat
+
+    # Same contract through update_scan (mask path, no dedup involved).
+    ds = qsketch_dyn.update_scan(
+        cfg, qsketch_dyn.init(cfg), jnp.asarray(pad_ids), jnp.asarray(pad_w), mask=jnp.asarray(mask)
+    )
+    np.testing.assert_array_equal(np.asarray(ds.regs, np.int64), regs)
+    assert abs(float(ds.chat) - chat) / chat < 1e-4
+
+
+def test_oracle_mask_matches_filtered_stream():
+    cfg = SketchConfig(m=64, b=8, seed=7)
+    ids, w = _stream(60, seed=3)
+    mask = np.random.default_rng(4).random(60) < 0.6
+    r1, h1, c1 = qsketch_dyn.update_numpy(cfg, ids, np.zeros_like(ids), w, mask=mask)
+    r2, h2, c2 = qsketch_dyn.update_numpy(cfg, ids[mask], np.zeros_like(ids[mask]), w[mask])
+    np.testing.assert_array_equal(r1, r2)
+    np.testing.assert_array_equal(h1, h2)
+    assert c1 == c2
+
+
+def test_degenerate_weights_dropped_not_quantized():
+    """w <= 0 / non-finite rows are dropped as if masked: they add nothing,
+    and they cannot shadow a live positive duplicate out of the batch."""
+    cfg = SketchConfig(m=128, b=8, seed=10)
+    ids, w = _stream(50, seed=11)
+    bad_ids = np.concatenate([ids[:5], ids])
+    bad_w = np.concatenate(
+        [np.array([0.0, -1.0, np.nan, np.inf, -np.inf], np.float32), w]
+    )
+    for update in (qsketch_dyn.update_batch, qsketch_dyn.update_scan):
+        d = update(cfg, qsketch_dyn.init(cfg), jnp.asarray(bad_ids), jnp.asarray(bad_w))
+        ref = update(cfg, qsketch_dyn.init(cfg), jnp.asarray(ids), jnp.asarray(w))
+        np.testing.assert_array_equal(np.asarray(d.regs), np.asarray(ref.regs))
+        np.testing.assert_array_equal(np.asarray(d.hist), np.asarray(ref.hist))
+        assert float(d.chat) == pytest.approx(float(ref.chat), rel=1e-6)
+
+    # All-degenerate batch: strict no-op.
+    d0 = qsketch_dyn.update_batch(
+        cfg, qsketch_dyn.init(cfg), jnp.asarray(ids[:5]), jnp.zeros(5, jnp.float32)
+    )
+    assert float(d0.chat) == 0.0
+    np.testing.assert_array_equal(np.asarray(d0.regs), np.asarray(qsketch_dyn.init(cfg).regs))
+
+
+def test_untouched_state_estimates_zero():
+    """estimate_mle and merge on fully untouched states return Ĉ = 0 (no MLE
+    iteration on an empty histogram) — the SketchArray untouched-row contract."""
+    cfg = SketchConfig(m=64, b=8, seed=13)
+    d0 = qsketch_dyn.init(cfg)
+    assert float(qsketch_dyn.estimate_mle(cfg, d0)) == 0.0
+    merged = qsketch_dyn.merge(cfg, d0, d0)
+    assert float(merged.chat) == 0.0
+    np.testing.assert_array_equal(np.asarray(merged.regs), np.asarray(d0.regs))
+    np.testing.assert_array_equal(np.asarray(merged.hist), np.asarray(d0.hist))
+    # Merging an untouched state INTO a touched one keeps the touched estimate.
+    ids, w = _stream(3000, seed=14)
+    d = qsketch_dyn.update_batch(cfg, d0, jnp.asarray(ids), jnp.asarray(w))
+    half = qsketch_dyn.merge(cfg, d, d0)
+    np.testing.assert_array_equal(np.asarray(half.regs), np.asarray(d.regs))
+    assert float(half.chat) > 0
+
+
+def test_duplicate_flood_staleness_property():
+    """Adversarial within-batch duplicate floods: update_batch vs update_scan
+    vs the numpy oracle. Registers/hist bitwise equal; the scan matches the
+    oracle tightly; the batch-stale chat stays within the staleness bound
+    (q_R and the change-indicators are both frozen at batch start, so the
+    deviation can run in either direction but is bounded by the flood's
+    distinct-element count, not the flood length).
+    """
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    cfg = SketchConfig(m=64, b=8, seed=99)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        pool=st.integers(min_value=1, max_value=12),
+        n=st.integers(min_value=1, max_value=120),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def prop(pool, n, seed):
+        rng = np.random.default_rng(seed)
+        pool_ids = rng.integers(0, 2**32, pool, dtype=np.uint32)
+        pool_w = rng.uniform(0.1, 50.0, pool).astype(np.float32)
+        pick = rng.integers(0, pool, n)
+        ids, w = pool_ids[pick], pool_w[pick]  # weight is a function of the id
+
+        batch = qsketch_dyn.update_batch(cfg, qsketch_dyn.init(cfg), jnp.asarray(ids), jnp.asarray(w))
+        scan = qsketch_dyn.update_scan(cfg, qsketch_dyn.init(cfg), jnp.asarray(ids), jnp.asarray(w))
+        regs, hist, chat = qsketch_dyn.update_numpy(cfg, ids, np.zeros_like(ids), w)
+
+        np.testing.assert_array_equal(np.asarray(batch.regs), np.asarray(scan.regs))
+        np.testing.assert_array_equal(np.asarray(batch.hist), np.asarray(scan.hist))
+        np.testing.assert_array_equal(np.asarray(scan.regs, np.int64), regs)
+        assert abs(float(scan.chat) - chat) <= 1e-4 * max(chat, 1.0)
+        if chat > 0:
+            assert abs(chat - float(batch.chat)) / chat < 0.5
+
+    prop()
