@@ -21,6 +21,65 @@ def save(name: str, rows):
     return path
 
 
+def merge_save(name: str, rows, swept, sweep_keys=("k",)):
+    """Cumulative save for sweep suites: keep prior rows whose sweep cell was
+    NOT re-measured, so quick/smoke runs never erase the paper-scale rows a
+    ``--full`` run paid for.
+
+    ``swept`` is the set of sweep-cell tuples this run measured (e.g.
+    {(1024,), (16384,)} for sweep_keys=("k",), or (k, e) pairs for the window
+    suite). Rows are stored sorted by (figure, method, *sweep cell) — the
+    schema scripts/check_bench_schema.py asserts (monotone k within a group),
+    so a broken merge fails CI loudly instead of silently dropping or
+    duplicating cells.
+    """
+    swept = {t if isinstance(t, tuple) else (t,) for t in swept}
+
+    def cell(r):
+        return tuple(r.get(k) for k in sweep_keys)
+
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            old = json.load(f)
+        rows = [r for r in old if cell(r) not in swept] + rows
+    rows = sorted(
+        rows,
+        key=lambda r: (
+            str(r.get("figure")),
+            str(r.get("method")),
+            tuple((v is None, v) for v in cell(r)),
+        ),
+    )
+    return save(name, rows)
+
+
+def keyed_batches(n_keys, n_batches, batch, seed=0):
+    """(keys, ids, gamma weights) batches for the keyed-update suites."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_batches):
+        keys = jnp.asarray(rng.integers(0, n_keys, batch, dtype=np.int32))
+        ids = jnp.asarray(rng.integers(0, 2**32, batch, dtype=np.uint32))
+        w = jnp.asarray((rng.gamma(1.0, 2.0, batch) + 1e-5).astype(np.float32))
+        out.append((keys, ids, w))
+    return out
+
+
+def keyed_throughput(update_fn, state, batches):
+    """Elements/s of a keyed update over pre-built batches (first batch is
+    the warmup: compile + occupancy). Returns (eps, final state)."""
+    state = update_fn(state, *batches[0])
+    jax.block_until_ready(jax.tree.leaves(state))
+    t0 = time.perf_counter()
+    n = 0
+    for keys, ids, w in batches[1:]:
+        state = update_fn(state, keys, ids, w)
+        n += len(ids)
+    jax.block_until_ready(jax.tree.leaves(state))
+    return n / (time.perf_counter() - t0), state
+
+
 def time_fn(fn, *args, warmup=2, iters=5):
     """Median wall time of a jitted fn (block_until_ready)."""
     for _ in range(warmup):

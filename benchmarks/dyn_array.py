@@ -20,10 +20,6 @@ the expensive evidence.
 
 from __future__ import annotations
 
-import json
-import os
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -39,39 +35,6 @@ from repro.core import (
 from . import common
 
 
-def _keyed_batches(n_keys, n_batches, batch, seed=0):
-    rng = np.random.default_rng(seed)
-    out = []
-    for _ in range(n_batches):
-        keys = jnp.asarray(rng.integers(0, n_keys, batch, dtype=np.int32))
-        ids = jnp.asarray(rng.integers(0, 2**32, batch, dtype=np.uint32))
-        w = jnp.asarray((rng.gamma(1.0, 2.0, batch) + 1e-5).astype(np.float32))
-        out.append((keys, ids, w))
-    return out
-
-
-def _throughput(update_fn, state, batches):
-    state = update_fn(state, *batches[0])  # warm: compile + occupancy
-    jax.block_until_ready(jax.tree.leaves(state))
-    t0 = time.perf_counter()
-    n = 0
-    for keys, ids, w in batches[1:]:
-        state = update_fn(state, keys, ids, w)
-        n += len(ids)
-    jax.block_until_ready(jax.tree.leaves(state))
-    return n / (time.perf_counter() - t0), state
-
-
-def _merge_save(name, rows, swept_ks):
-    """Cumulative save: keep prior rows whose k was NOT re-measured."""
-    path = os.path.join(common.RESULTS_DIR, f"{name}.json")
-    if os.path.exists(path):
-        with open(path) as f:
-            old = json.load(f)
-        rows = [r for r in old if r.get("k") not in swept_ks] + rows
-    return common.save(name, rows)
-
-
 def run(quick=True):
     rows = []
 
@@ -79,9 +42,9 @@ def run(quick=True):
     n_keys, m, batch = 256, 128, 4096
     n_batches = 4 if quick else 10
     cfg = SketchConfig(m=m, b=8, seed=5)
-    batches = _keyed_batches(n_keys, n_batches, batch, seed=7)
+    batches = common.keyed_batches(n_keys, n_batches, batch, seed=7)
 
-    eps_fused, st_fused = _throughput(
+    eps_fused, st_fused = common.keyed_throughput(
         lambda s, k, i, w: dyn_array.update_batch(cfg, s, k, i, w),
         dyn_array.init(cfg, n_keys),
         batches,
@@ -101,7 +64,7 @@ def run(quick=True):
             )
         return states
 
-    eps_loop, states_loop = _throughput(
+    eps_loop, states_loop = common.keyed_throughput(
         loop_update, [qsketch_dyn.init(cfg) for _ in range(n_keys)], batches
     )
     # The schedules must agree: registers/hists bitwise, chats to f32 noise.
@@ -162,5 +125,5 @@ def run(quick=True):
             f"dyn_array_estimate/K{k}/speedup", 0.0, f"newton/read={x:.0f}x (>=100x required at K=2^20)"
         )
 
-    _merge_save("dyn_array", rows, {n_keys, *ks})
+    common.merge_save("dyn_array", rows, {n_keys, *ks})
     return rows

@@ -15,8 +15,9 @@ from __future__ import annotations
 import argparse
 import time
 
-# Fast enough for CI while still covering the fused + sharded + Dyn paths.
-SMOKE_SUITES = ("sketch_array", "sketch_array_sharded", "dyn_array")
+# Fast enough for CI while still covering the fused + sharded + Dyn +
+# sliding-window paths.
+SMOKE_SUITES = ("sketch_array", "sketch_array_sharded", "dyn_array", "window_array")
 
 
 def main() -> None:
@@ -38,6 +39,7 @@ def main() -> None:
         register_size,
         sketch_array,
         throughput,
+        window_array,
     )
 
     suite = {
@@ -50,6 +52,7 @@ def main() -> None:
         "sketch_array": sketch_array.run,  # fused K-sketch vs naive loop
         "sketch_array_sharded": sketch_array.run_sharded,  # mesh-sharded K sweep
         "dyn_array": dyn_array.run,  # anytime reads vs Newton estimate_all
+        "window_array": window_array.run,  # sliding-window reads vs per-epoch Newton
     }
     only = [s for s in args.only.split(",") if s]
     names = only or (list(SMOKE_SUITES) if args.smoke else list(suite))

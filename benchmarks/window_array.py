@@ -1,0 +1,150 @@
+"""WindowArray: fused windowed update vs the K-loop oracle, and the windowed
+read — union + one MLE pass (cached for the full ring, Pallas-fused for
+sub-rings) vs E independent per-epoch Newton reads.
+
+Two questions this suite answers:
+
+  * update — the windowed update runs TWO fused DynArray updates per batch
+    (head epoch + union cache). What does the temporal axis cost per element
+    against (a) the K-loop of per-epoch single-Dyn updates (dispatch-bound)
+    and (b) the plain cumulative DynArray it wraps (the ~2x check)?
+  * estimate — at K ∈ {2^10 .. 2^18} and E ∈ {4, 16, 64}: the full-ring
+    cached read (MLE on the maintained union histograms, no union pass), the
+    sub-ring read (w = E/2: epoch-union + bincount + MLE), and the naive
+    alternative — E independent per-epoch Newton passes (what you'd pay
+    without the union algebra, and it still can't answer the window: the
+    per-epoch estimates don't sum, DESIGN.md §8.5).
+
+The sweep is cumulative over (k, e) cells (common.merge_save): quick/smoke
+runs re-measure only the small cells and MERGE into
+experiments/bench/window_array.json, preserving the paper-scale rows from
+``--full``. Rows are stored sorted; scripts/check_bench_schema.py asserts the
+schema so a broken merge fails CI loudly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SketchConfig, dyn_array, window_array
+
+from . import common
+
+
+def run(quick=True):
+    rows = []
+
+    # --- fused windowed update vs K-loop oracle vs cumulative DynArray -----
+    n_keys, m, e_up, batch = 256, 128, 4, 4096
+    n_batches = 4 if quick else 10
+    cfg = SketchConfig(m=m, b=8, seed=5)
+    batches = common.keyed_batches(n_keys, n_batches, batch, seed=7)
+
+    eps_win, st_win = common.keyed_throughput(
+        lambda s, k, i, w: window_array.update_batch(cfg, s, k, i, w),
+        window_array.init(cfg, n_keys, e_up),
+        batches,
+    )
+    eps_loop, st_loop = common.keyed_throughput(
+        lambda s, k, i, w: window_array.update_reference(cfg, s, k, i, w),
+        window_array.init(cfg, n_keys, e_up),
+        batches,
+    )
+    eps_dyn, _ = common.keyed_throughput(
+        lambda s, k, i, w: dyn_array.update_batch(cfg, s, k, i, w),
+        dyn_array.init(cfg, n_keys),
+        batches,
+    )
+    # The schedules must agree: registers bitwise, chats to f32 noise.
+    if not np.array_equal(np.asarray(st_win.regs), np.asarray(st_loop.regs)):
+        raise AssertionError("fused and K-loop WindowArray registers diverged")
+    if not np.allclose(
+        np.asarray(st_win.union_chats), np.asarray(st_loop.union_chats), rtol=1e-4
+    ):
+        raise AssertionError("fused and K-loop WindowArray union chats diverged")
+
+    for method, eps in (("fused", eps_win), ("k_loop", eps_loop), ("dyn_cumulative", eps_dyn)):
+        rows.append({"figure": "window_array_throughput", "method": method,
+                     "k": n_keys, "e": e_up, "m": m, "mops": eps / 1e6})
+        common.csv_row(f"window_array/K{n_keys}/E{e_up}/{method}", 1e6 / eps, f"mops={eps/1e6:.3f}")
+    rows.append({"figure": "window_array_throughput", "method": "speedup",
+                 "k": n_keys, "e": e_up, "m": m, "x": eps_win / eps_loop})
+    common.csv_row(
+        f"window_array/K{n_keys}/E{e_up}/speedup", 0.0,
+        f"fused/loop={eps_win / eps_loop:.1f}x window/cumulative={eps_win / eps_dyn:.2f}x",
+    )
+
+    # --- windowed reads vs E independent Newton passes, (K, E) sweep -------
+    # Ring-state budget: hists alone are int32[E, K, 2^b] = 1 KiB x E x K,
+    # so cells beyond E*K = 2^22 (~4 GiB of state) are skipped — logged, not
+    # silently dropped — rather than OOMing the sweep host.
+    m_est, batch_est, cell_cap = 64, 8192, 2**22
+    ks = [2**10, 2**13] if quick else [2**10, 2**14, 2**17, 2**18]
+    es = [4, 8] if quick else [4, 16, 64]
+    swept = {(n_keys, e_up)}
+    for k in ks:
+        for e in es:
+            if e * k > cell_cap:
+                print(f"# window_array: skipping K={k} E={e} (ring state "
+                      f"E*K*2^b*4 = {e * k // 256} MiB exceeds the cell cap)",
+                      flush=True)
+                continue
+            swept.add((k, e))
+            cfg_k = SketchConfig(m=m_est, b=8, seed=17)
+            st = window_array.init(cfg_k, k, e)
+            rng = np.random.default_rng(k + e)
+            # Donate the ring state through the load loop: without donation
+            # every update/rotate call copies the full [E, K, ...] state.
+            upd = jax.jit(
+                lambda s, keys, ids, w: window_array.update_batch(cfg_k, s, keys, ids, w),
+                donate_argnums=(0,),
+            )
+            rot = jax.jit(
+                lambda s: window_array.rotate(cfg_k, s), donate_argnums=(0,)
+            )
+            # Load every epoch with enough traffic that rows are live.
+            n_load = max(2 * k, batch_est)
+            for _ in range(e):
+                for _ in range(0, n_load, batch_est):
+                    keys = jnp.asarray(rng.integers(0, k, batch_est, dtype=np.int32))
+                    ids = jnp.asarray(rng.integers(0, 2**32, batch_est, dtype=np.uint32))
+                    w = jnp.asarray((rng.gamma(1.0, 2.0, batch_est) + 1e-5).astype(np.float32))
+                    st = upd(st, keys, ids, w)
+                st = rot(st)
+            jax.block_until_ready(st.union_chats)
+
+            iters = 3 if k <= 2**13 else 1
+            t_any = common.time_fn(
+                lambda s: np.asarray(window_array.estimate_ring_anytime(s)), st,
+                warmup=1, iters=iters,
+            )
+            t_ring = common.time_fn(
+                lambda s: window_array.estimate_window(cfg_k, s, e), st,
+                warmup=1, iters=iters,
+            )
+            t_sub = common.time_fn(
+                lambda s: window_array.estimate_window(cfg_k, s, max(e // 2, 1)), st,
+                warmup=1, iters=iters,
+            )
+            t_epochs = common.time_fn(
+                lambda s: window_array.estimate_epochs_all(cfg_k, s), st,
+                warmup=1, iters=iters,
+            )
+            x = t_epochs / max(t_ring, 1e-9)
+            rows += [
+                {"figure": "window_array_estimate", "method": "anytime_read", "k": k, "e": e, "m": m_est, "ms": t_any * 1e3},
+                {"figure": "window_array_estimate", "method": "full_ring_cached", "k": k, "e": e, "m": m_est, "ms": t_ring * 1e3},
+                {"figure": "window_array_estimate", "method": "subring_union", "k": k, "e": e, "m": m_est, "ms": t_sub * 1e3},
+                {"figure": "window_array_estimate", "method": "per_epoch_newton", "k": k, "e": e, "m": m_est, "ms": t_epochs * 1e3},
+                {"figure": "window_array_estimate", "method": "speedup", "k": k, "e": e, "m": m_est, "x": x},
+            ]
+            common.csv_row(f"window_array_estimate/K{k}/E{e}/anytime_read", t_any * 1e6, f"ms={t_any*1e3:.3f}")
+            common.csv_row(f"window_array_estimate/K{k}/E{e}/full_ring_cached", t_ring * 1e6, f"ms={t_ring*1e3:.3f}")
+            common.csv_row(f"window_array_estimate/K{k}/E{e}/subring_union", t_sub * 1e6, f"ms={t_sub*1e3:.3f}")
+            common.csv_row(f"window_array_estimate/K{k}/E{e}/per_epoch_newton", t_epochs * 1e6, f"ms={t_epochs*1e3:.1f}")
+            common.csv_row(f"window_array_estimate/K{k}/E{e}/speedup", 0.0, f"epochs/ring={x:.0f}x anytime={t_any*1e3:.3f}ms")
+
+    common.merge_save("window_array", rows, swept, sweep_keys=("k", "e"))
+    return rows

@@ -1,0 +1,90 @@
+"""CI guard for the cumulative bench-JSON files (scripts/test.sh --tier2).
+
+The sweep suites (benchmarks/dyn_array.py, benchmarks/window_array.py) merge
+quick/smoke re-measurements into their JSON so cheap runs never erase the
+paper-scale rows a ``--full`` run paid for (common.merge_save). A broken
+merge fails SILENTLY at bench time — duplicate cells, dropped rows, unsorted
+output — and only shows up when someone plots stale data. This script makes
+it fail loudly instead:
+
+  * every row carries the required keys ("figure", "method", and a payload
+    of at least one of mops/ms/x);
+  * within each (figure, method[, e]) group the swept "k" values are unique
+    and stored in strictly increasing order (merge_save sorts; a duplicate k
+    means two merges claimed the same cell, out-of-order means someone
+    bypassed merge_save).
+
+Usage:  python scripts/check_bench_schema.py [file.json ...]
+        (no args: checks the cumulative sweep files that exist under
+        experiments/bench/, requiring the ones the smoke suite just wrote)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+# Files written through common.merge_save — the cumulative-merge contract.
+CUMULATIVE = ("dyn_array.json", "window_array.json")
+PAYLOAD_KEYS = ("mops", "ms", "x", "us")
+
+
+def check_rows(name: str, rows) -> list[str]:
+    errors = []
+    if not isinstance(rows, list) or not rows:
+        return [f"{name}: expected a non-empty list of row dicts"]
+    groups: dict[tuple, list] = {}
+    for i, r in enumerate(rows):
+        for key in ("figure", "method"):
+            if not isinstance(r.get(key), str):
+                errors.append(f"{name}[{i}]: missing/non-string '{key}': {r}")
+        if not any(isinstance(r.get(p), (int, float)) for p in PAYLOAD_KEYS):
+            errors.append(
+                f"{name}[{i}]: no numeric payload among {PAYLOAD_KEYS}: {r}"
+            )
+        if "k" in r and not isinstance(r["k"], int):
+            errors.append(f"{name}[{i}]: non-integer sweep key 'k': {r}")
+        groups.setdefault(
+            (r.get("figure"), r.get("method"), r.get("e")), []
+        ).append(r)
+    for (figure, method, e), rs in groups.items():
+        ks = [r["k"] for r in rs if "k" in r]
+        tag = f"{name}:{figure}/{method}" + (f"/e={e}" if e is not None else "")
+        if len(ks) != len(set(ks)):
+            dupes = sorted({k for k in ks if ks.count(k) > 1})
+            errors.append(f"{tag}: duplicate k cells {dupes} (broken cumulative merge)")
+        if ks != sorted(ks):
+            errors.append(f"{tag}: k not monotone increasing: {ks}")
+    return errors
+
+
+def main(paths=None) -> int:
+    if not paths:
+        paths = [
+            os.path.join(RESULTS_DIR, f)
+            for f in CUMULATIVE
+            if os.path.exists(os.path.join(RESULTS_DIR, f))
+        ]
+        missing = [f for f in CUMULATIVE if not os.path.exists(os.path.join(RESULTS_DIR, f))]
+        if missing:
+            print(f"check_bench_schema: FAIL — expected cumulative files missing: {missing}")
+            return 1
+    errors = []
+    for path in paths:
+        with open(path) as f:
+            rows = json.load(f)
+        errors += check_rows(os.path.basename(path), rows)
+    if errors:
+        print("check_bench_schema: FAIL")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"check_bench_schema: OK ({', '.join(os.path.basename(p) for p in paths)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -10,8 +10,11 @@
 #   exercise multi-device code paths on a CPU-only box; an existing
 #   XLA_FLAGS setting is preserved and extended.
 # - --tier2 additionally runs `python -m benchmarks.run --smoke` (the quick
-#   profile over the fast suites, incl. the sharded SketchArray sweep) so CI
-#   catches benchmark-path rot without paying for the paper-scale sweeps.
+#   profile over the fast suites, incl. the sharded SketchArray sweep and the
+#   sliding-window suite) so CI catches benchmark-path rot without paying for
+#   the paper-scale sweeps, then asserts the cumulative bench-JSON schema
+#   (required keys, unique + monotone K per group) so a broken cumulative
+#   merge fails loudly instead of silently dropping or duplicating rows.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -29,4 +32,6 @@ python -m pytest -x -q "$@"
 if [[ "$tier2" == 1 ]]; then
   echo "== tier-2: benchmark smoke paths =="
   python -m benchmarks.run --smoke
+  echo "== tier-2: bench JSON schema =="
+  python scripts/check_bench_schema.py
 fi

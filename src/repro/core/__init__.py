@@ -25,6 +25,7 @@ from . import (
     qsketch_dyn,
     sharded_array,
     sketch_array,
+    window_array,
 )
 from .key_directory import DirectoryConfig, DirectoryState
 from .types import (
@@ -35,6 +36,7 @@ from .types import (
     ShardedArrayState,
     SketchArrayState,
     SketchConfig,
+    WindowArrayState,
 )
 
 # Uniform method registry: name -> dict of the five standard operations.
@@ -88,11 +90,13 @@ __all__ = [
     "DynArrayState",
     "DynState",
     "FloatSketchState",
+    "WindowArrayState",
     "qsketch",
     "qsketch_dyn",
     "sketch_array",
     "sharded_array",
     "dyn_array",
+    "window_array",
     "key_directory",
     "baselines",
     "estimators",

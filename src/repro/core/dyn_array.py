@@ -171,6 +171,35 @@ def estimate_all(state: DynArrayState) -> jnp.ndarray:
     return state.chats
 
 
+def estimate_mle_rows(cfg: SketchConfig, regs) -> jnp.ndarray:
+    """Per-row histogram-MLE Ĉ from an ``int8[K, m]`` register matrix.
+
+    The regs-only core of ``estimate_mle_all``, shared with the windowed
+    union reads (core/window_array.py): each row's MLE recovers C_k/m and is
+    scaled by m; untouched rows report 0. Delegates to
+    ``estimate_mle_hists`` so the untouched-row guard lives in one place.
+    """
+    hists = jax.vmap(lambda r: estimators.histogram(cfg, r))(regs)
+    return estimate_mle_hists(cfg, hists)
+
+
+def estimate_mle_hists(cfg: SketchConfig, full_hists) -> jnp.ndarray:
+    """Per-row histogram-MLE Ĉ from FULL histograms ``int32[K, 2^b]`` (bin 0
+    counts untouched r_min registers, rows sum to m).
+
+    Bit-identical to ``estimate_mle_rows`` on the registers the histograms
+    were counted from — the likelihood sees registers only through their
+    value histogram (DESIGN.md §8.3) — which is what lets the window array's
+    cached union histograms skip the register walk entirely.
+    """
+
+    def one(hist):
+        chat, _, _ = estimators.qsketch_mle(cfg, hist)
+        return jnp.where(hist[0] == cfg.m, jnp.float32(0.0), chat * cfg.m)
+
+    return jax.vmap(one)(full_hists)
+
+
 @functools.partial(jax.jit, static_argnums=(0,))
 def estimate_mle_all(cfg: SketchConfig, state: DynArrayState) -> jnp.ndarray:
     """Per-key histogram-MLE re-estimate from the registers, Ĉ[K].
@@ -179,13 +208,7 @@ def estimate_mle_all(cfg: SketchConfig, state: DynArrayState) -> jnp.ndarray:
     C_k/m and is scaled by m); untouched rows report 0. Use after cross-shard
     merges or as a self-check — the hot path reads ``estimate_all``.
     """
-
-    def one(regs_row):
-        hist = estimators.histogram(cfg, regs_row)
-        chat, _, _ = estimators.qsketch_mle(cfg, hist)
-        return jnp.where(hist[0] == cfg.m, jnp.float32(0.0), chat * cfg.m)
-
-    return jax.vmap(one)(state.regs)
+    return estimate_mle_rows(cfg, state.regs)
 
 
 def merge(cfg: SketchConfig, a: DynArrayState, b: DynArrayState) -> DynArrayState:

@@ -32,6 +32,18 @@ Telemetry approximations (documented contract):
   * a fingerprint match is necessary but not sufficient for identity
     (32-bit: false-negative rate 2^-32 per routing) — counters are
     telemetry, never correctness.
+
+Cold-fingerprint aging (the ROADMAP follow-on): long-lived directories
+accumulate claims from tenants that stopped sending traffic, so the
+collision counters drift up against ghosts. ``route`` stamps every routed
+slot with the caller's ``epoch`` (any monotone clock — the natural one is
+``WindowArrayState.epoch_id``, advanced by each window rotation), and
+``evict_older_than(dcfg, state, epoch)`` releases hashed slots whose last
+touch predates ``epoch``: the fingerprint claim is cleared so the next
+tenant to land there claims it fresh instead of counting a collision.
+Aging is telemetry-only, like the counters themselves — sketch rows are NOT
+cleared (the sketch layer owns its own eviction; the window array's ring
+rotation ages register state out on the same clock). Pinned slots never age.
 """
 
 from __future__ import annotations
@@ -98,11 +110,20 @@ class DirectoryState(NamedTuple):
     n_routed: int32 — live elements routed so far (occurrences).
     n_collisions: int32 — routings whose slot fingerprint mismatched (i.e.
       traffic landing on a row already owned by a different tenant).
+    last_touch: int32[capacity] — the caller-supplied epoch of the last live
+      OWNER routing to each slot (-1 = never touched; colliding routings do
+      not stamp); the aging clock.
+
+    Schema note: ``last_touch`` was added after the first directory release;
+    checkpoints written with the older 3-field state do not restore into
+    this one (telemetry state is versioned with the code, like every other
+    state schema in this repo — re-init monitors on upgrade).
     """
 
     fingerprints: jnp.ndarray
     n_routed: jnp.ndarray
     n_collisions: jnp.ndarray
+    last_touch: jnp.ndarray
 
 
 def init(dcfg: DirectoryConfig) -> DirectoryState:
@@ -110,6 +131,7 @@ def init(dcfg: DirectoryConfig) -> DirectoryState:
         fingerprints=jnp.zeros((dcfg.capacity,), jnp.uint32),
         n_routed=jnp.int32(0),
         n_collisions=jnp.int32(0),
+        last_touch=jnp.full((dcfg.capacity,), -1, jnp.int32),
     )
 
 
@@ -149,16 +171,22 @@ def route_slots(dcfg: DirectoryConfig, keys) -> jnp.ndarray:
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def route(dcfg: DirectoryConfig, state: DirectoryState, keys, mask=None):
+def route(dcfg: DirectoryConfig, state: DirectoryState, keys, mask=None, epoch=None):
     """Route a batch AND update collision telemetry: -> (slots, state').
 
     Masked-off rows get a valid slot (callers pair them with the same mask
     downstream) but touch neither the claim table nor the counters.
+
+    ``epoch`` (int32 scalar, any monotone clock — e.g. the window array's
+    ``epoch_id``) stamps each live slot's ``last_touch`` via scatter-max, the
+    input to ``evict_older_than``. Omitted, routings stamp epoch 0 (a
+    directory that never ages sees one eternal epoch).
     """
     lo, hi = hashing.split_id64(keys)
     slots = route_slots(dcfg, (lo, hi))
     fp = _fingerprint(dcfg, lo, hi)
     live = jnp.ones(lo.shape, bool) if mask is None else mask
+    epoch = jnp.int32(0) if epoch is None else jnp.asarray(epoch, jnp.int32)
 
     cur = state.fingerprints[slots]
     collided = live & (cur != 0) & (cur != fp)
@@ -167,10 +195,45 @@ def route(dcfg: DirectoryConfig, state: DirectoryState, keys, mask=None):
     # max fingerprint — deterministic under any scatter order.
     claim = jnp.where(live & (cur == 0), fp, jnp.uint32(0))
     fps = state.fingerprints.at[slots].max(claim)
+    # Only owner/claim traffic keeps a slot warm: a COLLIDING routing must
+    # not re-stamp the ghost fingerprint it collided with, or a departed
+    # tenant's slot under active colliding traffic would never age out —
+    # the exact drift aging exists to stop. (-1 never beats a stamp.)
+    touch = jnp.where(live & ~collided, epoch, jnp.int32(-1))
     return slots, DirectoryState(
         fingerprints=fps,
         n_routed=state.n_routed + jnp.sum(live).astype(jnp.int32),
         n_collisions=state.n_collisions + jnp.sum(collided).astype(jnp.int32),
+        last_touch=state.last_touch.at[slots].max(touch),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def evict_older_than(dcfg: DirectoryConfig, state: DirectoryState, epoch):
+    """Release hashed slots whose last live routing predates ``epoch``:
+    -> (state', n_evicted int32).
+
+    A released slot drops its fingerprint claim (and its stamp resets to -1),
+    so the next tenant routed there claims it first-contact instead of
+    counting a collision against a ghost. Pinned slots [0, num_pinned) are
+    exempt — they are dedicated by construction. Cumulative counters are
+    untouched: eviction changes who owns a slot, not what already happened.
+    """
+    epoch = jnp.asarray(epoch, jnp.int32)
+    slot_ids = jnp.arange(dcfg.capacity, dtype=jnp.int32)
+    cold = (
+        (slot_ids >= dcfg.num_pinned)
+        & (state.fingerprints != 0)
+        & (state.last_touch < epoch)
+    )
+    return (
+        DirectoryState(
+            fingerprints=jnp.where(cold, jnp.uint32(0), state.fingerprints),
+            n_routed=state.n_routed,
+            n_collisions=state.n_collisions,
+            last_touch=jnp.where(cold, jnp.int32(-1), state.last_touch),
+        ),
+        jnp.sum(cold).astype(jnp.int32),
     )
 
 
@@ -191,6 +254,7 @@ def merge(a: DirectoryState, b: DirectoryState) -> DirectoryState:
         fingerprints=jnp.maximum(a.fingerprints, b.fingerprints),
         n_routed=a.n_routed + b.n_routed,
         n_collisions=a.n_collisions + b.n_collisions + cross.astype(jnp.int32),
+        last_touch=jnp.maximum(a.last_touch, b.last_touch),
     )
 
 

@@ -129,6 +129,33 @@ class DynArrayState(NamedTuple):
     chats: jnp.ndarray  # float32[K], running weighted-cardinality estimates
 
 
+class WindowArrayState(NamedTuple):
+    """Sliding-window DynArray: a ring of E epoch sub-states plus a cached
+    full-ring union (core/window_array.py).
+
+    Epoch e's (regs[e], hists[e], chats[e]) is a ``DynArrayState`` of the
+    sub-stream folded while e was the current epoch, so every per-epoch and
+    windowed read reuses the DynArray machinery. The union_* fields cache the
+    all-epoch max-union (exact: register max-merge is lossless) with DynArray
+    histogram/martingale maintenance on top, giving the full-ring window an
+    O(K) anytime read; sub-ring windows union on demand (DESIGN.md §8.5).
+
+    ``head`` is the ring slot of the current epoch; ``filled`` counts live
+    epochs (<= E) so callers can clamp w; ``epoch_id`` is the monotone epoch
+    clock (total rotations) — the timestamp fed to key-directory aging.
+    """
+
+    regs: jnp.ndarray  # int8[E, K, m]
+    hists: jnp.ndarray  # int32[E, K, 2^b]; per-epoch touched-register hists
+    chats: jnp.ndarray  # float32[E, K], per-epoch running estimates
+    union_regs: jnp.ndarray  # int8[K, m] == max over epoch axis (invariant)
+    union_hists: jnp.ndarray  # int32[K, 2^b] touched-register hist of union
+    union_chats: jnp.ndarray  # float32[K] full-ring anytime estimates
+    head: jnp.ndarray  # int32 scalar, ring slot of the current epoch
+    filled: jnp.ndarray  # int32 scalar in [1, E], epochs live in the ring
+    epoch_id: jnp.ndarray  # int32 scalar, monotone epoch counter
+
+
 class FloatSketchState(NamedTuple):
     """LM / FastGM / FastExpSketch state: float32 min-registers."""
 

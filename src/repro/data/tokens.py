@@ -14,25 +14,47 @@ import numpy as np
 
 
 class TokenStream:
-    def __init__(self, vocab: int, batch: int, seq: int, seed: int = 0, n_shards: int = 1, shard: int = 0):
+    def __init__(self, vocab: int, batch: int, seq: int, seed: int = 0, n_shards: int = 1, shard: int = 0, n_docs: int = 0):
         assert batch % n_shards == 0
         self.vocab, self.batch, self.seq = vocab, batch, seq
         self.seed, self.n_shards, self.shard = seed, n_shards, shard
+        self.n_docs = n_docs
         # Precompute a Zipf CDF over the vocab (rank-frequency law).
         ranks = np.arange(1, vocab + 1, dtype=np.float64)
         p = ranks ** -1.2
         self._cdf = np.cumsum(p / p.sum())
+        if n_docs:
+            # Sparse 64-bit document ids with a Zipf rank-frequency law, so
+            # per-document telemetry sees a realistic heavy tail of sources
+            # recurring across steps. Ids are fixed by the seed alone —
+            # every host and every resume sees the same document universe.
+            doc_rng = np.random.default_rng((seed, 0xD0C))
+            self._doc_ids = doc_rng.integers(0, 2**64, n_docs, dtype=np.uint64)
+            dp = np.arange(1, n_docs + 1, dtype=np.float64) ** -1.1
+            self._doc_cdf = np.cumsum(dp / dp.sum())
 
     def _sample(self, rng, shape):
         u = rng.random(shape)
         return np.searchsorted(self._cdf, u).astype(np.int32)
 
     def batch_at(self, step: int):
-        """Global batch's local shard for this host at a given step."""
+        """Global batch's local shard for this host at a given step.
+
+        With ``n_docs`` set, each sequence carries its source document's
+        sparse 64-bit id as a (doc_ids lo, doc_ids_hi) uint32 pair — the
+        tenant-key convention the train step's per-document telemetry
+        expects (JAX x64 is off, so 64-bit ids travel as two words).
+        """
         per = self.batch // self.n_shards
         rng = np.random.default_rng((self.seed, step, self.shard))
         toks = self._sample(rng, (per, self.seq + 1))
-        return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+        batch = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+        if self.n_docs:
+            ranks = np.searchsorted(self._doc_cdf, rng.random(per))
+            docs = self._doc_ids[ranks]
+            batch["doc_ids"] = (docs & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+            batch["doc_ids_hi"] = (docs >> np.uint64(32)).astype(np.uint32)
+        return batch
 
     def __iter__(self):
         step = 0

@@ -8,12 +8,32 @@ public wrapper in ops.py):
 * qdyn_qr             — QSketch-Dyn batch update-probability q_R.
 * sketch_array_update — keyed multi-sketch (SketchArray) update: batch rows
                         routed to K register rows resident in VMEM.
+* dyn_array_update    — keyed q_R over gathered per-tenant histogram rows
+                        (the DynArray update's dense inner stage).
+* window_union        — fused epoch-union + per-row bincount for the
+                        sliding-window read (no [w, K, m] intermediate).
 
 On this CPU container the kernels run in interpret mode (the kernel body
 executes in Python); on TPU the identical code lowers through Mosaic. ops.py
 auto-selects based on the backend.
 """
 
-from . import ops, qdyn_qr, qsketch_update, ref, sketch_array_update
+from . import (
+    dyn_array_update,
+    ops,
+    qdyn_qr,
+    qsketch_update,
+    ref,
+    sketch_array_update,
+    window_union,
+)
 
-__all__ = ["ops", "ref", "qsketch_update", "qdyn_qr", "sketch_array_update"]
+__all__ = [
+    "ops",
+    "ref",
+    "qsketch_update",
+    "qdyn_qr",
+    "sketch_array_update",
+    "dyn_array_update",
+    "window_union",
+]

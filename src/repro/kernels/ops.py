@@ -22,16 +22,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dyn_array, hashing, key_directory, qsketch_dyn
+from repro.core import dyn_array, hashing, key_directory, qsketch_dyn, window_array
 from repro.core.types import (
     DynArrayState,
     FloatSketchState,
     QSketchState,
     SketchArrayState,
     SketchConfig,
+    WindowArrayState,
 )
 
-from . import dyn_array_update, qdyn_qr, qsketch_update, sketch_array_update
+from . import (
+    dyn_array_update,
+    qdyn_qr,
+    qsketch_update,
+    sketch_array_update,
+    window_union,
+)
 
 _NEG_INF = float(np.finfo(np.float32).min)
 _POS_INF = float(np.finfo(np.float32).max)
@@ -266,6 +273,55 @@ def dyn_array_update_tenants_op(
     slots, dir_state = key_directory.route(dcfg, dir_state, tenant_keys, mask=mask)
     out = dyn_array_update_op(cfg, state, slots, ids, weights, mask=mask, **kernel_kwargs)
     return out, dir_state
+
+
+def window_union_estimate_op(
+    cfg: SketchConfig,
+    state: WindowArrayState,
+    w: int,
+    *,
+    block_k: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Kernel-backed equivalent of ``window_array.estimate_window`` — Ĉ[K]
+    over the last w <= E epochs, bit-identical to the pure-JAX union path.
+
+    The union-of-epochs + per-row bincount runs in the Pallas kernel
+    (``kernels/window_union.py``) streaming the ring's int8 epoch planes
+    through VMEM, so the ``[w, K, m]`` gather the jnp path materializes never
+    exists (the ring is read in place at native register width; padding only
+    copies when K or m are tile-unaligned); the vmapped histogram MLE then
+    runs on the exact same integer histograms, making the two entries agree
+    bitwise. Epochs outside the window are masked by an include flag computed
+    from the ring head, so the (traced) ``head`` never forces a host sync.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    e, k, m = state.regs.shape
+    w = window_array._check_w(state, w)
+
+    bk = block_k or min(window_union.DEFAULT_BLOCK_K, _round_up(k, 8))
+    kp, mp = _round_up(k, bk), _round_up(m, 128)
+    nbp = _round_up(cfg.num_bins, 128)
+
+    regs = jnp.pad(
+        state.regs,
+        ((0, 0), (0, kp - k), (0, mp - m)),
+        constant_values=cfg.r_min,
+    )
+    # Epoch slot ei is inside the window iff its age (head - ei) mod E < w.
+    age = (state.head - jnp.arange(e, dtype=jnp.int32)) % e
+    include = (age < w).astype(jnp.int32)[:, None]
+
+    _, hists = window_union.window_union_padded(
+        regs,
+        include,
+        m=m,
+        nb_padded=nbp,
+        r_min=cfg.r_min,
+        block_k=bk,
+        interpret=interpret,
+    )
+    return dyn_array.estimate_mle_hists(cfg, hists[:k, : cfg.num_bins])
 
 
 def float_sketch_update_op(

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: fused epoch-union + per-row register bincount.
+
+The windowed read ``window_array.estimate_window(w)`` needs, per tenant row,
+the FULL value histogram of the max-union of the last w epoch register
+planes. The pure-JAX path gathers ``regs[idx]`` — an HBM-resident
+``[w, K, m]`` intermediate — before reducing. This kernel streams the epoch
+planes through VMEM instead:
+
+  grid = (k_block, E), epochs innermost ("arbitrary"): the (K_blk × m) union
+  accumulator tile lives in the output ref across the epoch sweep; each epoch
+  contributes ``max`` if an SMEM-free per-epoch include flag (computed from
+  ``head`` and w by the wrapper) selects it, else r_min. On the LAST epoch
+  step the resident union tile is bincounted into the second output — a
+  fori_loop over the 2^b bins, each a masked lane-reduction — so neither the
+  ``[w, K, m]`` gather nor a second HBM pass over the union ever exists.
+
+Bin semantics: the histogram is FULL (bin 0 counts r_min = untouched
+registers among the REAL m lanes; padded lanes are excluded by an iota mask),
+rows sum to m — exactly ``estimators.histogram`` of the union row, which is
+what the vmapped MLE consumes. Padded bins beyond 2^b count values no int8
+register can hold and come out exactly 0.
+
+Layout: registers on the lane axis (m padded to 128), tenant rows on
+sublanes (K padded to the block), epoch include flags as (E, 1) int32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import compat
+
+DEFAULT_BLOCK_K = 256
+
+
+def _window_union_kernel(
+    inc_ref, regs_ref, union_ref, hist_ref, *, n_epochs, m, nb_padded, r_min
+):
+    ei = pl.program_id(1)  # epoch step (innermost)
+    inc = inc_ref[0, 0]  # 1 if this epoch is inside the window
+    plane = regs_ref[0]  # (K_blk, m_pad) int8, this epoch's registers
+    contrib = jnp.where(inc > 0, plane, jnp.int8(r_min))
+
+    @pl.when(ei == 0)
+    def _init():
+        union_ref[...] = contrib
+
+    @pl.when(ei > 0)
+    def _accum():
+        union_ref[...] = jnp.maximum(union_ref[...], contrib)
+
+    @pl.when(ei == n_epochs - 1)
+    def _bincount():
+        # Widen per block only — the HBM arrays stay int8.
+        u = union_ref[...].astype(jnp.int32)
+        lane_valid = jax.lax.broadcasted_iota(jnp.int32, u.shape, 1) < m
+
+        def bin_body(v, _):
+            cnt = jnp.sum(
+                jnp.where(lane_valid & (u == v + r_min), 1, 0),
+                axis=1,
+                keepdims=True,
+            ).astype(jnp.int32)
+            hist_ref[:, pl.ds(v, 1)] = cnt
+            return _
+
+        jax.lax.fori_loop(0, nb_padded, bin_body, None)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m", "nb_padded", "r_min", "block_k", "interpret")
+)
+def window_union_padded(
+    regs,
+    include,
+    *,
+    m: int,
+    nb_padded: int,
+    r_min: int,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+):
+    """Kernel entry on pre-padded operands.
+
+    regs: (E, K_pad, m_pad) int8, K_pad % block_k == 0, m_pad % 128 == 0,
+      pad rows/lanes at r_min. int8 end to end: the ring is streamed at its
+      native register width (the only HBM intermediate the wrapper creates
+      is the padded int8 copy, and none when K and m are already aligned).
+    include: (E, 1) int32 — 1 for epochs inside the window, 0 outside.
+    Returns (union (K_pad, m_pad) int8, hist (K_pad, nb_padded) int32) with
+    ``hist`` the full per-row histogram over the real m lanes only.
+    """
+    e, kp, mp = regs.shape
+    kernel = functools.partial(
+        _window_union_kernel, n_epochs=e, m=m, nb_padded=nb_padded, r_min=r_min
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(kp // block_k, e),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda ki, ei: (ei, 0)),
+            pl.BlockSpec((1, block_k, mp), lambda ki, ei: (ei, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_k, mp), lambda ki, ei: (ki, 0)),
+            pl.BlockSpec((block_k, nb_padded), lambda ki, ei: (ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((kp, mp), jnp.int8),
+            jax.ShapeDtypeStruct((kp, nb_padded), jnp.int32),
+        ],
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(include, regs)

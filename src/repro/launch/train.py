@@ -70,6 +70,16 @@ def main(argv=None):
     ap.add_argument("--quantized-opt", action="store_true")
     ap.add_argument("--compress", action="store_true")
     ap.add_argument("--no-sketch", action="store_true")
+    ap.add_argument("--doc-window-capacity", type=int, default=0,
+                    help="enable sliding-window per-document coverage telemetry "
+                         "with this many tenant slots (0 = off)")
+    ap.add_argument("--doc-window-epochs", type=int, default=4,
+                    help="ring size E of the per-document window monitor")
+    ap.add_argument("--rotate-every", type=int, default=20,
+                    help="train steps per window epoch (rotation cadence)")
+    ap.add_argument("--n-docs", type=int, default=512,
+                    help="distinct document ids the token stream draws from "
+                         "when the doc window is enabled")
     ap.add_argument("--no-resume", action="store_true")
     ap.add_argument("--straggler-factor", type=float, default=3.0)
     ap.add_argument("--metrics-file", default="")
@@ -87,6 +97,18 @@ def main(argv=None):
     mesh = make_local_mesh()
     cfg = build_config(args.arch, args.smoke)
     sketch_cfg = None if args.no_sketch else paper_qsketch.telemetry_default()
+    # Sliding-window per-document telemetry (DESIGN.md §8.5): the train loop
+    # owns the epoch clock — every --rotate-every steps the window rotates,
+    # so "distinct tokens per document" is scoped to the trailing E epochs
+    # and cold document fingerprints age out of the directory.
+    # The monitor only needs a sketch geometry of its own — --no-sketch
+    # (scalar token telemetry off) and the doc window compose independently.
+    tenant_mon = None
+    if args.doc_window_capacity:
+        tenant_mon = monitor.WindowMonitor.for_capacity(
+            paper_qsketch.telemetry_default(), args.doc_window_capacity,
+            args.doc_window_epochs, evict_after=args.doc_window_epochs,
+        )
     ocfg = optimizer.OptConfig(
         lr=args.lr, total_steps=args.steps, warmup_steps=max(args.steps // 20, 1),
         quantized=args.quantized_opt,
@@ -100,7 +122,8 @@ def main(argv=None):
     shardings = msharding.sharding_tree(defs, mesh)
     params = jax.tree.map(lambda x, s: jax.device_put(x, s), params, shardings)
     opt_state, comp_state, sk_state = ts.init_states(
-        cfg, ocfg, params, sketch_cfg=sketch_cfg, compress=args.compress
+        cfg, ocfg, params, sketch_cfg=sketch_cfg, tenant_monitor=tenant_mon,
+        compress=args.compress,
     )
 
     start_step = 0
@@ -124,13 +147,16 @@ def main(argv=None):
 
     step_fn = jax.jit(
         ts.make_train_step(
-            cfg, ocfg, mesh, sketch_cfg=sketch_cfg, compress=args.compress,
-            microbatches=args.microbatches,
+            cfg, ocfg, mesh, sketch_cfg=sketch_cfg, tenant_monitor=tenant_mon,
+            compress=args.compress, microbatches=args.microbatches,
         ),
         donate_argnums=(0, 1, 2, 3),
     )
 
-    stream = TokenStream(cfg.vocab, args.batch, args.seq, seed=args.seed)
+    stream = TokenStream(
+        cfg.vocab, args.batch, args.seq, seed=args.seed,
+        n_docs=args.n_docs if tenant_mon is not None else 0,
+    )
     ckpt = checkpoint.AsyncCheckpointer(args.ckpt_dir)
     metrics_f = open(args.metrics_file, "a") if args.metrics_file else None
 
@@ -161,6 +187,13 @@ def main(argv=None):
             if dt > args.straggler_factor * ema and step > start_step + 3:
                 print(f"[watchdog] straggler step {step}: {dt:.2f}s vs ema {ema:.2f}s", flush=True)
             step += 1
+            if tenant_mon is not None and step % args.rotate_every == 0:
+                # Epoch tick: rotate the document window (evicting the oldest
+                # epoch + aging cold fingerprints) OUTSIDE the jit'd step.
+                sk_state = monitor.TelemetryState(
+                    scalar=sk_state.scalar,
+                    tenants=tenant_mon.rotate(sk_state.tenants),
+                )
             if step % args.log_every == 0 or step == args.steps:
                 line = {"step": step, "time_s": round(dt, 4), **{k: round(v, 5) for k, v in metrics.items()}}
                 print(f"[train] {json.dumps(line)}", flush=True)

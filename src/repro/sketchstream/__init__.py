@@ -1,5 +1,6 @@
-"""Sketch-based streaming telemetry for training/serving (DESIGN.md §2)."""
+"""Sketch-based streaming telemetry for training/serving (DESIGN.md §2),
+plus per-tenant anomaly scoring over the windowed estimates (§8.5)."""
 
-from . import monitor
+from . import anomaly, monitor
 
-__all__ = ["monitor"]
+__all__ = ["monitor", "anomaly"]

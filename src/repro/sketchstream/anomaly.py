@@ -1,0 +1,183 @@
+"""AnomalyBank: per-tenant drift scoring over windowed sketch estimates.
+
+The paper motivates QSketch with "real-time applications like anomaly
+detection"; this module is that last mile. It consumes the per-tenant
+weighted-cardinality vector a ``WindowMonitor`` emits every step (the O(K)
+anytime full-ring read, or a windowed MLE read) and maintains, per tenant:
+
+* an **EWMA baseline** of the estimate and of its absolute deviation — the
+  tenant's "normal" windowed traffic and its noise scale (sketch noise +
+  genuine variation, no distributional assumption);
+* a **one-sided CUSUM** drift score over the standardized residual
+  s_t = max(0, s_{t-1} + z_t - k): small persistent drifts accumulate,
+  zero-mean noise does not (Page's classic sequential test — the right shape
+  for "this tenant's distinct weighted traffic is climbing", which a plain
+  threshold on z misses and a threshold on the raw estimate can't normalize
+  across tenants whose baselines differ by orders of magnitude).
+
+``step`` is one fused jit over all K tenants — scoring a million tenants
+costs a handful of O(K) vector ops, in the same spirit as the DynArray's
+O(K) estimate read. Alerting semantics:
+
+* warmup: the first ``warmup`` steps only adapt the baseline (running mean,
+  not EWMA, so early baselines converge fast) and never score — a fresh bank
+  doesn't alarm on the first batch it ever sees;
+* gating: tenants whose baseline weight is below ``min_weight`` never score
+  (empty slots of an over-provisioned K and dust-traffic tenants produce
+  near-zero, MLE-noise-dominated estimates — DESIGN.md §8.5);
+* damping: while a tenant's score exceeds the alert threshold ``h``, its
+  baseline adapts at ``alpha * freeze_factor`` — slow enough that a
+  sustained attack is not absorbed into "normal" within a few steps (which
+  would self-clear the alert while the anomaly is live), but nonzero so a
+  level shift that IS the new normal eventually re-baselines and the score
+  drains, instead of ratcheting forever off a frozen baseline.
+
+``top_alerts`` ranks the alerting tenants by score for human consumption —
+the "ranked alert set" a pager wants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class AnomalyConfig:
+    """Frozen (hashable) scoring config — a valid ``jax.jit`` static arg.
+
+    Attributes:
+      alpha: EWMA step for the baseline mean/deviation (post-warmup).
+      cusum_k: CUSUM slack in deviation units — drifts below k·dev are
+        treated as noise and decay out of the score.
+      cusum_h: alert threshold in slack-adjusted deviation units; a tenant
+        alerts while score > cusum_h.
+      warmup: steps of baseline-only adaptation before scoring starts. For
+        sliding-window feeds, cover the ring fill (warmup >= E): while the
+        ring fills, EVERY tenant's windowed estimate drifts up as the window
+        widens, which is growth of the window, not of the tenant.
+      min_weight: baseline gate — tenants whose EWMA baseline is below this
+        never score (kills empty-slot / dust-tenant noise).
+      min_scale: absolute floor on the deviation scale (a tenant with a
+        perfectly flat history must not alert on f32 dust).
+      freeze_factor: baseline-adaptation multiplier while over threshold, in
+        [0, 1); see "damping" in the module docstring.
+    """
+
+    alpha: float = 0.2
+    cusum_k: float = 0.5
+    cusum_h: float = 6.0
+    warmup: int = 3
+    min_weight: float = 1.0
+    min_scale: float = 1e-3
+    freeze_factor: float = 0.1
+
+    def __post_init__(self):
+        if not 0.0 < self.alpha <= 1.0:
+            raise ValueError("EWMA alpha must be in (0, 1]")
+        if self.cusum_h <= 0 or self.cusum_k < 0:
+            raise ValueError("need cusum_h > 0 and cusum_k >= 0")
+        if self.warmup < 1:
+            raise ValueError("warmup must be >= 1 (the first observation has no baseline)")
+        if not 0.0 <= self.freeze_factor < 1.0:
+            raise ValueError("freeze_factor must be in [0, 1)")
+
+
+class AnomalyBankState(NamedTuple):
+    """Per-tenant scoring state (a pytree; threads through jit/scan/ckpt)."""
+
+    mean: jnp.ndarray  # f32[K] EWMA baseline of the windowed estimate
+    dev: jnp.ndarray  # f32[K] EWMA of |residual| (noise scale)
+    score: jnp.ndarray  # f32[K] one-sided CUSUM drift score
+    n_steps: jnp.ndarray  # int32 scalar, observations folded so far
+
+
+def init(k: int) -> AnomalyBankState:
+    if k < 1:
+        raise ValueError("AnomalyBank needs k >= 1 tenants")
+    return AnomalyBankState(
+        mean=jnp.zeros((k,), jnp.float32),
+        dev=jnp.zeros((k,), jnp.float32),
+        score=jnp.zeros((k,), jnp.float32),
+        n_steps=jnp.int32(0),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def step(bcfg: AnomalyConfig, state: AnomalyBankState, estimates) -> tuple[
+    AnomalyBankState, jnp.ndarray
+]:
+    """Fold one observation vector Ĉ[K]; -> (state', scores f32[K]).
+
+    Scores are in threshold units: score > cusum_h  ⇔  alerting. During
+    warmup every score is 0 and the baseline adapts as a running mean (step
+    t weights the new observation 1/(t+1)); afterwards mean/dev follow the
+    EWMA except for tenants over threshold AFTER this step's scoring, whose
+    adaptation is damped to ``freeze_factor * alpha`` until the score drains
+    back under the threshold (see "damping" in the module docstring).
+    """
+    est = jnp.asarray(estimates, jnp.float32)
+    in_warmup = state.n_steps < bcfg.warmup
+
+    resid = est - state.mean
+    scale = jnp.maximum(state.dev, bcfg.min_scale)
+    z = resid / scale
+    scored = (
+        (~in_warmup)
+        & (state.mean >= bcfg.min_weight)
+    )
+    score = jnp.where(
+        scored, jnp.maximum(0.0, state.score + z - bcfg.cusum_k), 0.0
+    )
+
+    # Baseline adaptation: running mean during warmup, EWMA after, damped by
+    # freeze_factor while alerting — gated on the score JUST computed, so the
+    # step that crosses the threshold is already damped.
+    eff_alpha = jnp.where(
+        in_warmup,
+        1.0 / (state.n_steps.astype(jnp.float32) + 1.0),
+        jnp.float32(bcfg.alpha),
+    )
+    adapt = jnp.where(score > bcfg.cusum_h, bcfg.freeze_factor * eff_alpha, eff_alpha)
+    mean = state.mean + adapt * resid
+    dev = state.dev + adapt * (jnp.abs(resid) - state.dev)
+
+    return (
+        AnomalyBankState(
+            mean=mean, dev=dev, score=score, n_steps=state.n_steps + 1
+        ),
+        score,
+    )
+
+
+def merge(a: AnomalyBankState, b: AnomalyBankState) -> AnomalyBankState:
+    """Cross-pod telemetry union for banks scoring DISJOINT tenant rows
+    (key-partitioned fleets): element-wise sum of baselines/scores is exact
+    when each tenant is live on exactly one pod (the other pod holds zeros).
+    Banks that scored the same tenant must not be merged — re-score from the
+    merged monitor instead.
+    """
+    if a.mean.shape != b.mean.shape:
+        raise ValueError(
+            f"AnomalyBank merge needs matching K, got {a.mean.shape} vs {b.mean.shape}"
+        )
+    return AnomalyBankState(
+        mean=a.mean + b.mean,
+        dev=a.dev + b.dev,
+        score=a.score + b.score,
+        n_steps=jnp.maximum(a.n_steps, b.n_steps),
+    )
+
+
+def top_alerts(bcfg: AnomalyConfig, scores, n: int = 5):
+    """Host-side ranked alert set: [(slot, score), ...] for the up-to-n
+    tenants whose score exceeds the threshold, strongest first."""
+    s = np.asarray(scores)
+    over = np.nonzero(s > bcfg.cusum_h)[0]
+    ranked = over[np.argsort(-s[over], kind="stable")][: int(n)]
+    return [(int(i), float(s[i])) for i in ranked]

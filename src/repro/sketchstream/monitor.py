@@ -51,6 +51,15 @@ register matrix for ``core/dyn_array.py`` — per-key §4.3 martingales make
 ``estimate`` an O(K) read instead of the O(K·2^b) vmapped Newton. Same
 init/update/estimate/merge/metrics surface, so train/serve steps accept
 either tenant monitor unchanged.
+
+Time-scoped per-tenant reads (fifth layer): ``WindowMonitor`` backs the same
+sparse-key surface with ``core/window_array.py`` — a ring of E epoch
+sub-states whose union answers "weighted distinct traffic in the last
+w <= E epochs" instead of "since init". ``rotate`` advances the epoch clock
+(evicting the oldest epoch and aging cold directory fingerprints on the same
+tick), and the windowed estimate vector feeds ``sketchstream/anomaly.py``'s
+per-tenant drift scoring — the paper's real-time anomaly-detection loop,
+closed (DESIGN.md §8.5).
 """
 
 from __future__ import annotations
@@ -67,6 +76,7 @@ from repro.core import (
     qsketch,
     sharded_array,
     sketch_array,
+    window_array,
 )
 from repro.core.key_directory import DirectoryConfig, DirectoryState
 from repro.core.types import (
@@ -74,6 +84,7 @@ from repro.core.types import (
     QSketchState,
     ShardedArrayState,
     SketchArrayState,
+    WindowArrayState,
 )
 
 
@@ -391,4 +402,116 @@ class DynArrayMonitor:
             "tenant_slots_claimed": jnp.sum((state.directory.fingerprints != 0).astype(jnp.int32)),
             "tenant_collision_rate": key_directory.collision_rate(state.directory),
             "tenant_weight_total": jnp.sum(state.chats),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window per-tenant telemetry: epoch ring, time-scoped estimates
+# ---------------------------------------------------------------------------
+
+
+class WindowMonitorState(NamedTuple):
+    """Pytree state of a WindowMonitor (threads through jit/scan/ckpt)."""
+
+    window: WindowArrayState  # epoch ring + cached union (core/window_array)
+    directory: DirectoryState  # key-collision telemetry + aging stamps
+    n_seen: jnp.ndarray  # int32 live-element counter across all tenants
+
+
+class WindowMonitor:
+    """Per-tenant SLIDING-WINDOW weighted-cardinality telemetry.
+
+    Same sparse-64-bit-tenant surface as ``DynArrayMonitor`` (init/update/
+    estimate/merge/metrics, key-directory routing) backed by
+    ``core/window_array.py``: estimates answer "weighted distinct traffic in
+    the last w <= E epochs", not "since init" — what a real-time anomaly
+    detector consumes. Two extra verbs beyond the shared surface:
+
+    * ``rotate(state)`` — close the current epoch (the caller's clock: every
+      N steps / T seconds). Evicts the oldest epoch once the ring is full and
+      optionally ages cold directory fingerprints that have not been touched
+      for ``evict_after`` epochs (0 disables aging).
+    * ``estimate(state, w=None)`` — ``w=None`` is the O(K) anytime read of
+      the full-ring window (running union martingales); an integer w is the
+      windowed histogram-MLE read over the last w epochs.
+
+    The instance is configuration (closed over by jit); all mutable data
+    lives in ``WindowMonitorState``.
+    """
+
+    def __init__(self, cfg: SketchConfig, dcfg: DirectoryConfig, n_epochs: int, *, evict_after: int = 0):
+        if evict_after < 0:
+            raise ValueError("evict_after must be >= 0 (0 disables aging)")
+        self.cfg = cfg
+        self.dcfg = dcfg
+        self.n_epochs = int(n_epochs)
+        self.evict_after = int(evict_after)
+
+    @classmethod
+    def for_capacity(cls, cfg: SketchConfig, capacity: int, n_epochs: int, *, seed: int | None = None, pinned: tuple = (), evict_after: int = 0):
+        dcfg = DirectoryConfig(capacity=capacity, seed=cfg.seed if seed is None else seed, pinned=pinned)
+        return cls(cfg, dcfg, n_epochs, evict_after=evict_after)
+
+    def init(self) -> WindowMonitorState:
+        return WindowMonitorState(
+            window=window_array.init(self.cfg, self.dcfg.capacity, self.n_epochs),
+            directory=key_directory.init(self.dcfg),
+            n_seen=jnp.int32(0),
+        )
+
+    def update(self, state: WindowMonitorState, tenant_keys, ids, weights=None, mask=None) -> WindowMonitorState:
+        """Fold a keyed batch into the CURRENT epoch: tenant_keys are sparse
+        ids (uint32 or (lo, hi) pair), flattened together with ids/weights/
+        mask like ``update``. Routed slots are stamped with the window's
+        epoch clock for directory aging."""
+        keys = _flatten_keys(tenant_keys)
+        ids, w, mask, n_live = _flatten(ids, weights, mask)
+        win, dir_state = window_array.update_tenants(
+            self.cfg, self.dcfg, state.window, state.directory,
+            keys, ids, w, mask=mask,
+        )
+        return WindowMonitorState(
+            window=win, directory=dir_state, n_seen=state.n_seen + n_live
+        )
+
+    def rotate(self, state: WindowMonitorState) -> WindowMonitorState:
+        """Advance the epoch clock (evicting the oldest epoch once the ring
+        is full); age cold directory fingerprints if configured."""
+        win = window_array.rotate(self.cfg, state.window)
+        directory = state.directory
+        if self.evict_after:
+            directory, _ = key_directory.evict_older_than(
+                self.dcfg, directory, win.epoch_id - self.evict_after
+            )
+        return WindowMonitorState(
+            window=win, directory=directory, n_seen=state.n_seen
+        )
+
+    def estimate(self, state: WindowMonitorState, w: int | None = None) -> jnp.ndarray:
+        """Ĉ[K] over the trailing window. ``w=None``: the anytime O(K) read
+        of the full-ring window; ``w`` an int in [1, E]: the union MLE read
+        over the last w epochs."""
+        if w is None:
+            return window_array.estimate_ring_anytime(state.window)
+        return window_array.estimate_window(self.cfg, state.window, w)
+
+    def merge(self, a: WindowMonitorState, b: WindowMonitorState) -> WindowMonitorState:
+        """Cross-pod union of ring-aligned windows (pods rotate on a shared
+        clock): per-epoch register max + MLE re-estimates, directory merge."""
+        return WindowMonitorState(
+            window=window_array.merge(self.cfg, a.window, b.window),
+            directory=key_directory.merge(a.directory, b.directory),
+            n_seen=a.n_seen + b.n_seen,
+        )
+
+    def metrics(self, state: WindowMonitorState) -> dict:
+        """Cheap per-step scalars: stream + directory health + the window
+        clock and the total windowed weight (an O(K) sum of the anytime
+        union reads — no solve)."""
+        return {
+            "tenant_elements_seen": state.n_seen,
+            "tenant_slots_claimed": jnp.sum((state.directory.fingerprints != 0).astype(jnp.int32)),
+            "tenant_collision_rate": key_directory.collision_rate(state.directory),
+            "tenant_window_weight": jnp.sum(state.window.union_chats),
+            "tenant_window_epoch": state.window.epoch_id,
         }

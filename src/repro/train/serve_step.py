@@ -31,7 +31,7 @@ def make_decode_step(
     mesh=None,
     *,
     sketch_cfg: SketchConfig | None = None,
-    tenant_monitor: monitor.ShardedArrayMonitor | monitor.DynArrayMonitor | None = None,
+    tenant_monitor: monitor.ShardedArrayMonitor | monitor.DynArrayMonitor | monitor.WindowMonitor | None = None,
     temperature: float = 0.0,
 ):
     """With ``tenant_monitor`` set, ``sk_state`` is a ``TelemetryState`` and
@@ -40,7 +40,9 @@ def make_decode_step(
     the global one. A ``ShardedArrayMonitor`` shards registers over the
     monitor's mesh axis; a ``DynArrayMonitor`` instead keeps per-tenant
     martingales so the serving loop can read every tenant's DAU weight O(1)
-    per key, every step."""
+    per key, every step; a ``WindowMonitor`` scopes those reads to the last
+    w epochs (the serving loop owns the epoch clock via ``monitor.rotate``),
+    which is what per-tenant anomaly alerting consumes."""
 
     def decode_one(params, cache, cur_len, tokens, sk_state=None, session_ids=None, session_weights=None, rng=None, session_mask=None, tenant_ids=None):
         logits, cache = transformer.decode_step(params, cache, cur_len, tokens, mcfg, mesh)

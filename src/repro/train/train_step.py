@@ -32,7 +32,7 @@ def make_train_step(
     mesh=None,
     *,
     sketch_cfg: SketchConfig | None = None,
-    tenant_monitor: monitor.ShardedArrayMonitor | monitor.DynArrayMonitor | None = None,
+    tenant_monitor: monitor.ShardedArrayMonitor | monitor.DynArrayMonitor | monitor.WindowMonitor | None = None,
     compress: bool = False,
     microbatches: int = 1,
     remat=True,
@@ -45,10 +45,12 @@ def make_train_step(
     document distinct-token coverage next to the global sketch. 64-bit ids
     arrive as two uint32 words: ``doc_ids`` (lo) + optional ``doc_ids_hi``
     (JAX x64 is off, a single field would silently truncate the high word).
-    Either tenant monitor drops in: ``ShardedArrayMonitor`` (mesh-sharded
-    registers, Newton estimation at logging cadence) or ``DynArrayMonitor``
-    (single-host Dyn martingales, O(K)-anytime per-tenant reads) — the step
-    only touches the shared update/metrics surface."""
+    Any tenant monitor drops in: ``ShardedArrayMonitor`` (mesh-sharded
+    registers, Newton estimation at logging cadence), ``DynArrayMonitor``
+    (single-host Dyn martingales, O(K)-anytime per-tenant reads), or
+    ``WindowMonitor`` (sliding-window estimates; the outer loop owns the
+    epoch clock and calls ``monitor.rotate`` between steps) — the step only
+    touches the shared update/metrics surface."""
     def _loss(params, mb):
         return transformer.loss_fn(params, mb, mcfg, mesh, remat=remat, sharded_xent=sharded_xent)
 
