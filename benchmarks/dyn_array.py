@@ -127,3 +127,76 @@ def run(quick=True):
 
     common.merge_save("dyn_array", rows, {n_keys, *ks})
     return rows
+
+
+def run_sharded(quick=True):
+    """ShardedDynArray vs the single-host DynArray: hash-routed update
+    throughput and the O(K)-anytime read as K grows past one host.
+
+    Uses every visible device as a shard of the ``sketch`` mesh axis (run
+    under scripts/test.sh / XLA_FLAGS for the 8-device host mesh). The two
+    schedules are bit-identical on every leaf — chats included — so the
+    deltas are pure shard_map routing overhead vs register/histogram
+    residency (DESIGN.md §8.6); bit-identity is asserted per cell. The
+    sweep is cumulative over K cells into
+    experiments/bench/dyn_array_sharded.json (common.merge_save), so smoke
+    runs never erase paper-scale rows.
+    """
+    from repro.core import sharded_dyn_array
+    from repro.launch.mesh import make_sketch_mesh
+
+    mesh = make_sketch_mesh()
+    n_dev = sharded_dyn_array.num_shards(mesh)
+    m, batch = 128, 8192
+    n_batches = 4 if quick else 10
+    ks = [2**10, 2**13] if quick else [2**10, 2**14, 2**17, 2**20]
+
+    rows = []
+    for k in ks:
+        cfg = SketchConfig(m=m, b=8, seed=17)
+        batches = common.keyed_batches(k, n_batches, batch, seed=k)
+
+        eps_single, st_single = common.keyed_throughput(
+            lambda s, keys, i, w: dyn_array.update_batch(cfg, s, keys, i, w),
+            dyn_array.init(cfg, k),
+            batches,
+        )
+        eps_shard, st_shard = common.keyed_throughput(
+            lambda s, keys, i, w: sharded_dyn_array.update_batch(cfg, mesh, s, keys, i, w),
+            sharded_dyn_array.init(cfg, k, mesh),
+            batches,
+        )
+        for name in ("regs", "hists", "chats"):
+            if not np.array_equal(
+                np.asarray(getattr(st_shard, name)), np.asarray(getattr(st_single, name))
+            ):
+                raise AssertionError(
+                    f"sharded and single-host DynArray {name} diverged at K={k}"
+                )
+
+        iters = 3 if k <= 2**14 else 1
+        t_read = common.time_fn(
+            lambda s: np.asarray(sharded_dyn_array.estimate_all(s)), st_shard,
+            warmup=1, iters=iters,
+        )
+        t_mle = common.time_fn(
+            lambda s: sharded_dyn_array.estimate_mle_all(cfg, mesh, s), st_shard,
+            warmup=1, iters=iters,
+        )
+        rows += [
+            {"figure": "dyn_array_sharded_throughput", "method": "single_host", "k": k, "m": m, "mops": eps_single / 1e6},
+            {"figure": "dyn_array_sharded_throughput", "method": f"sharded_x{n_dev}", "k": k, "m": m, "shards": n_dev, "mops": eps_shard / 1e6},
+            {"figure": "dyn_array_sharded_throughput", "method": "speedup", "k": k, "m": m, "x": eps_shard / eps_single},
+            {"figure": "dyn_array_sharded_estimate", "method": "anytime_read", "k": k, "m": m, "ms": t_read * 1e3},
+            {"figure": "dyn_array_sharded_estimate", "method": "sharded_newton_mle", "k": k, "m": m, "shards": n_dev, "ms": t_mle * 1e3},
+            {"figure": "dyn_array_sharded_estimate", "method": "speedup", "k": k, "m": m, "x": t_mle / max(t_read, 1e-9)},
+        ]
+        common.csv_row(f"dyn_array_sharded/K{k}/single_host", 1e6 / eps_single, f"mops={eps_single/1e6:.3f}")
+        common.csv_row(f"dyn_array_sharded/K{k}/sharded_x{n_dev}", 1e6 / eps_shard, f"mops={eps_shard/1e6:.3f}")
+        common.csv_row(
+            f"dyn_array_sharded/K{k}/anytime_read", t_read * 1e6,
+            f"ms={t_read*1e3:.3f} vs sharded_mle={t_mle*1e3:.1f}ms",
+        )
+
+    common.merge_save("dyn_array_sharded", rows, set(ks))
+    return rows

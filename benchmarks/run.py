@@ -16,8 +16,16 @@ import argparse
 import time
 
 # Fast enough for CI while still covering the fused + sharded + Dyn +
-# sliding-window paths.
-SMOKE_SUITES = ("sketch_array", "sketch_array_sharded", "dyn_array", "window_array")
+# sliding-window paths (cumulative sweeps included so their JSON schema is
+# exercised every run).
+SMOKE_SUITES = (
+    "sketch_array",
+    "sketch_array_sharded",
+    "dyn_array",
+    "dyn_array_sharded",
+    "window_array",
+    "window_array_sharded",
+)
 
 
 def main() -> None:
@@ -52,7 +60,9 @@ def main() -> None:
         "sketch_array": sketch_array.run,  # fused K-sketch vs naive loop
         "sketch_array_sharded": sketch_array.run_sharded,  # mesh-sharded K sweep
         "dyn_array": dyn_array.run,  # anytime reads vs Newton estimate_all
+        "dyn_array_sharded": dyn_array.run_sharded,  # sharded Dyn K sweep
         "window_array": window_array.run,  # sliding-window reads vs per-epoch Newton
+        "window_array_sharded": window_array.run_sharded,  # sharded ring (K, E) sweep
     }
     only = [s for s in args.only.split(",") if s]
     names = only or (list(SMOKE_SUITES) if args.smoke else list(suite))

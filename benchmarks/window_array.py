@@ -148,3 +148,87 @@ def run(quick=True):
 
     common.merge_save("window_array", rows, swept, sweep_keys=("k", "e"))
     return rows
+
+
+def run_sharded(quick=True):
+    """Sharded WindowArray vs the single-host ring: windowed update
+    throughput, shard-local rotation, and the windowed reads as (K, E)
+    grow past one host.
+
+    Uses every visible device as a shard of the ``sketch`` mesh axis. Both
+    schedules see identical batches and rotations, and every ring/union
+    leaf is asserted bit-identical per cell (the epoch-plane max-union
+    commutes with row sharding, DESIGN.md §8.6). Cumulative over (k, e)
+    cells into experiments/bench/window_array_sharded.json
+    (common.merge_save), so smoke runs never erase paper-scale rows.
+    """
+    from repro.core import sharded_window_array, sharding
+    from repro.launch.mesh import make_sketch_mesh
+
+    mesh = make_sketch_mesh()
+    n_dev = sharding.num_shards(mesh)
+    m, batch = 64, 8192
+    n_batches = 4 if quick else 8
+    cells = [(2**10, 4), (2**13, 4)] if quick else [(2**10, 4), (2**14, 4), (2**17, 8)]
+
+    rows = []
+    for k, e in cells:
+        cfg = SketchConfig(m=m, b=8, seed=17)
+        batches = common.keyed_batches(k, n_batches, batch, seed=k + e)
+
+        eps_single, st_single = common.keyed_throughput(
+            lambda s, keys, i, w: window_array.update_batch(cfg, s, keys, i, w),
+            window_array.init(cfg, k, e),
+            batches,
+        )
+        eps_shard, st_shard = common.keyed_throughput(
+            lambda s, keys, i, w: sharded_window_array.update_batch(cfg, mesh, s, keys, i, w),
+            sharded_window_array.init(cfg, k, e, mesh),
+            batches,
+        )
+        # One rotation each (same clock), then assert bit-identity leafwise.
+        st_single = window_array.rotate(cfg, st_single)
+        st_shard = sharded_window_array.rotate(cfg, mesh, st_shard)
+        for name in ("regs", "hists", "chats", "union_regs", "union_hists", "union_chats"):
+            if not np.array_equal(
+                np.asarray(getattr(st_shard, name)), np.asarray(getattr(st_single, name))
+            ):
+                raise AssertionError(
+                    f"sharded and single-host WindowArray {name} diverged at K={k} E={e}"
+                )
+
+        t_rot = common.time_fn(
+            lambda s: sharded_window_array.rotate(cfg, mesh, s), st_shard,
+            warmup=1, iters=3,
+        )
+        t_ring = common.time_fn(
+            lambda s: sharded_window_array.estimate_window(cfg, mesh, s, e), st_shard,
+            warmup=1, iters=3,
+        )
+        t_ring_single = common.time_fn(
+            lambda s: window_array.estimate_window(cfg, s, e), st_single,
+            warmup=1, iters=3,
+        )
+        t_sub = common.time_fn(
+            lambda s: sharded_window_array.estimate_window(cfg, mesh, s, max(e // 2, 1)),
+            st_shard, warmup=1, iters=3,
+        )
+        rows += [
+            {"figure": "window_array_sharded_throughput", "method": "single_host", "k": k, "e": e, "m": m, "mops": eps_single / 1e6},
+            {"figure": "window_array_sharded_throughput", "method": f"sharded_x{n_dev}", "k": k, "e": e, "m": m, "shards": n_dev, "mops": eps_shard / 1e6},
+            {"figure": "window_array_sharded_throughput", "method": "speedup", "k": k, "e": e, "m": m, "x": eps_shard / eps_single},
+            {"figure": "window_array_sharded_estimate", "method": "rotate", "k": k, "e": e, "m": m, "ms": t_rot * 1e3},
+            {"figure": "window_array_sharded_estimate", "method": "full_ring_cached", "k": k, "e": e, "m": m, "ms": t_ring * 1e3},
+            {"figure": "window_array_sharded_estimate", "method": "full_ring_single_host", "k": k, "e": e, "m": m, "ms": t_ring_single * 1e3},
+            {"figure": "window_array_sharded_estimate", "method": "subring_union", "k": k, "e": e, "m": m, "ms": t_sub * 1e3},
+            {"figure": "window_array_sharded_estimate", "method": "speedup", "k": k, "e": e, "m": m, "x": t_ring_single / max(t_ring, 1e-9)},
+        ]
+        common.csv_row(f"window_array_sharded/K{k}/E{e}/single_host", 1e6 / eps_single, f"mops={eps_single/1e6:.3f}")
+        common.csv_row(f"window_array_sharded/K{k}/E{e}/sharded_x{n_dev}", 1e6 / eps_shard, f"mops={eps_shard/1e6:.3f}")
+        common.csv_row(
+            f"window_array_sharded/K{k}/E{e}/reads", t_ring * 1e6,
+            f"ring={t_ring*1e3:.2f}ms sub={t_sub*1e3:.2f}ms rotate={t_rot*1e3:.2f}ms",
+        )
+
+    common.merge_save("window_array_sharded", rows, set(cells), sweep_keys=("k", "e"))
+    return rows

@@ -28,7 +28,12 @@ import sys
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
 
 # Files written through common.merge_save — the cumulative-merge contract.
-CUMULATIVE = ("dyn_array.json", "window_array.json")
+CUMULATIVE = (
+    "dyn_array.json",
+    "dyn_array_sharded.json",
+    "window_array.json",
+    "window_array_sharded.json",
+)
 PAYLOAD_KEYS = ("mops", "ms", "x", "us")
 
 

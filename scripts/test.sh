@@ -9,12 +9,15 @@
 # - XLA_FLAGS exposes 8 host devices (per SNIPPETS.md) so mesh/sharding tests
 #   exercise multi-device code paths on a CPU-only box; an existing
 #   XLA_FLAGS setting is preserved and extended.
-# - --tier2 additionally runs `python -m benchmarks.run --smoke` (the quick
-#   profile over the fast suites, incl. the sharded SketchArray sweep and the
-#   sliding-window suite) so CI catches benchmark-path rot without paying for
-#   the paper-scale sweeps, then asserts the cumulative bench-JSON schema
-#   (required keys, unique + monotone K per group) so a broken cumulative
-#   merge fails loudly instead of silently dropping or duplicating rows.
+# - --tier2 additionally (1) audits public docstrings in core/ +
+#   sketchstream/ (scripts/check_docstrings.py — the shape/dtype and merge
+#   contracts live there), (2) runs `python -m benchmarks.run --smoke` (the
+#   quick profile over the fast suites, incl. the sharded SketchArray /
+#   DynArray / WindowArray sweeps) so CI catches benchmark-path rot without
+#   paying for the paper-scale sweeps, then (3) asserts the cumulative
+#   bench-JSON schema (required keys, unique + monotone K per group) so a
+#   broken cumulative merge fails loudly instead of silently dropping or
+#   duplicating rows.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -30,6 +33,8 @@ fi
 python -m pytest -x -q "$@"
 
 if [[ "$tier2" == 1 ]]; then
+  echo "== tier-2: public docstring audit =="
+  python scripts/check_docstrings.py
   echo "== tier-2: benchmark smoke paths =="
   python -m benchmarks.run --smoke
   echo "== tier-2: bench JSON schema =="

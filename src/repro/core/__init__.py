@@ -24,6 +24,9 @@ from . import (
     qsketch,
     qsketch_dyn,
     sharded_array,
+    sharded_dyn_array,
+    sharded_window_array,
+    sharding,
     sketch_array,
     window_array,
 )
@@ -34,6 +37,8 @@ from .types import (
     FloatSketchState,
     QSketchState,
     ShardedArrayState,
+    ShardedDynArrayState,
+    ShardedWindowArrayState,
     SketchArrayState,
     SketchConfig,
     WindowArrayState,
@@ -91,10 +96,15 @@ __all__ = [
     "DynState",
     "FloatSketchState",
     "WindowArrayState",
+    "ShardedDynArrayState",
+    "ShardedWindowArrayState",
     "qsketch",
     "qsketch_dyn",
     "sketch_array",
     "sharded_array",
+    "sharded_dyn_array",
+    "sharded_window_array",
+    "sharding",
     "dyn_array",
     "window_array",
     "key_directory",

@@ -38,6 +38,7 @@ _INIT = jnp.float32(jnp.finfo(jnp.float32).max)
 
 
 def init(cfg: SketchConfig) -> FloatSketchState:
+    """Fresh float baseline sketch: f32[m] min-registers at +max (empty)."""
     return FloatSketchState(regs=jnp.full((cfg.m,), _INIT, dtype=jnp.float32))
 
 
@@ -47,6 +48,8 @@ def estimate(state: FloatSketchState) -> jnp.ndarray:
 
 
 def merge(a: FloatSketchState, b: FloatSketchState) -> FloatSketchState:
+    """Exact union-stream merge: element-wise min (the min-monoid dual of
+    the QSketch max merge)."""
     return FloatSketchState(regs=jnp.minimum(a.regs, b.regs))
 
 
@@ -108,11 +111,15 @@ def _fast_update(cfg: SketchConfig, state, ids, weights, mask, salt_h, salt_p):
 
 @functools.partial(jax.jit, static_argnums=(0,))
 def fastgm_update(cfg: SketchConfig, state: FloatSketchState, ids, weights, mask=None) -> FloatSketchState:
+    """FastGM batched update: permuted one-register-per-draw min schedule
+    (the shared ``_fast_update`` with the config's primary salts)."""
     return _fast_update(cfg, state, ids, weights, mask, cfg.salt_h, cfg.salt_perm)
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
 def fastexp_update(cfg: SketchConfig, state: FloatSketchState, ids, weights, mask=None) -> FloatSketchState:
+    """FastExpSketch batched update: same permuted min schedule as FastGM
+    under re-salted hashes, so the two baselines are independent draws."""
     # Same schedule; distinct salts so the two sketches are independent draws
     # (as they would be with independent hash families in the papers).
     return _fast_update(

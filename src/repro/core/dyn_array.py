@@ -56,6 +56,7 @@ def init(cfg: SketchConfig, k: int) -> DynArrayState:
 
 
 def num_sketches(state: DynArrayState) -> int:
+    """Tenant capacity K (the row count of every state leaf)."""
     return state.regs.shape[0]
 
 
@@ -231,7 +232,39 @@ def merge(cfg: SketchConfig, a: DynArrayState, b: DynArrayState) -> DynArrayStat
     return merged._replace(chats=estimate_mle_all(cfg, merged))
 
 
-def merge_disjoint(cfg: SketchConfig, a: DynArrayState, b: DynArrayState) -> DynArrayState:
+def check_disjoint_rows(a, b) -> None:
+    """Eagerly reject overlapping key partitions before a disjoint merge.
+
+    A row touched in BOTH states (nonzero histogram mass on each side) means
+    the two fleets both saw that key's traffic — the key-partition contract
+    ``merge_disjoint`` relies on is broken and adding chats would
+    double-count any shared element. The check is host-side: under jit
+    tracing it CANNOT run, and rather than silently dropping a guard the
+    caller asked for, it raises — run the merge eagerly, or pass
+    ``check_partition=False`` when the pipeline owns the invariant by
+    construction. Shared by the single-host and sharded
+    (``sharded_dyn_array``) disjoint merges.
+    """
+    both = (jnp.sum(a.hists, axis=1) > 0) & (jnp.sum(b.hists, axis=1) > 0)
+    if isinstance(both, jax.core.Tracer):
+        raise ValueError(
+            "merge_disjoint: cannot verify key-partition disjointness under "
+            "jit tracing — run the merge eagerly, or pass "
+            "check_partition=False if the caller owns the invariant"
+        )
+    n = int(jnp.sum(both))
+    if n:
+        raise ValueError(
+            f"merge_disjoint: {n} key rows are live in BOTH states — the "
+            "streams are not key-partitioned; use merge() for overlapping "
+            "streams (chats re-estimate via the MLE instead of adding)"
+        )
+
+
+def merge_disjoint(
+    cfg: SketchConfig, a: DynArrayState, b: DynArrayState,
+    check_partition: bool = False,
+) -> DynArrayState:
     """Merge fleets whose streams are known element-disjoint: chats ADD.
 
     The production sharding is BY KEY — a tenant's stream lands on exactly
@@ -240,13 +273,23 @@ def merge_disjoint(cfg: SketchConfig, a: DynArrayState, b: DynArrayState) -> Dyn
     with no MLE (which ``merge`` needs for possibly-overlapping streams and
     which is misspecified for lightly-loaded rows, DESIGN.md §8.4).
     Registers still max-merge (the union sketch) and histograms rebuild, so
-    subsequent batches see correct q_R state. The caller asserts
-    disjointness; on overlapping streams this double-counts.
+    subsequent batches see correct q_R state.
+
+    Element-disjointness is the true precondition (two streams with shared
+    key rows but disjoint element ids still add exactly); key-partitioning
+    is the production contract that *guarantees* it. ``check_partition=True``
+    enforces the stricter contract eagerly via ``check_disjoint_rows`` — a
+    row live in both fleets is rejected, and a traced (jit) call raises
+    rather than silently skipping the requested guard. The sharded fleet
+    merge (``sharded_dyn_array.merge_disjoint``) enforces it by default;
+    here the caller owns the disjointness invariant.
     """
     if a.regs.shape != b.regs.shape:
         raise ValueError(
             f"DynArray merge needs matching (K, m), got {a.regs.shape} vs {b.regs.shape}"
         )
+    if check_partition:
+        check_disjoint_rows(a, b)
     regs = jnp.maximum(a.regs, b.regs)
     return DynArrayState(
         regs=regs, hists=rebuild_hists(cfg, regs), chats=a.chats + b.chats

@@ -87,18 +87,22 @@ class DirectoryConfig:
 
     @property
     def num_pinned(self) -> int:
+        """Dedicated hot-tenant slots [0, num_pinned)."""
         return len(self.pinned)
 
     @property
     def num_hashed(self) -> int:
+        """Shared hashed slots [num_pinned, capacity)."""
         return self.capacity - self.num_pinned
 
     @property
     def salt_route(self) -> int:
+        """Derived salt of the tenant -> slot routing hash role."""
         return (self.seed * 0x9E3779B1 + 11) & 0xFFFFFFFF
 
     @property
     def salt_fp(self) -> int:
+        """Derived salt of the per-slot claim-fingerprint hash role."""
         return (self.seed * 0x9E3779B1 + 12) & 0xFFFFFFFF
 
 
@@ -127,6 +131,7 @@ class DirectoryState(NamedTuple):
 
 
 def init(dcfg: DirectoryConfig) -> DirectoryState:
+    """Empty telemetry: no claims (fingerprint 0), zero counters, stamps -1."""
     return DirectoryState(
         fingerprints=jnp.zeros((dcfg.capacity,), jnp.uint32),
         n_routed=jnp.int32(0),

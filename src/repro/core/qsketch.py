@@ -40,6 +40,7 @@ from .types import QSketchState, SketchConfig
 
 
 def init(cfg: SketchConfig) -> QSketchState:
+    """Fresh QSketch: int8[m] registers at r_min (the empty-sketch value)."""
     return QSketchState(regs=jnp.full((cfg.m,), cfg.r_min, dtype=jnp.int8))
 
 

@@ -41,6 +41,8 @@ _QR_FLOOR = 1e-12  # q_R guard; only reachable when sketch is fully saturated
 
 
 def init(cfg: SketchConfig) -> DynState:
+    """Fresh QSketch-Dyn: int8[m] registers at r_min, zero touched-register
+    histogram, zero running martingale estimate."""
     return DynState(
         regs=jnp.full((cfg.m,), cfg.r_min, dtype=jnp.int8),
         hist=jnp.zeros((cfg.num_bins,), dtype=jnp.int32),

@@ -20,6 +20,11 @@ operation stays shard-local:
   each shard's K/S rows: no register gather, no cross-shard traffic, and the
   O(K·2^b) Newton cost is divided by the shard count.
 
+The mesh machinery itself (row specs, shard_map wrapping, hash-routed
+dispatch) lives in ``core/sharding.py`` and is shared with the Dyn and
+Window sharded fronts (``sharded_dyn_array``, ``sharded_window_array``);
+this module is the thinnest instantiation — a single sharded leaf.
+
 Slots come from ``core/key_directory.py`` (sparse 64-bit tenant ids,
 collision telemetry, pinned hot keys); ``update_tenants`` fuses routing and
 update. Dense in-range slots remain valid inputs, so the single-host tests'
@@ -36,51 +41,30 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from . import key_directory, sketch_array
+from . import key_directory, sharding, sketch_array
 from .types import SketchArrayState, ShardedArrayState, SketchConfig
 
-# jax.shard_map only exists on newer JAX; fall back to the experimental home.
-if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-else:  # jax <= 0.4.x
-    from jax.experimental.shard_map import shard_map as _shard_map
+AXIS = sharding.AXIS
 
-AXIS = "sketch"
-
-
-def num_shards(mesh, axis: str = AXIS) -> int:
-    return int(mesh.shape[axis])
-
-
-def padded_k(k: int, mesh, axis: str = AXIS) -> int:
-    """Round a tenant capacity up to a shard multiple (rows must divide)."""
-    s = num_shards(mesh, axis)
-    return ((k + s - 1) // s) * s
-
-
-def _check_divisible(k: int, mesh, axis: str):
-    s = num_shards(mesh, axis)
-    if k % s:
-        raise ValueError(
-            f"K={k} rows must be divisible by the '{axis}' axis shard count "
-            f"({s}); round up with sharded_array.padded_k"
-        )
+# Shared-layer geometry helpers, re-exported for existing callers/tests.
+num_shards = sharding.num_shards
+padded_k = sharding.padded_k
 
 
 def init(cfg: SketchConfig, k: int, mesh, axis: str = AXIS) -> ShardedArrayState:
     """K fresh sketches, rows sharded over ``axis`` of ``mesh``."""
-    _check_divisible(k, mesh, axis)
+    sharding.check_divisible(k, mesh, axis)
     regs = jnp.full((k, cfg.m), cfg.r_min, dtype=jnp.int8)
-    return ShardedArrayState(regs=jax.device_put(regs, NamedSharding(mesh, P(axis, None))))
+    return ShardedArrayState(
+        regs=sharding.device_put_rows(regs, mesh, 0, axis)
+    )
 
 
 def from_array(state: SketchArrayState, mesh, axis: str = AXIS) -> ShardedArrayState:
     """Reshard a single-host SketchArray (pure data movement, same values)."""
-    _check_divisible(state.regs.shape[0], mesh, axis)
     return ShardedArrayState(
-        regs=jax.device_put(state.regs, NamedSharding(mesh, P(axis, None)))
+        regs=sharding.device_put_rows(state.regs, mesh, 0, axis)
     )
 
 
@@ -91,22 +75,22 @@ def to_array(state: ShardedArrayState) -> SketchArrayState:
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2))
 def _update(cfg: SketchConfig, mesh, axis: str, regs, slots, ids, weights, mask):
-    rows = regs.shape[0] // num_shards(mesh, axis)
+    rows = regs.shape[0] // sharding.num_shards(mesh, axis)
 
     def local(regs_l, slots, ids, w, m):
         # Hash-routed dispatch: this shard owns slot range [lo, lo + rows).
-        lo = (jax.lax.axis_index(axis) * rows).astype(jnp.int32)
-        own = m & (slots >= lo) & (slots < lo + rows)
+        local_slots, own = sharding.own_slots(slots, rows, axis, m)
         st = sketch_array.update(
-            cfg, SketchArrayState(regs=regs_l), slots - lo, ids, w, mask=own
+            cfg, SketchArrayState(regs=regs_l), local_slots, ids, w, mask=own
         )
         return st.regs
 
-    return _shard_map(
+    return sharding.shard_map_rows(
         local,
-        mesh=mesh,
-        in_specs=(P(axis, None), P(), P(), P(), P()),
-        out_specs=P(axis, None),
+        mesh,
+        in_dims=(0, None, None, None, None),
+        out_dims=0,
+        axis=axis,
     )(regs, slots, ids, weights, mask)
 
 
@@ -121,7 +105,7 @@ def update(
     exactly the shard owning its slot; no collective is needed, the register
     state never leaves its shard.
     """
-    _check_divisible(state.regs.shape[0], mesh, axis)
+    sharding.check_divisible(state.regs.shape[0], mesh, axis)
     slots = slots.astype(jnp.int32)
     mask = jnp.ones(slots.shape, bool) if mask is None else mask
     regs = _update(cfg, mesh, axis, state.regs, slots, ids, weights, mask)
@@ -160,18 +144,19 @@ def _estimate_with_ci(cfg: SketchConfig, mesh, axis: str, regs):
 
     # check_rep=False: the Newton lax.while_loop has no replication rule on
     # current JAX; everything here is shard-local so the check is vacuous.
-    return _shard_map(
+    return sharding.shard_map_rows(
         local,
-        mesh=mesh,
-        in_specs=(P(axis, None),),
-        out_specs=(P(axis), P(axis), P(axis)),
+        mesh,
+        in_dims=(0,),
+        out_dims=(0, 0, 0),
+        axis=axis,
         check_rep=False,
     )(regs)
 
 
 def estimate_all_with_ci(cfg: SketchConfig, mesh, state: ShardedArrayState, axis: str = AXIS):
     """(Ĉ[K], stddev[K], converged[K]); Newton stays local to each shard."""
-    _check_divisible(state.regs.shape[0], mesh, axis)
+    sharding.check_divisible(state.regs.shape[0], mesh, axis)
     return _estimate_with_ci(cfg, mesh, axis, state.regs)
 
 
@@ -187,8 +172,5 @@ def merge(a: ShardedArrayState, b: ShardedArrayState) -> ShardedArrayState:
     (even over overlapping streams) combine without bias. Shapes must agree —
     same capacity, same m — or the row algebra is meaningless.
     """
-    if a.regs.shape != b.regs.shape:
-        raise ValueError(
-            f"sharded merge needs matching (K, m), got {a.regs.shape} vs {b.regs.shape}"
-        )
+    sharding.check_same_shape(a, b, "ShardedSketchArray")
     return ShardedArrayState(regs=jnp.maximum(a.regs, b.regs))

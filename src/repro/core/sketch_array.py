@@ -51,6 +51,7 @@ def init(cfg: SketchConfig, k: int) -> SketchArrayState:
 
 
 def num_sketches(state: SketchArrayState) -> int:
+    """Tenant capacity K (the register matrix's row count)."""
     return state.regs.shape[0]
 
 

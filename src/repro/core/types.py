@@ -37,10 +37,12 @@ class SketchConfig:
 
     @property
     def r_min(self) -> int:
+        """Smallest register value (and the empty-register init): -2^(b-1)+1."""
         return -(2 ** (self.b - 1)) + 1
 
     @property
     def r_max(self) -> int:
+        """Largest register value (truncation ceiling): 2^(b-1)-1."""
         return 2 ** (self.b - 1) - 1
 
     @property
@@ -57,14 +59,17 @@ class SketchConfig:
     # Derived salts: distinct per role, stable across processes.
     @property
     def salt_h(self) -> int:
+        """Derived salt of the register-value hash role h_j."""
         return (self.seed * 0x9E3779B1 + 1) & 0xFFFFFFFF
 
     @property
     def salt_g(self) -> int:
+        """Derived salt of the register-choice hash role g."""
         return (self.seed * 0x9E3779B1 + 2) & 0xFFFFFFFF
 
     @property
     def salt_perm(self) -> int:
+        """Derived salt of the permutation keys (FastGM/FastExp schedules)."""
         return (self.seed * 0x9E3779B1 + 3) & 0xFFFFFFFF
 
     def memory_bits(self, with_histogram: bool = False) -> int:
@@ -154,6 +159,49 @@ class WindowArrayState(NamedTuple):
     head: jnp.ndarray  # int32 scalar, ring slot of the current epoch
     filled: jnp.ndarray  # int32 scalar in [1, E], epochs live in the ring
     epoch_id: jnp.ndarray  # int32 scalar, monotone epoch counter
+
+
+class ShardedDynArrayState(NamedTuple):
+    """A DynArray whose rows are sharded over a mesh axis
+    (core/sharded_dyn_array.py).
+
+    Same per-row semantics as ``DynArrayState`` — row k is bit-identical to
+    a standalone QSketch-Dyn of the slot-k sub-stream, ``chats`` is the
+    O(K)-anytime read — but all three leaves live row-sharded over the
+    ``"sketch"`` mesh axis (``core/sharding.py`` row_dim 0 everywhere), so
+    per-tenant anytime estimation scales with the fleet instead of one
+    host's memory. Updates hash-route to the owning shard; chats sum
+    exactly across key-partitioned fleets (``merge_disjoint``).
+    """
+
+    regs: jnp.ndarray  # int8[K, m], K divisible by the shard count
+    hists: jnp.ndarray  # int32[K, 2^b], row-sharded with regs
+    chats: jnp.ndarray  # float32[K], row-sharded running estimates
+
+
+class ShardedWindowArrayState(NamedTuple):
+    """A WindowArray whose tenant rows are sharded over a mesh axis
+    (core/sharded_window_array.py).
+
+    Same ring semantics as ``WindowArrayState`` — E epoch DynArray
+    sub-states plus a cached full-ring union — but every per-tenant leaf is
+    sharded over the ``"sketch"`` axis at its K dimension (row_dim 1 for the
+    epoch planes, 0 for the union cache; ``core/sharding.py``), while the
+    ring clock (``head``/``filled``/``epoch_id``) stays replicated so all
+    shards rotate in lockstep. Rotation and the union-cache rebuild are
+    shard-local; the epoch-plane max-union commutes with row sharding
+    (DESIGN.md §8.6).
+    """
+
+    regs: jnp.ndarray  # int8[E, K, m], K divisible by the shard count
+    hists: jnp.ndarray  # int32[E, K, 2^b]
+    chats: jnp.ndarray  # float32[E, K]
+    union_regs: jnp.ndarray  # int8[K, m] == max over epoch axis (invariant)
+    union_hists: jnp.ndarray  # int32[K, 2^b]
+    union_chats: jnp.ndarray  # float32[K] full-ring anytime estimates
+    head: jnp.ndarray  # int32 scalar, replicated ring slot of current epoch
+    filled: jnp.ndarray  # int32 scalar in [1, E], replicated
+    epoch_id: jnp.ndarray  # int32 scalar, replicated monotone epoch counter
 
 
 class FloatSketchState(NamedTuple):

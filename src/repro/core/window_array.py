@@ -73,10 +73,12 @@ def init(cfg: SketchConfig, k: int, e: int) -> WindowArrayState:
 
 
 def num_epochs(state: WindowArrayState) -> int:
+    """Ring size E (the epoch-plane count of every per-epoch leaf)."""
     return state.regs.shape[0]
 
 
 def num_sketches(state: WindowArrayState) -> int:
+    """Tenant capacity K (the row count within each epoch plane)."""
     return state.regs.shape[1]
 
 
@@ -88,8 +90,33 @@ def epoch_substate(state: WindowArrayState, e) -> DynArrayState:
 
 
 def union_substate(state: WindowArrayState) -> DynArrayState:
+    """The cached full-ring union as a DynArray (a view, not a copy)."""
     return DynArrayState(
         regs=state.union_regs, hists=state.union_hists, chats=state.union_chats
+    )
+
+
+def _apply_update(cfg: SketchConfig, state: WindowArrayState, keys, lo, hi, w, live):
+    """Shared tail of the single-host and sharded windowed updates: two fused
+    DynArray updates on the same dedup'd elements — the head epoch sub-state
+    and the union cache. ``keys`` are in-range row indices and ``live`` is
+    the final element mask (padding, degenerate weights and — in the sharded
+    form — foreign shards' elements already dropped)."""
+    ep = epoch_substate(state, state.head)
+    q_ep = qsketch_dyn._q_update_prob(cfg, ep.hists[keys], w)
+    ep = dyn_array._apply_update(cfg, ep, keys, lo, hi, w, live, q_ep)
+
+    un = union_substate(state)
+    q_un = qsketch_dyn._q_update_prob(cfg, un.hists[keys], w)
+    un = dyn_array._apply_update(cfg, un, keys, lo, hi, w, live, q_un)
+
+    return state._replace(
+        regs=state.regs.at[state.head].set(ep.regs),
+        hists=state.hists.at[state.head].set(ep.hists),
+        chats=state.chats.at[state.head].set(ep.chats),
+        union_regs=un.regs,
+        union_hists=un.hists,
+        union_chats=un.chats,
     )
 
 
@@ -117,23 +144,7 @@ def update_batch(
     w = weights.astype(jnp.float32)
     keys = jnp.clip(keys.astype(jnp.int32), 0, k - 1)
     live = qsketch_dyn._live_weight_mask(w, mask)
-
-    ep = epoch_substate(state, state.head)
-    q_ep = qsketch_dyn._q_update_prob(cfg, ep.hists[keys], w)
-    ep = dyn_array._apply_update(cfg, ep, keys, lo, hi, w, live, q_ep)
-
-    un = union_substate(state)
-    q_un = qsketch_dyn._q_update_prob(cfg, un.hists[keys], w)
-    un = dyn_array._apply_update(cfg, un, keys, lo, hi, w, live, q_un)
-
-    return state._replace(
-        regs=state.regs.at[state.head].set(ep.regs),
-        hists=state.hists.at[state.head].set(ep.hists),
-        chats=state.chats.at[state.head].set(ep.chats),
-        union_regs=un.regs,
-        union_hists=un.hists,
-        union_chats=un.chats,
-    )
+    return _apply_update(cfg, state, keys, lo, hi, w, live)
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
@@ -270,16 +281,10 @@ def update_tenants(
     return update_batch(cfg, state, slots, ids, weights, mask=mask), dir_state
 
 
-def merge(cfg: SketchConfig, a: WindowArrayState, b: WindowArrayState) -> WindowArrayState:
-    """Cross-pod merge of ring-ALIGNED windows (same E/K/m, same head/filled/
-    epoch_id — pods rotate on a shared clock).
-
-    Per-epoch registers max-merge (exact union of that epoch's streams);
-    per-epoch histograms rebuild and chats re-estimate via the MLE (running
-    martingales are not additive across pods that may share elements, exactly
-    as ``dyn_array.merge``); the union cache rebuilds from the merged epochs.
-    Host-side entry (concrete head/filled): alignment is checked eagerly.
-    """
+def check_ring_aligned(a: WindowArrayState, b: WindowArrayState) -> None:
+    """Shared merge validation (single-host AND sharded fronts): two windows
+    combine only with matching geometry and an aligned ring clock. Host-side
+    entry — head/filled/epoch_id must be concrete."""
     if a.regs.shape != b.regs.shape:
         raise ValueError(
             f"WindowArray merge needs matching (E, K, m), got {a.regs.shape} vs {b.regs.shape}"
@@ -293,18 +298,49 @@ def merge(cfg: SketchConfig, a: WindowArrayState, b: WindowArrayState) -> Window
             "WindowArray merge needs ring-aligned states (same head/filled/"
             "epoch_id): pods must rotate on a shared clock"
         )
-    e, k, m = a.regs.shape
-    regs = jnp.maximum(a.regs, b.regs)
+
+
+def _merged_arrays(cfg: SketchConfig, regs_a, regs_b):
+    """Array tail of the ring-aligned merge, shared with the sharded front
+    (runs shard-local there): per-epoch register max, histogram rebuilds,
+    MLE re-estimated chats, union-cache rebuild. Returns the six array
+    fields of the merged state (ring scalars are the caller's)."""
+    e, k, m = regs_a.shape
+    regs = jnp.maximum(regs_a, regs_b)
     flat_hists = dyn_array.rebuild_hists(cfg, regs.reshape(e * k, m))
     union_regs = jnp.max(regs, axis=0)
     union_hists = dyn_array.rebuild_hists(cfg, union_regs)
+    return (
+        regs,
+        flat_hists.reshape(e, k, cfg.num_bins),
+        _chats_from_touched_hists(cfg, flat_hists).reshape(e, k),
+        union_regs,
+        union_hists,
+        _chats_from_touched_hists(cfg, union_hists),
+    )
+
+
+def merge(cfg: SketchConfig, a: WindowArrayState, b: WindowArrayState) -> WindowArrayState:
+    """Cross-pod merge of ring-ALIGNED windows (same E/K/m, same head/filled/
+    epoch_id — pods rotate on a shared clock).
+
+    Per-epoch registers max-merge (exact union of that epoch's streams);
+    per-epoch histograms rebuild and chats re-estimate via the MLE (running
+    martingales are not additive across pods that may share elements, exactly
+    as ``dyn_array.merge``); the union cache rebuilds from the merged epochs.
+    Host-side entry (concrete head/filled): alignment is checked eagerly.
+    """
+    check_ring_aligned(a, b)
+    regs, hists, chats, union_regs, union_hists, union_chats = _merged_arrays(
+        cfg, a.regs, b.regs
+    )
     return WindowArrayState(
         regs=regs,
-        hists=flat_hists.reshape(e, k, cfg.num_bins),
-        chats=_chats_from_touched_hists(cfg, flat_hists).reshape(e, k),
+        hists=hists,
+        chats=chats,
         union_regs=union_regs,
         union_hists=union_hists,
-        union_chats=_chats_from_touched_hists(cfg, union_hists),
+        union_chats=union_chats,
         head=a.head,
         filled=a.filled,
         epoch_id=a.epoch_id,

@@ -22,11 +22,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dyn_array, hashing, key_directory, qsketch_dyn, window_array
+from repro.core import (
+    dyn_array,
+    hashing,
+    key_directory,
+    qsketch_dyn,
+    sharding,
+    window_array,
+)
 from repro.core.types import (
     DynArrayState,
     FloatSketchState,
     QSketchState,
+    ShardedDynArrayState,
+    ShardedWindowArrayState,
     SketchArrayState,
     SketchConfig,
     WindowArrayState,
@@ -322,6 +331,95 @@ def window_union_estimate_op(
         interpret=interpret,
     )
     return dyn_array.estimate_mle_hists(cfg, hists[:k, : cfg.num_bins])
+
+
+def sharded_dyn_array_update_op(
+    cfg: SketchConfig,
+    mesh,
+    state: ShardedDynArrayState,
+    keys,
+    ids,
+    weights,
+    mask=None,
+    *,
+    axis: str = sharding.AXIS,
+    block_b: int | None = None,
+    interpret: bool | None = None,
+) -> ShardedDynArrayState:
+    """Kernel-backed equivalent of ``sharded_dyn_array.update_batch``
+    (bit-identical on every state leaf).
+
+    The per-shard body is exactly ``dyn_array_update_op`` — the Pallas q_R
+    kernel streams each shard's gathered histogram rows through VMEM, the
+    data-dependent tail stays ``dyn_array._apply_update`` — run under
+    ``shard_map`` with the replicated batch hash-routed to the owning shard
+    (``sharding.own_slots``), the same dispatch as the jnp-backed sharded
+    path. ``check_rep=False`` because pallas_call has no replication rule;
+    every operand the kernel touches is shard-local, so the check is
+    vacuous.
+    """
+    sharding.check_divisible(state.regs.shape[0], mesh, axis)
+    k = state.regs.shape[0]
+    rows = k // sharding.num_shards(mesh, axis)
+    keys = jnp.clip(keys.astype(jnp.int32), 0, k - 1)
+    mask = jnp.ones(keys.shape, bool) if mask is None else mask
+
+    def local(st, keys, ids, w, m):
+        local_keys, own = sharding.own_slots(keys, rows, axis, m)
+        return tuple(
+            dyn_array_update_op(
+                cfg, st, local_keys, ids, w, mask=own,
+                block_b=block_b, interpret=interpret,
+            )
+        )
+
+    return ShardedDynArrayState(
+        *sharding.shard_map_rows(
+            local,
+            mesh,
+            in_dims=(DynArrayState(0, 0, 0), None, None, None, None),
+            out_dims=(0, 0, 0),
+            axis=axis,
+            check_rep=False,
+        )(DynArrayState(*state), keys, ids, weights, mask)
+    )
+
+
+def sharded_window_union_estimate_op(
+    cfg: SketchConfig,
+    mesh,
+    state: ShardedWindowArrayState,
+    w: int,
+    *,
+    axis: str = sharding.AXIS,
+    block_k: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Kernel-backed equivalent of ``sharded_window_array.estimate_window``
+    for sub-ring windows — Ĉ[K] over the last w <= E epochs, bit-identical
+    to both the sharded jnp path and the single-host op.
+
+    Each shard runs the fused union+bincount kernel
+    (``kernels/window_union.py``) over its own rows of the epoch planes —
+    the epoch-plane max-union commutes with row sharding, so no plane ever
+    crosses a shard boundary. The ring head is replicated; w is a static
+    host-side int.
+    """
+    sharding.check_divisible(state.regs.shape[1], mesh, axis)
+    w = window_array._check_w(state, w)
+
+    def local(regs_l, head):
+        st = WindowArrayState(
+            regs_l, None, None, None, None, None,
+            head=head, filled=jnp.int32(0), epoch_id=jnp.int32(0),
+        )
+        return window_union_estimate_op(
+            cfg, st, w, block_k=block_k, interpret=interpret
+        )
+
+    return sharding.shard_map_rows(
+        local, mesh, in_dims=(1, None), out_dims=0, axis=axis, check_rep=False
+    )(state.regs, state.head)
 
 
 def float_sketch_update_op(

@@ -24,14 +24,25 @@ def make_local_mesh(model: int | None = None):
 
 
 def make_sketch_mesh(n_shards: int | None = None):
-    """1-D mesh over the ``"sketch"`` axis: rows of a ShardedSketchArray.
+    """1-D mesh over the ``"sketch"`` axis: tenant rows of a sharded sketch
+    container (ShardedSketchArray, ShardedDynArray, sharded WindowArray).
 
-    The multi-tenant register matrix (core/sharded_array.py) shards its K
-    rows over this axis; K ~ 1e7 tenants then costs K*m/n_shards bytes per
-    device instead of one host's worth. Defaults to every visible device.
-    Telemetry embedded in a training step can instead reuse an existing mesh
-    axis (``sharded_array.update(..., axis="data")``) — this builder is for
-    the standalone monitoring fleet / examples / benchmarks.
+    Every sharded front in ``core/`` partitions its per-tenant state
+    row-wise over this axis via the shared layer (core/sharding.py);
+    K ~ 1e7 tenants then cost K·state/n_shards bytes per device instead of
+    one host's worth. Defaults to every visible device; an explicit
+    ``n_shards`` must not exceed the host's device count (shard_map needs
+    one device per shard). Telemetry embedded in a training step can
+    instead reuse an existing mesh axis (``axis="data"`` on any sharded
+    container) — this builder is for the standalone monitoring fleet /
+    examples / benchmarks.
     """
-    n = n_shards or len(jax.devices())
+    n_avail = len(jax.devices())
+    n = n_shards or n_avail
+    if n > n_avail:
+        raise ValueError(
+            f"sketch mesh wants {n} shards but only {n_avail} devices are "
+            "visible (set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "for host-device smoke runs)"
+        )
     return jax.make_mesh((n,), ("sketch",))

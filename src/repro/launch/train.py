@@ -77,6 +77,10 @@ def main(argv=None):
                     help="ring size E of the per-document window monitor")
     ap.add_argument("--rotate-every", type=int, default=20,
                     help="train steps per window epoch (rotation cadence)")
+    ap.add_argument("--doc-window-shards", type=int, default=0,
+                    help="shard the doc-window monitor's per-tenant state "
+                         "over this many devices of a dedicated 'sketch' "
+                         "mesh (0 = single-host WindowMonitor)")
     ap.add_argument("--n-docs", type=int, default=512,
                     help="distinct document ids the token stream draws from "
                          "when the doc window is enabled")
@@ -89,7 +93,7 @@ def main(argv=None):
 
     from repro.configs import paper_qsketch
     from repro.data.tokens import TokenStream
-    from repro.launch.mesh import make_local_mesh
+    from repro.launch.mesh import make_local_mesh, make_sketch_mesh
     from repro.models import common as mcommon, sharding as msharding, transformer
     from repro.sketchstream import monitor
     from repro.train import checkpoint, optimizer, train_step as ts
@@ -103,12 +107,22 @@ def main(argv=None):
     # and cold document fingerprints age out of the directory.
     # The monitor only needs a sketch geometry of its own — --no-sketch
     # (scalar token telemetry off) and the doc window compose independently.
+    # With --doc-window-shards the same monitor surface runs row-sharded
+    # over a dedicated "sketch" mesh (DESIGN.md §8.6): bit-identical
+    # estimates, per-tenant state divided across the shard devices.
     tenant_mon = None
     if args.doc_window_capacity:
-        tenant_mon = monitor.WindowMonitor.for_capacity(
-            paper_qsketch.telemetry_default(), args.doc_window_capacity,
-            args.doc_window_epochs, evict_after=args.doc_window_epochs,
-        )
+        if args.doc_window_shards:
+            tenant_mon = monitor.ShardedWindowMonitor.for_mesh(
+                paper_qsketch.telemetry_default(), args.doc_window_capacity,
+                args.doc_window_epochs, make_sketch_mesh(args.doc_window_shards),
+                evict_after=args.doc_window_epochs,
+            )
+        else:
+            tenant_mon = monitor.WindowMonitor.for_capacity(
+                paper_qsketch.telemetry_default(), args.doc_window_capacity,
+                args.doc_window_epochs, evict_after=args.doc_window_epochs,
+            )
     ocfg = optimizer.OptConfig(
         lr=args.lr, total_steps=args.steps, warmup_steps=max(args.steps // 20, 1),
         quantized=args.quantized_opt,

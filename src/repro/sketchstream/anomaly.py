@@ -98,6 +98,7 @@ class AnomalyBankState(NamedTuple):
 
 
 def init(k: int) -> AnomalyBankState:
+    """Fresh bank for K tenants: zero baselines/deviations/scores."""
     if k < 1:
         raise ValueError("AnomalyBank needs k >= 1 tenants")
     return AnomalyBankState(

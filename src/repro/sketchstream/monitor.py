@@ -60,6 +60,15 @@ w <= E epochs" instead of "since init". ``rotate`` advances the epoch clock
 tick), and the windowed estimate vector feeds ``sketchstream/anomaly.py``'s
 per-tenant drift scoring — the paper's real-time anomaly-detection loop,
 closed (DESIGN.md §8.5).
+
+Sharded anytime / windowed reads (sixth layer): ``ShardedDynMonitor`` and
+``ShardedWindowMonitor`` carry the Dyn and Window surfaces past one host —
+the per-tenant state shards row-wise over a mesh axis via the shared
+sharding layer (``core/sharding.py``, DESIGN.md §8.6) while the directory
+telemetry and (for windows) the ring clock stay replicated. Same
+init/update/estimate/merge/metrics (+rotate) surface, bit-identical
+estimates to their single-host counterparts, so train/serve steps accept
+any tenant monitor unchanged.
 """
 
 from __future__ import annotations
@@ -75,6 +84,9 @@ from repro.core import (
     key_directory,
     qsketch,
     sharded_array,
+    sharded_dyn_array,
+    sharded_window_array,
+    sharding,
     sketch_array,
     window_array,
 )
@@ -83,17 +95,22 @@ from repro.core.types import (
     DynArrayState,
     QSketchState,
     ShardedArrayState,
+    ShardedDynArrayState,
+    ShardedWindowArrayState,
     SketchArrayState,
     WindowArrayState,
 )
 
 
 class MonitorState(NamedTuple):
+    """Scalar stream monitor: one full QSketch + an occurrence counter."""
+
     regs: jnp.ndarray  # int8[m]
     n_seen: jnp.ndarray  # int32 element counter (occurrences, not distinct)
 
 
 def init(cfg: SketchConfig) -> MonitorState:
+    """Fresh scalar monitor: empty QSketch, zero elements seen."""
     return MonitorState(regs=qsketch.init(cfg).regs, n_seen=jnp.int32(0))
 
 
@@ -138,11 +155,14 @@ def merge(cfg: SketchConfig, a: MonitorState, b: MonitorState) -> MonitorState:
 
 
 class ArrayMonitorState(NamedTuple):
+    """Per-key monitor: K QSketch rows + a live-element counter."""
+
     regs: jnp.ndarray  # int8[K, m]
     n_seen: jnp.ndarray  # int32 live-element counter across all keys
 
 
 def init_array(cfg: SketchConfig, k: int) -> ArrayMonitorState:
+    """Fresh per-key monitor: K empty sketch rows, zero elements seen."""
     return ArrayMonitorState(
         regs=sketch_array.init(cfg, k).regs, n_seen=jnp.int32(0)
     )
@@ -257,6 +277,7 @@ class ShardedArrayMonitor:
         return cls(cfg, dcfg, mesh, axis=axis)
 
     def init(self) -> ShardedArrayMonitorState:
+        """Fresh sharded register matrix + empty directory telemetry."""
         return ShardedArrayMonitorState(
             regs=sharded_array.init(self.cfg, self.dcfg.capacity, self.mesh, axis=self.axis).regs,
             directory=key_directory.init(self.dcfg),
@@ -345,10 +366,12 @@ class DynArrayMonitor:
 
     @classmethod
     def for_capacity(cls, cfg: SketchConfig, capacity: int, *, seed: int | None = None, pinned: tuple = ()):
+        """Build with a fresh directory config of ``capacity`` slots."""
         dcfg = DirectoryConfig(capacity=capacity, seed=cfg.seed if seed is None else seed, pinned=pinned)
         return cls(cfg, dcfg)
 
     def init(self) -> DynArrayMonitorState:
+        """Fresh DynArray + empty directory telemetry."""
         st = dyn_array.init(self.cfg, self.dcfg.capacity)
         return DynArrayMonitorState(
             regs=st.regs,
@@ -449,10 +472,12 @@ class WindowMonitor:
 
     @classmethod
     def for_capacity(cls, cfg: SketchConfig, capacity: int, n_epochs: int, *, seed: int | None = None, pinned: tuple = (), evict_after: int = 0):
+        """Build with a fresh directory config of ``capacity`` slots."""
         dcfg = DirectoryConfig(capacity=capacity, seed=cfg.seed if seed is None else seed, pinned=pinned)
         return cls(cfg, dcfg, n_epochs, evict_after=evict_after)
 
     def init(self) -> WindowMonitorState:
+        """Fresh epoch ring + empty directory telemetry."""
         return WindowMonitorState(
             window=window_array.init(self.cfg, self.dcfg.capacity, self.n_epochs),
             directory=key_directory.init(self.dcfg),
@@ -508,6 +533,214 @@ class WindowMonitor:
         """Cheap per-step scalars: stream + directory health + the window
         clock and the total windowed weight (an O(K) sum of the anytime
         union reads — no solve)."""
+        return {
+            "tenant_elements_seen": state.n_seen,
+            "tenant_slots_claimed": jnp.sum((state.directory.fingerprints != 0).astype(jnp.int32)),
+            "tenant_collision_rate": key_directory.collision_rate(state.directory),
+            "tenant_window_weight": jnp.sum(state.window.union_chats),
+            "tenant_window_epoch": state.window.epoch_id,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Sharded anytime / windowed per-tenant telemetry: Dyn + Window past one host
+# ---------------------------------------------------------------------------
+
+
+class ShardedDynMonitorState(NamedTuple):
+    """Pytree state of a ShardedDynMonitor (threads through jit/scan/ckpt)."""
+
+    array: ShardedDynArrayState  # row-sharded regs/hists/chats
+    directory: DirectoryState  # replicated key-collision telemetry
+    n_seen: jnp.ndarray  # int32 live-element counter across all tenants
+
+
+class ShardedDynMonitor:
+    """Per-tenant O(K)-anytime telemetry with the state sharded over a mesh.
+
+    The ``DynArrayMonitor`` surface (init/update/estimate/merge/metrics,
+    sparse 64-bit tenant ids through the key directory) backed by
+    ``core/sharded_dyn_array.py``: registers, histograms and the running
+    martingales all shard row-wise over ``axis``, so K scales with the
+    fleet while ``estimate`` stays a pure O(K) read (of the sharded chats).
+    Estimates are bit-identical to the single-host ``DynArrayMonitor`` fed
+    the same stream.
+
+    The instance is configuration (closed over by jit); all mutable data
+    lives in ``ShardedDynMonitorState``.
+    """
+
+    def __init__(self, cfg: SketchConfig, dcfg: DirectoryConfig, mesh, axis: str = sharding.AXIS):
+        if dcfg.capacity % sharding.num_shards(mesh, axis):
+            raise ValueError(
+                f"directory capacity {dcfg.capacity} must be divisible by the "
+                f"'{axis}' axis shard count ({sharding.num_shards(mesh, axis)}); "
+                "use ShardedDynMonitor.for_mesh to round it up"
+            )
+        self.cfg = cfg
+        self.dcfg = dcfg
+        self.mesh = mesh
+        self.axis = axis
+
+    @classmethod
+    def for_mesh(cls, cfg: SketchConfig, capacity: int, mesh, *, axis: str = sharding.AXIS, seed: int | None = None, pinned: tuple = ()):
+        """Build with ``capacity`` rounded up to a shard multiple."""
+        cap = sharding.padded_k(capacity, mesh, axis)
+        dcfg = DirectoryConfig(capacity=cap, seed=cfg.seed if seed is None else seed, pinned=pinned)
+        return cls(cfg, dcfg, mesh, axis=axis)
+
+    def init(self) -> ShardedDynMonitorState:
+        """Fresh sharded array + empty directory telemetry."""
+        return ShardedDynMonitorState(
+            array=sharded_dyn_array.init(self.cfg, self.dcfg.capacity, self.mesh, axis=self.axis),
+            directory=key_directory.init(self.dcfg),
+            n_seen=jnp.int32(0),
+        )
+
+    def update(self, state: ShardedDynMonitorState, tenant_keys, ids, weights=None, mask=None) -> ShardedDynMonitorState:
+        """Fold a keyed batch: tenant_keys are sparse ids (uint32 or (lo, hi)
+        pair), flattened together with ids/weights/mask like ``update``."""
+        keys = _flatten_keys(tenant_keys)
+        ids, w, mask, n_live = _flatten(ids, weights, mask)
+        st, dir_state = sharded_dyn_array.update_tenants(
+            self.cfg, self.dcfg, self.mesh, state.array, state.directory,
+            keys, ids, w, mask=mask, axis=self.axis,
+        )
+        return ShardedDynMonitorState(
+            array=st, directory=dir_state, n_seen=state.n_seen + n_live
+        )
+
+    def estimate(self, state: ShardedDynMonitorState) -> jnp.ndarray:
+        """Ĉ[K] — the anytime read of the sharded martingales."""
+        return sharded_dyn_array.estimate_all(state.array)
+
+    def merge(self, a: ShardedDynMonitorState, b: ShardedDynMonitorState) -> ShardedDynMonitorState:
+        """Cross-pod union of possibly-overlapping streams: register max,
+        shard-local per-key MLE re-estimated chats, directory merge."""
+        return ShardedDynMonitorState(
+            array=sharded_dyn_array.merge(self.cfg, self.mesh, a.array, b.array, axis=self.axis),
+            directory=key_directory.merge(a.directory, b.directory),
+            n_seen=a.n_seen + b.n_seen,
+        )
+
+    def metrics(self, state: ShardedDynMonitorState) -> dict:
+        """Cheap per-step scalars: stream + directory health + total tracked
+        weight (an O(K) sum of the sharded anytime estimates)."""
+        return {
+            "tenant_elements_seen": state.n_seen,
+            "tenant_slots_claimed": jnp.sum((state.directory.fingerprints != 0).astype(jnp.int32)),
+            "tenant_collision_rate": key_directory.collision_rate(state.directory),
+            "tenant_weight_total": jnp.sum(state.array.chats),
+        }
+
+
+class ShardedWindowMonitorState(NamedTuple):
+    """Pytree state of a ShardedWindowMonitor (threads through jit/scan/ckpt)."""
+
+    window: ShardedWindowArrayState  # sharded epoch ring + union cache
+    directory: DirectoryState  # replicated telemetry + aging stamps
+    n_seen: jnp.ndarray  # int32 live-element counter across all tenants
+
+
+class ShardedWindowMonitor:
+    """Per-tenant SLIDING-WINDOW telemetry with the ring sharded over a mesh.
+
+    The ``WindowMonitor`` surface (init/update/rotate/estimate/merge/
+    metrics, key-directory routing with epoch-stamped aging) backed by
+    ``core/sharded_window_array.py``: every per-tenant leaf of the epoch
+    ring and the union cache shards row-wise over ``axis``; the ring clock
+    stays replicated so all shards rotate in lockstep. Estimates are
+    bit-identical to the single-host ``WindowMonitor`` fed the same stream
+    and rotation schedule.
+
+    The instance is configuration (closed over by jit); all mutable data
+    lives in ``ShardedWindowMonitorState``.
+    """
+
+    def __init__(self, cfg: SketchConfig, dcfg: DirectoryConfig, n_epochs: int, mesh, *, axis: str = sharding.AXIS, evict_after: int = 0):
+        if evict_after < 0:
+            raise ValueError("evict_after must be >= 0 (0 disables aging)")
+        if dcfg.capacity % sharding.num_shards(mesh, axis):
+            raise ValueError(
+                f"directory capacity {dcfg.capacity} must be divisible by the "
+                f"'{axis}' axis shard count ({sharding.num_shards(mesh, axis)}); "
+                "use ShardedWindowMonitor.for_mesh to round it up"
+            )
+        self.cfg = cfg
+        self.dcfg = dcfg
+        self.n_epochs = int(n_epochs)
+        self.mesh = mesh
+        self.axis = axis
+        self.evict_after = int(evict_after)
+
+    @classmethod
+    def for_mesh(cls, cfg: SketchConfig, capacity: int, n_epochs: int, mesh, *, axis: str = sharding.AXIS, seed: int | None = None, pinned: tuple = (), evict_after: int = 0):
+        """Build with ``capacity`` rounded up to a shard multiple."""
+        cap = sharding.padded_k(capacity, mesh, axis)
+        dcfg = DirectoryConfig(capacity=cap, seed=cfg.seed if seed is None else seed, pinned=pinned)
+        return cls(cfg, dcfg, n_epochs, mesh, axis=axis, evict_after=evict_after)
+
+    def init(self) -> ShardedWindowMonitorState:
+        """Fresh sharded ring + empty directory telemetry."""
+        return ShardedWindowMonitorState(
+            window=sharded_window_array.init(
+                self.cfg, self.dcfg.capacity, self.n_epochs, self.mesh, axis=self.axis
+            ),
+            directory=key_directory.init(self.dcfg),
+            n_seen=jnp.int32(0),
+        )
+
+    def update(self, state: ShardedWindowMonitorState, tenant_keys, ids, weights=None, mask=None) -> ShardedWindowMonitorState:
+        """Fold a keyed batch into the CURRENT epoch; routed slots are
+        stamped with the window's epoch clock for directory aging."""
+        keys = _flatten_keys(tenant_keys)
+        ids, w, mask, n_live = _flatten(ids, weights, mask)
+        win, dir_state = sharded_window_array.update_tenants(
+            self.cfg, self.dcfg, self.mesh, state.window, state.directory,
+            keys, ids, w, mask=mask, axis=self.axis,
+        )
+        return ShardedWindowMonitorState(
+            window=win, directory=dir_state, n_seen=state.n_seen + n_live
+        )
+
+    def rotate(self, state: ShardedWindowMonitorState) -> ShardedWindowMonitorState:
+        """Advance the epoch clock shard-locally (evicting the oldest epoch
+        once the ring is full); age cold directory fingerprints if
+        configured."""
+        win = sharded_window_array.rotate(self.cfg, self.mesh, state.window, axis=self.axis)
+        directory = state.directory
+        if self.evict_after:
+            directory, _ = key_directory.evict_older_than(
+                self.dcfg, directory, win.epoch_id - self.evict_after
+            )
+        return ShardedWindowMonitorState(
+            window=win, directory=directory, n_seen=state.n_seen
+        )
+
+    def estimate(self, state: ShardedWindowMonitorState, w: int | None = None) -> jnp.ndarray:
+        """Ĉ[K] over the trailing window. ``w=None``: the O(K) anytime read
+        of the sharded union martingales; ``w`` an int in [1, E]: the
+        shard-local windowed histogram-MLE read."""
+        if w is None:
+            return sharded_window_array.estimate_ring_anytime(state.window)
+        return sharded_window_array.estimate_window(
+            self.cfg, self.mesh, state.window, w, axis=self.axis
+        )
+
+    def merge(self, a: ShardedWindowMonitorState, b: ShardedWindowMonitorState) -> ShardedWindowMonitorState:
+        """Cross-pod union of ring-aligned sharded windows (pods rotate on a
+        shared clock): shard-local register max + MLE re-estimates,
+        directory merge."""
+        return ShardedWindowMonitorState(
+            window=sharded_window_array.merge(self.cfg, self.mesh, a.window, b.window, axis=self.axis),
+            directory=key_directory.merge(a.directory, b.directory),
+            n_seen=a.n_seen + b.n_seen,
+        )
+
+    def metrics(self, state: ShardedWindowMonitorState) -> dict:
+        """Cheap per-step scalars: stream + directory health + the window
+        clock and the total windowed weight (O(K) sum of the sharded
+        anytime union reads)."""
         return {
             "tenant_elements_seen": state.n_seen,
             "tenant_slots_claimed": jnp.sum((state.directory.fingerprints != 0).astype(jnp.int32)),

@@ -31,7 +31,7 @@ def make_decode_step(
     mesh=None,
     *,
     sketch_cfg: SketchConfig | None = None,
-    tenant_monitor: monitor.ShardedArrayMonitor | monitor.DynArrayMonitor | monitor.WindowMonitor | None = None,
+    tenant_monitor: monitor.ShardedArrayMonitor | monitor.DynArrayMonitor | monitor.WindowMonitor | monitor.ShardedDynMonitor | monitor.ShardedWindowMonitor | None = None,
     temperature: float = 0.0,
 ):
     """With ``tenant_monitor`` set, ``sk_state`` is a ``TelemetryState`` and

@@ -32,7 +32,7 @@ def make_train_step(
     mesh=None,
     *,
     sketch_cfg: SketchConfig | None = None,
-    tenant_monitor: monitor.ShardedArrayMonitor | monitor.DynArrayMonitor | monitor.WindowMonitor | None = None,
+    tenant_monitor: monitor.ShardedArrayMonitor | monitor.DynArrayMonitor | monitor.WindowMonitor | monitor.ShardedDynMonitor | monitor.ShardedWindowMonitor | None = None,
     compress: bool = False,
     microbatches: int = 1,
     remat=True,

@@ -1,0 +1,282 @@
+"""ShardedDynArray tests.
+
+Acceptance: every state leaf — registers, histograms AND the running
+martingale chats — is bit-identical to the single-host DynArray fed the
+same stream on the 8-device host mesh (scripts/test.sh exports
+XLA_FLAGS=--xla_force_host_platform_device_count=8), including masked
+batches, sparse 64-bit tenants through the directory, the kernel-backed
+update op, all-max / disjoint merges, and the monitor/train threading.
+Also covers the merge_disjoint overlap rejection (both the sharded default
+and the single-host opt-in).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SketchConfig,
+    dyn_array,
+    key_directory,
+    sharded_dyn_array,
+    sharding,
+)
+from repro.core.key_directory import DirectoryConfig
+from repro.kernels import ops
+from repro.launch.mesh import make_sketch_mesh
+from repro.sketchstream import monitor
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_sketch_mesh()  # 8 shards under scripts/test.sh
+
+
+def _stream(n, k, seed):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, k, n, dtype=np.int32))
+    ids = jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint32))
+    w = jnp.asarray((rng.gamma(1.0, 2.0, n) + 1e-5).astype(np.float32))
+    return keys, ids, w
+
+
+def _assert_states_equal(sh, ref):
+    """Every leaf bitwise — the acceptance bar, chats included."""
+    np.testing.assert_array_equal(np.asarray(sh.regs), np.asarray(ref.regs))
+    np.testing.assert_array_equal(np.asarray(sh.hists), np.asarray(ref.hists))
+    np.testing.assert_array_equal(np.asarray(sh.chats), np.asarray(ref.chats))
+
+
+# ---------------------------------------------------------------------------
+# acceptance: update -> estimate vs the single-host DynArray, bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_update_bit_identical_all_leaves(mesh):
+    cfg = SketchConfig(m=96, b=8, seed=31)  # ragged m: not a lane multiple
+    k = sharding.padded_k(100, mesh)  # ragged K rounded to the shards
+    sh = sharded_dyn_array.init(cfg, k, mesh)
+    ref = dyn_array.init(cfg, k)
+    for i in range(3):  # multi-batch: batch-start q_R state must track too
+        keys, ids, w = _stream(700, k, seed=i)
+        sh = sharded_dyn_array.update_batch(cfg, mesh, sh, keys, ids, w)
+        ref = dyn_array.update_batch(cfg, ref, keys, ids, w)
+    _assert_states_equal(sh, ref)
+    np.testing.assert_array_equal(
+        np.asarray(sharded_dyn_array.estimate_all(sh)), np.asarray(ref.chats)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(sharded_dyn_array.estimate_mle_all(cfg, mesh, sh)),
+        np.asarray(dyn_array.estimate_mle_all(cfg, ref)),
+    )
+
+
+def test_masked_and_degenerate_rows_are_noops(mesh):
+    cfg = SketchConfig(m=64, b=8, seed=33)
+    k = sharding.padded_k(40, mesh)
+    keys, ids, w = _stream(400, k, seed=5)
+    w = w.at[::7].set(-1.0)  # degenerate weights dropped like masked rows
+    mask = jnp.asarray(np.random.default_rng(3).random(400) < 0.5)
+    sh = sharded_dyn_array.update_batch(
+        cfg, mesh, sharded_dyn_array.init(cfg, k, mesh), keys, ids, w, mask=mask
+    )
+    ref = dyn_array.update_batch(cfg, dyn_array.init(cfg, k), keys, ids, w, mask=mask)
+    _assert_states_equal(sh, ref)
+
+
+def test_reshard_roundtrip_and_geometry(mesh):
+    cfg = SketchConfig(m=64, b=8, seed=35)
+    k = sharding.padded_k(48, mesh)
+    keys, ids, w = _stream(300, k, seed=9)
+    ref = dyn_array.update_batch(cfg, dyn_array.init(cfg, k), keys, ids, w)
+    sh = sharded_dyn_array.from_array(ref, mesh)
+    _assert_states_equal(sharded_dyn_array.to_array(sh), ref)
+    assert sharded_dyn_array.num_sketches(sh) == k
+    if sharding.num_shards(mesh) > 1:
+        with pytest.raises(ValueError, match="divisible"):
+            sharded_dyn_array.init(cfg, sharding.num_shards(mesh) + 1, mesh)
+
+
+# ---------------------------------------------------------------------------
+# merges: overlapping (MLE re-estimate) and key-partitioned (chats add)
+# ---------------------------------------------------------------------------
+
+
+def test_merge_overlapping_matches_single_host(mesh):
+    cfg = SketchConfig(m=64, b=8, seed=41)
+    k = sharding.padded_k(32, mesh)
+    ka, ia, wa = _stream(900, k, seed=11)
+    kb, ib, wb = _stream(700, k, seed=12)
+    sh_a = sharded_dyn_array.update_batch(cfg, mesh, sharded_dyn_array.init(cfg, k, mesh), ka, ia, wa)
+    sh_b = sharded_dyn_array.update_batch(cfg, mesh, sharded_dyn_array.init(cfg, k, mesh), kb, ib, wb)
+    ref_a = dyn_array.update_batch(cfg, dyn_array.init(cfg, k), ka, ia, wa)
+    ref_b = dyn_array.update_batch(cfg, dyn_array.init(cfg, k), kb, ib, wb)
+    _assert_states_equal(
+        sharded_dyn_array.merge(cfg, mesh, sh_a, sh_b), dyn_array.merge(cfg, ref_a, ref_b)
+    )
+    with pytest.raises(ValueError, match="matching"):
+        sharded_dyn_array.merge(
+            cfg, mesh, sh_a, sharded_dyn_array.init(cfg, 2 * k, mesh)
+        )
+
+
+def test_merge_disjoint_key_partitioned_fleets(mesh):
+    """Key-partitioned fleets: fleet A owns rows [0, K/2), fleet B the rest.
+    Chats ADD exactly and match the single-host disjoint merge bitwise."""
+    cfg = SketchConfig(m=64, b=8, seed=43)
+    k = sharding.padded_k(32, mesh)
+    keys, ids, w = _stream(1200, k, seed=13)
+    in_a = keys < k // 2
+    sh_a = sharded_dyn_array.update_batch(
+        cfg, mesh, sharded_dyn_array.init(cfg, k, mesh), keys, ids, w, mask=in_a
+    )
+    sh_b = sharded_dyn_array.update_batch(
+        cfg, mesh, sharded_dyn_array.init(cfg, k, mesh), keys, ids, w, mask=~in_a
+    )
+    ref_a = dyn_array.update_batch(cfg, dyn_array.init(cfg, k), keys, ids, w, mask=in_a)
+    ref_b = dyn_array.update_batch(cfg, dyn_array.init(cfg, k), keys, ids, w, mask=~in_a)
+    merged = sharded_dyn_array.merge_disjoint(cfg, mesh, sh_a, sh_b)
+    _assert_states_equal(merged, dyn_array.merge_disjoint(cfg, ref_a, ref_b))
+    np.testing.assert_array_equal(
+        np.asarray(merged.chats), np.asarray(sh_a.chats) + np.asarray(sh_b.chats)
+    )
+
+
+def test_merge_disjoint_rejects_overlapping_partitions(mesh):
+    """A key row live in BOTH fleets breaks the partition contract: the
+    sharded fleet merge rejects it by default; the single-host container
+    rejects it under check_partition=True (and still allows the weaker
+    element-disjoint use without it)."""
+    cfg = SketchConfig(m=64, b=8, seed=45)
+    k = sharding.padded_k(16, mesh)
+    ka, ia, wa = _stream(400, k, seed=17)
+    kb, ib, wb = _stream(400, k, seed=18)  # same key space: partitions overlap
+    sh_a = sharded_dyn_array.update_batch(cfg, mesh, sharded_dyn_array.init(cfg, k, mesh), ka, ia, wa)
+    sh_b = sharded_dyn_array.update_batch(cfg, mesh, sharded_dyn_array.init(cfg, k, mesh), kb, ib, wb)
+    with pytest.raises(ValueError, match="live in BOTH"):
+        sharded_dyn_array.merge_disjoint(cfg, mesh, sh_a, sh_b)
+    # Explicit opt-out for element-disjoint-but-key-shared fleets.
+    out = sharded_dyn_array.merge_disjoint(
+        cfg, mesh, sh_a, sh_b, check_partition=False
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out.chats), np.asarray(sh_a.chats) + np.asarray(sh_b.chats)
+    )
+
+    ref_a = dyn_array.update_batch(cfg, dyn_array.init(cfg, k), ka, ia, wa)
+    ref_b = dyn_array.update_batch(cfg, dyn_array.init(cfg, k), kb, ib, wb)
+    with pytest.raises(ValueError, match="live in BOTH"):
+        dyn_array.merge_disjoint(cfg, ref_a, ref_b, check_partition=True)
+    # Under jit tracing the host-side guard CANNOT run: asking for it must
+    # fail loudly (at trace time), never silently skip the check.
+    with pytest.raises(ValueError, match="under\\s+jit tracing"):
+        jax.jit(
+            lambda x, y: dyn_array.merge_disjoint(cfg, x, y, check_partition=True)
+        )(ref_a, ref_b)
+
+
+# ---------------------------------------------------------------------------
+# sparse 64-bit tenants + kernel-backed op
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_tenants_end_to_end(mesh):
+    cfg = SketchConfig(m=64, b=8, seed=47)
+    dcfg = DirectoryConfig(capacity=sharding.padded_k(512, mesh), seed=49)
+    rng = np.random.default_rng(19)
+    tenants = rng.integers(2**33, 2**64, 600, dtype=np.uint64)
+    keys = key_directory.split_uint64(tenants)
+    ids = jnp.asarray(rng.integers(0, 2**32, 600, dtype=np.uint32))
+    w = jnp.asarray(rng.uniform(0.5, 1.5, 600).astype(np.float32))
+
+    sh = sharded_dyn_array.init(cfg, dcfg.capacity, mesh)
+    dstate = key_directory.init(dcfg)
+    sh, dstate = sharded_dyn_array.update_tenants(
+        cfg, dcfg, mesh, sh, dstate, keys, ids, w
+    )
+    assert int(dstate.n_routed) == 600
+
+    slots = key_directory.route_slots(dcfg, keys)
+    ref = dyn_array.update_batch(cfg, dyn_array.init(cfg, dcfg.capacity), slots, ids, w)
+    _assert_states_equal(sh, ref)
+
+    with pytest.raises(ValueError, match="capacity"):
+        sharded_dyn_array.update_tenants(
+            cfg, DirectoryConfig(capacity=2 * dcfg.capacity), mesh, sh,
+            dstate, keys, ids, w,
+        )
+
+
+def test_kernel_op_bit_identity(mesh):
+    cfg = SketchConfig(m=64, b=8, seed=51)
+    k = sharding.padded_k(24, mesh)
+    sh = sharded_dyn_array.init(cfg, k, mesh)
+    ref = dyn_array.init(cfg, k)
+    for i in range(2):
+        keys, ids, w = _stream(300, k, seed=20 + i)
+        mask = jnp.asarray(np.random.default_rng(21 + i).random(300) < 0.8)
+        sh = ops.sharded_dyn_array_update_op(cfg, mesh, sh, keys, ids, w, mask=mask)
+        ref = dyn_array.update_batch(cfg, ref, keys, ids, w, mask=mask)
+    _assert_states_equal(sh, ref)
+
+
+# ---------------------------------------------------------------------------
+# monitor + train threading
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_dyn_monitor_roundtrip(mesh):
+    cfg = SketchConfig(m=64, b=8, seed=61)
+    mon = monitor.ShardedDynMonitor.for_mesh(cfg, 500, mesh)
+    ref_mon = monitor.DynArrayMonitor(cfg, mon.dcfg)
+    rng = np.random.default_rng(25)
+    tkeys = jnp.asarray(rng.integers(0, 2**32, 300, dtype=np.uint32))
+    ids = jnp.asarray(rng.integers(0, 2**32, 300, dtype=np.uint32))
+    w = jnp.asarray(rng.uniform(0.5, 1.5, 300).astype(np.float32))
+    mask = jnp.asarray(np.arange(300) < 250)
+
+    st = mon.update(mon.init(), tkeys, ids, w, mask=mask)
+    ref = ref_mon.update(ref_mon.init(), tkeys, ids, w, mask=mask)
+    assert int(st.n_seen) == 250
+    np.testing.assert_array_equal(np.asarray(mon.estimate(st)), np.asarray(ref_mon.estimate(ref)))
+
+    st2 = mon.update(mon.init(), tkeys, ids, w, mask=mask)
+    merged = mon.merge(st, st2)
+    assert int(merged.n_seen) == 500
+    m = mon.metrics(st)
+    assert int(m["tenant_elements_seen"]) == 250
+    assert float(m["tenant_weight_total"]) == pytest.approx(
+        float(np.asarray(mon.estimate(st)).sum()), rel=1e-6
+    )
+    with pytest.raises(ValueError, match="divisible"):
+        monitor.ShardedDynMonitor(
+            cfg, DirectoryConfig(capacity=sharding.num_shards(mesh) * 8 + 1), mesh
+        )
+
+
+def test_train_step_threads_sharded_dyn_telemetry(mesh):
+    from repro import configs
+    from repro.models import common as mcommon, transformer
+    from repro.train import optimizer, train_step as ts
+
+    mcfg = configs.smoke_config("h2o-danube-1.8b")
+    params = mcommon.init_params(transformer.model_defs(mcfg), jax.random.PRNGKey(6))
+    params = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    rng = np.random.default_rng(27)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, mcfg.vocab, (4, 16)), jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, mcfg.vocab, (4, 16)), jnp.int32),
+        "doc_ids": jnp.asarray(rng.integers(0, 2**32, (4,), dtype=np.uint32)),
+    }
+    skc = SketchConfig(m=64, b=8, seed=63)
+    mon = monitor.ShardedDynMonitor.for_mesh(skc, 256, mesh)
+    ocfg = optimizer.OptConfig(lr=1e-3, warmup_steps=0)
+    step = jax.jit(ts.make_train_step(mcfg, ocfg, None, sketch_cfg=skc, tenant_monitor=mon))
+    opt, comp, sk = ts.init_states(mcfg, ocfg, params, sketch_cfg=skc, tenant_monitor=mon)
+
+    _, _, _, sk, metrics = step(params, opt, comp, sk, batch)
+    assert int(sk.tenants.n_seen) == 64  # 4 x 16 tokens through the array
+    assert "tenant_weight_total" in metrics
+    est = np.asarray(mon.estimate(sk.tenants))
+    assert (est > 0).sum() == 4  # 4 documents -> exactly 4 live rows
