@@ -1,0 +1,121 @@
+"""Estimation-layer solver sweep: newton vs lut vs fused across K.
+
+The unified estimation layer (core/estimation.py, DESIGN.md §8.7) exists to
+kill the batched-MLE wall the ROADMAP records — the vmapped safeguarded
+Newton runs every row to the slowest row's iteration count, ~65 s at
+K = 2^20 — without giving up the histogram-MLE's accuracy. This suite
+measures the three solvers on identical histogram batches:
+
+  * ``newton`` — the bit-identity reference (``estimators.qsketch_mle``
+    vmapped). Swept only up to K = 2^14 quick / 2^17 full: the 2^20 cell
+    takes ~65 s per repetition and its cost is already documented.
+  * ``lut``   — the rebased-grid table solver; the acceptance bar is
+    K = 2^20 under 1 s (measured ~0.86 s on the single-core host).
+  * ``fused`` — the Pallas one-pass kernel via ``ops.estimate_rows_op``.
+    On CPU it executes in interpret mode (a Python-level emulation whose
+    wall time says nothing about TPU throughput), so it is swept only at
+    the smallest K as an end-to-end liveness check.
+
+Also timed: the sliding-window sub-ring read (``window_array
+.estimate_window`` with w < E), whose query cost is union + histogram MLE —
+the case where the solver choice dominates an interactive read path.
+
+The sweep is cumulative (common.merge_save): quick/smoke runs re-measure
+only small-K cells and never erase the paper-scale rows a ``--full`` run
+paid for. scripts/check_bench_schema.py guards the merged JSON.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SketchConfig, estimation, sketch_array, window_array
+from repro.kernels import ops
+
+from . import common
+
+_M = 64  # registers per row: keeps state building cheap; the solve is O(2^b)
+
+
+def _loaded_hists(cfg, k, seed):
+    """Histograms of k live sketch rows at heterogeneous scales."""
+    rng = np.random.default_rng(seed)
+    st = sketch_array.init(cfg, k)
+    batch = 65536
+    for i in range(max(2 * k // batch, 2)):
+        keys = jnp.asarray(rng.integers(0, k, batch, dtype=np.int32))
+        ids = jnp.asarray(rng.integers(0, 2**32, batch, dtype=np.uint32))
+        scale = np.exp2(rng.uniform(-6, 12, batch)).astype(np.float32)
+        w = jnp.asarray((rng.gamma(1.0, 2.0, batch).astype(np.float32) + 1e-5) * scale)
+        st = sketch_array.update(cfg, st, keys, ids, w)
+    hists = sketch_array.histograms(cfg, st)
+    jax.block_until_ready(hists)
+    return st, hists
+
+
+def run(quick=True):
+    rows = []
+    swept = set()
+    cfg = SketchConfig(m=_M, b=8, seed=23)
+
+    ks = [2**10, 2**14] if quick else [2**10, 2**14, 2**17, 2**20]
+    newton_cap = 2**14 if quick else 2**17
+    for k in ks:
+        st, hists = _loaded_hists(cfg, k, seed=k)
+        swept.add((k,))
+        iters = 3  # median-of-3: single samples at large K are too noisy
+
+        # Steady-state read cost: the first touches of a GiB-scale histogram
+        # block pay page-in + frequency ramp, so warm twice and take the
+        # median of five (~4 s extra at the largest K).
+        t_lut = common.time_fn(
+            lambda h: estimation.estimate_hists(cfg, h, kind="full", solver="lut"),
+            hists, warmup=2, iters=5,
+        )
+        rows.append({"figure": "estimation_solvers", "method": "lut", "k": k, "m": _M, "ms": t_lut * 1e3})
+        common.csv_row(f"estimation/K{k}/lut", t_lut * 1e6, f"ms={t_lut*1e3:.1f}")
+
+        if k <= newton_cap:
+            t_new = common.time_fn(
+                lambda h: estimation.estimate_hists(cfg, h, kind="full", solver="newton"),
+                hists, warmup=1, iters=iters,
+            )
+            x = t_new / max(t_lut, 1e-9)
+            rows.append({"figure": "estimation_solvers", "method": "newton", "k": k, "m": _M, "ms": t_new * 1e3})
+            rows.append({"figure": "estimation_solvers", "method": "speedup", "k": k, "m": _M, "x": x})
+            common.csv_row(f"estimation/K{k}/newton", t_new * 1e6, f"ms={t_new*1e3:.1f}")
+            common.csv_row(f"estimation/K{k}/speedup", 0.0, f"newton/lut={x:.1f}x")
+
+        if k == ks[0]:
+            # Liveness only on CPU: interpret-mode wall time is not TPU time.
+            t_fused = common.time_fn(
+                lambda r: ops.estimate_rows_op(cfg, r, kind="full"),
+                st.regs, warmup=1, iters=1,
+            )
+            rows.append({"figure": "estimation_solvers", "method": "fused", "k": k, "m": _M, "ms": t_fused * 1e3})
+            common.csv_row(f"estimation/K{k}/fused", t_fused * 1e6, "interpret mode on CPU")
+
+    # --- sliding-window sub-ring read: union + histogram MLE --------------
+    k_win = 2**14 if quick else 2**17
+    epochs = 8
+    wa = window_array.init(cfg, k_win, epochs)
+    rng = np.random.default_rng(31)
+    for _ in range(epochs):
+        keys = jnp.asarray(rng.integers(0, k_win, 65536, dtype=np.int32))
+        ids = jnp.asarray(rng.integers(0, 2**32, 65536, dtype=np.uint32))
+        w = jnp.asarray((rng.gamma(1.0, 2.0, 65536) + 1e-5).astype(np.float32))
+        wa = window_array.update_batch(cfg, wa, keys, ids, w)
+        wa = window_array.rotate(cfg, wa)
+    jax.block_until_ready(wa.hists)
+    swept.add((k_win,))
+    for solver in ("newton", "lut"):
+        t_sub = common.time_fn(
+            lambda s, sol=solver: window_array.estimate_window(cfg, s, epochs // 2, solver=sol),
+            wa, warmup=1, iters=3 if quick else 1,
+        )
+        rows.append({"figure": "estimation_window", "method": solver, "k": k_win, "m": _M, "ms": t_sub * 1e3})
+        common.csv_row(f"estimation/window/K{k_win}/{solver}", t_sub * 1e6, f"w={epochs//2} of E={epochs}")
+
+    common.merge_save("estimation", rows, swept)

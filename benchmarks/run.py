@@ -23,6 +23,7 @@ SMOKE_SUITES = (
     "sketch_array_sharded",
     "dyn_array",
     "dyn_array_sharded",
+    "estimation",
     "window_array",
     "window_array_sharded",
 )
@@ -42,6 +43,7 @@ def main() -> None:
         accuracy,
         batch_bias,
         dyn_array,
+        estimation,
         kernels,
         netflow,
         register_size,
@@ -60,6 +62,7 @@ def main() -> None:
         "sketch_array": sketch_array.run,  # fused K-sketch vs naive loop
         "sketch_array_sharded": sketch_array.run_sharded,  # mesh-sharded K sweep
         "dyn_array": dyn_array.run,  # anytime reads vs Newton estimate_all
+        "estimation": estimation.run,  # solver sweep: newton vs lut vs fused
         "dyn_array_sharded": dyn_array.run_sharded,  # sharded Dyn K sweep
         "window_array": window_array.run,  # sliding-window reads vs per-epoch Newton
         "window_array_sharded": window_array.run_sharded,  # sharded ring (K, E) sweep

@@ -31,6 +31,7 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "benc
 CUMULATIVE = (
     "dyn_array.json",
     "dyn_array_sharded.json",
+    "estimation.json",
     "window_array.json",
     "window_array_sharded.json",
 )

@@ -14,8 +14,10 @@ Checked, via AST (no imports, so a broken module still reports precisely):
     exempt — the class docstring owns construction; NamedTuple field
     declarations have no methods to check).
 
-Scope: ``src/repro/core/`` and ``src/repro/sketchstream/`` — the layers
-whose docstrings double as the design record (DESIGN.md cites them).
+Scope: ``src/repro/core/``, ``src/repro/sketchstream/``, and
+``src/repro/kernels/`` — the layers whose docstrings double as the design
+record (DESIGN.md cites them; the kernel wrappers state the bit-identity
+and interpret-mode contracts).
 
 Usage:  python scripts/check_docstrings.py [path ...]
         (no args: checks the default scope)
@@ -31,6 +33,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_SCOPE = (
     os.path.join(REPO, "src", "repro", "core"),
     os.path.join(REPO, "src", "repro", "sketchstream"),
+    os.path.join(REPO, "src", "repro", "kernels"),
 )
 
 

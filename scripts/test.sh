@@ -10,14 +10,18 @@
 #   exercise multi-device code paths on a CPU-only box; an existing
 #   XLA_FLAGS setting is preserved and extended.
 # - --tier2 additionally (1) audits public docstrings in core/ +
-#   sketchstream/ (scripts/check_docstrings.py — the shape/dtype and merge
-#   contracts live there), (2) runs `python -m benchmarks.run --smoke` (the
-#   quick profile over the fast suites, incl. the sharded SketchArray /
-#   DynArray / WindowArray sweeps) so CI catches benchmark-path rot without
-#   paying for the paper-scale sweeps, then (3) asserts the cumulative
-#   bench-JSON schema (required keys, unique + monotone K per group) so a
-#   broken cumulative merge fails loudly instead of silently dropping or
-#   duplicating rows.
+#   sketchstream/ + kernels/ (scripts/check_docstrings.py — the shape/dtype
+#   and merge contracts live there), (2) enforces the estimation layering:
+#   containers and monitors must solve histograms through core/estimation.py
+#   (DESIGN.md §8.7), never by calling estimators.qsketch_mle themselves —
+#   a direct call would bypass the solver registry, the routed ×m scaling,
+#   and the untouched-row guard, (3) runs `python -m benchmarks.run --smoke`
+#   (the quick profile over the fast suites, incl. the sharded SketchArray /
+#   DynArray / WindowArray sweeps and the estimation solver sweep) so CI
+#   catches benchmark-path rot without paying for the paper-scale sweeps,
+#   then (4) asserts the cumulative bench-JSON schema (required keys,
+#   unique + monotone K per group) so a broken cumulative merge fails
+#   loudly instead of silently dropping or duplicating rows.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -35,6 +39,16 @@ python -m pytest -x -q "$@"
 if [[ "$tier2" == 1 ]]; then
   echo "== tier-2: public docstring audit =="
   python scripts/check_docstrings.py
+  echo "== tier-2: estimation layering check =="
+  # Only the estimation layer may call the raw Newton solver; everything
+  # else goes through estimation.estimate_* (solver registry + guards).
+  if grep -rn "qsketch_mle" src/repro/core src/repro/sketchstream \
+      --include='*.py' \
+      --exclude=estimation.py --exclude=estimators.py; then
+    echo "FAIL: call estimators.qsketch_mle only via core/estimation.py" >&2
+    exit 1
+  fi
+  echo "layering: OK"
   echo "== tier-2: benchmark smoke paths =="
   python -m benchmarks.run --smoke
   echo "== tier-2: bench JSON schema =="

@@ -18,6 +18,7 @@ Baselines (LM / FastGM / FastExpSketch) live in ``baselines``; the uniform
 from . import (
     baselines,
     dyn_array,
+    estimation,
     estimators,
     hashing,
     key_directory,
@@ -109,6 +110,7 @@ __all__ = [
     "window_array",
     "key_directory",
     "baselines",
+    "estimation",
     "estimators",
     "hashing",
     "METHODS",

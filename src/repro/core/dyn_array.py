@@ -40,7 +40,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import estimators, hashing, key_directory, qsketch_dyn
+from . import estimation, estimators, hashing, key_directory, qsketch_dyn
 from .types import DynArrayState, DynState, SketchConfig
 
 
@@ -172,44 +172,52 @@ def estimate_all(state: DynArrayState) -> jnp.ndarray:
     return state.chats
 
 
-def estimate_mle_rows(cfg: SketchConfig, regs) -> jnp.ndarray:
+def estimate_mle_rows(cfg: SketchConfig, regs, *, solver: str = "newton") -> jnp.ndarray:
     """Per-row histogram-MLE Ĉ from an ``int8[K, m]`` register matrix.
 
     The regs-only core of ``estimate_mle_all``, shared with the windowed
     union reads (core/window_array.py): each row's MLE recovers C_k/m and is
-    scaled by m; untouched rows report 0. Delegates to
-    ``estimate_mle_hists`` so the untouched-row guard lives in one place.
+    scaled by m; untouched rows report 0. Thin shim over
+    ``estimation.estimate_rows(kind="routed")`` — the solve (and the
+    untouched-row guard) lives in the estimation layer; ``solver`` picks
+    newton / lut / fused (DESIGN.md §8.7).
     """
-    hists = jax.vmap(lambda r: estimators.histogram(cfg, r))(regs)
-    return estimate_mle_hists(cfg, hists)
+    return estimation.estimate_rows(cfg, regs, kind="routed", solver=solver)
 
 
-def estimate_mle_hists(cfg: SketchConfig, full_hists) -> jnp.ndarray:
+def estimate_mle_hists(cfg: SketchConfig, full_hists, *, solver: str = "newton") -> jnp.ndarray:
     """Per-row histogram-MLE Ĉ from FULL histograms ``int32[K, 2^b]`` (bin 0
     counts untouched r_min registers, rows sum to m).
 
     Bit-identical to ``estimate_mle_rows`` on the registers the histograms
     were counted from — the likelihood sees registers only through their
     value histogram (DESIGN.md §8.3) — which is what lets the window array's
-    cached union histograms skip the register walk entirely.
+    cached union histograms skip the register walk entirely. Thin shim over
+    ``estimation.estimate_hists(kind="routed")``.
     """
-
-    def one(hist):
-        chat, _, _ = estimators.qsketch_mle(cfg, hist)
-        return jnp.where(hist[0] == cfg.m, jnp.float32(0.0), chat * cfg.m)
-
-    return jax.vmap(one)(full_hists)
+    return estimation.estimate_hists(cfg, full_hists, kind="routed", solver=solver)
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def estimate_mle_all(cfg: SketchConfig, state: DynArrayState) -> jnp.ndarray:
-    """Per-key histogram-MLE re-estimate from the registers, Ĉ[K].
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("solver",))
+def estimate_mle_all(
+    cfg: SketchConfig, state: DynArrayState, *, solver: str = "newton"
+) -> jnp.ndarray:
+    """Per-key histogram-MLE re-estimate, Ĉ[K].
 
     The vmapped form of ``qsketch_dyn.estimate_mle`` (each row's MLE recovers
     C_k/m and is scaled by m); untouched rows report 0. Use after cross-shard
     merges or as a self-check — the hot path reads ``estimate_all``.
+
+    ``solver="lut"`` reads the maintained ``state.hists`` (bin 0 re-derived
+    from the row sums, an invariant tested against ``rebuild_hists``) instead
+    of bincounting the registers — the whole O(K·m) register walk disappears
+    along with the Newton loop. ``"fused"`` streams the registers through the
+    Pallas estimate kernel (TPU).
     """
-    return estimate_mle_rows(cfg, state.regs)
+    if solver == "lut":
+        full = state.hists.at[:, 0].set(cfg.m - jnp.sum(state.hists, axis=1))
+        return estimation.estimate_hists(cfg, full, kind="routed", solver="lut")
+    return estimation.estimate_rows(cfg, state.regs, kind="routed", solver=solver)
 
 
 def merge(cfg: SketchConfig, a: DynArrayState, b: DynArrayState) -> DynArrayState:

@@ -35,7 +35,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import estimators, hashing
+from . import estimation, estimators, hashing
 from .types import QSketchState, SketchConfig
 
 
@@ -161,20 +161,22 @@ def prune_mask(cfg: SketchConfig, state: QSketchState, ids, weights):
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def estimate(cfg: SketchConfig, state: QSketchState):
-    """MLE estimate Ĉ (paper §4.2) — O(m) bincount + O(2^b) Newton."""
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("solver",))
+def estimate(cfg: SketchConfig, state: QSketchState, *, solver: str = "newton"):
+    """MLE estimate Ĉ (paper §4.2) — O(m) bincount + O(2^b) solve.
+
+    Thin shim over ``estimation.estimate_hist(kind="full")``; ``solver``
+    picks newton / lut (DESIGN.md §8.7).
+    """
     hist = estimators.histogram(cfg, state.regs)
-    chat, _, _ = estimators.qsketch_mle(cfg, hist)
-    return chat
+    return estimation.estimate_hist(cfg, hist, kind="full", solver=solver)
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def estimate_with_ci(cfg: SketchConfig, state: QSketchState):
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("solver",))
+def estimate_with_ci(cfg: SketchConfig, state: QSketchState, *, solver: str = "newton"):
     """(Ĉ, approximate stddev) via the observed-Fisher variance (paper §4.2)."""
     hist = estimators.histogram(cfg, state.regs)
-    chat, stddev, ok = estimators.qsketch_mle(cfg, hist)
-    return chat, stddev, ok
+    return estimation.estimate_hist_with_ci(cfg, hist, kind="full", solver=solver)
 
 
 def merge(a: QSketchState, b: QSketchState) -> QSketchState:

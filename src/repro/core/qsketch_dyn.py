@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import estimators, hashing
+from . import estimation, estimators, hashing
 from .types import DynState, SketchConfig
 
 _QR_FLOOR = 1e-12  # q_R guard; only reachable when sketch is fully saturated
@@ -206,14 +206,13 @@ def estimate_mle(cfg: SketchConfig, state: DynState):
     -> probability 1), so untouched registers need no special-casing.
 
     Fully untouched state (all registers at r_min, hist all zero): Ĉ = 0 by
-    contract — guarded explicitly here rather than relying on the MLE's
-    internal all-r_min degenerate fallback, the same untouched-row contract
-    as ``sketch_array.estimate_all``.
+    contract. The ×m scaling and the untouched guard are the estimation
+    layer's ``kind="routed"`` convention (core/estimation.py) — one home for
+    a guard that used to be repeated here, in ``merge`` and in
+    ``dyn_array.estimate_mle_hists``.
     """
     hist = estimators.histogram(cfg, state.regs)
-    untouched = hist[0] == cfg.m
-    chat, _, _ = estimators.qsketch_mle(cfg, hist)
-    return jnp.where(untouched, jnp.float32(0.0), chat * cfg.m)
+    return estimation.estimate_hist(cfg, hist, kind="routed")
 
 
 def merge(cfg: SketchConfig, a: DynState, b: DynState) -> DynState:
@@ -233,9 +232,7 @@ def merge(cfg: SketchConfig, a: DynState, b: DynState) -> DynState:
     # Full histogram (including untouched registers in bin 0) for the MLE;
     # the stored hist keeps the Alg.-3 'touched only' convention.
     full_hist = hist.at[0].set(cfg.m - jnp.sum(hist))
-    untouched = full_hist[0] == cfg.m
-    chat, _, _ = estimators.qsketch_mle(cfg, full_hist)
-    chat = jnp.where(untouched, jnp.float32(0.0), chat * cfg.m)
+    chat = estimation.estimate_hist(cfg, full_hist, kind="routed")
     return DynState(regs=regs, hist=hist, chat=chat)
 
 

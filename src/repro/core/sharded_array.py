@@ -137,32 +137,45 @@ def update_tenants(
     return update(cfg, mesh, state, slots, ids, weights, mask=mask, axis=axis), dir_state
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def _estimate_with_ci(cfg: SketchConfig, mesh, axis: str, regs):
+@functools.partial(jax.jit, static_argnums=(0, 1, 2), static_argnames=("solver",))
+def _estimate_with_ci(cfg: SketchConfig, mesh, axis: str, regs, *, solver: str = "newton"):
     def local(regs_l):
-        return sketch_array.estimate_all_with_ci(cfg, SketchArrayState(regs=regs_l))
+        return sketch_array.estimate_all_with_ci(
+            cfg, SketchArrayState(regs=regs_l), solver=solver
+        )
 
-    # check_rep=False: the Newton lax.while_loop has no replication rule on
-    # current JAX; everything here is shard-local so the check is vacuous.
+    # check_rep=False on the newton path only: its lax.while_loop has no
+    # replication rule on current JAX (everything here is shard-local so the
+    # check is vacuous). The lut solver is while_loop-free, so it keeps the
+    # replication check on.
     return sharding.shard_map_rows(
         local,
         mesh,
         in_dims=(0,),
         out_dims=(0, 0, 0),
         axis=axis,
-        check_rep=False,
+        check_rep=(solver == "lut"),
     )(regs)
 
 
-def estimate_all_with_ci(cfg: SketchConfig, mesh, state: ShardedArrayState, axis: str = AXIS):
-    """(Ĉ[K], stddev[K], converged[K]); Newton stays local to each shard."""
+def estimate_all_with_ci(
+    cfg: SketchConfig, mesh, state: ShardedArrayState, axis: str = AXIS,
+    *, solver: str = "newton",
+):
+    """(Ĉ[K], stddev[K], converged[K]); the solve stays local to each shard
+    (``solver`` picks newton / lut, DESIGN.md §8.7 — with lut each shard
+    anchors its own grid, so lut results can differ from the single-host
+    call within the documented tolerance; newton stays bit-identical)."""
     sharding.check_divisible(state.regs.shape[0], mesh, axis)
-    return _estimate_with_ci(cfg, mesh, axis, state.regs)
+    return _estimate_with_ci(cfg, mesh, axis, state.regs, solver=solver)
 
 
-def estimate_all(cfg: SketchConfig, mesh, state: ShardedArrayState, axis: str = AXIS) -> jnp.ndarray:
+def estimate_all(
+    cfg: SketchConfig, mesh, state: ShardedArrayState, axis: str = AXIS,
+    *, solver: str = "newton",
+) -> jnp.ndarray:
     """Ĉ for every slot — the sharded form of ``sketch_array.estimate_all``."""
-    return estimate_all_with_ci(cfg, mesh, state, axis=axis)[0]
+    return estimate_all_with_ci(cfg, mesh, state, axis=axis, solver=solver)[0]
 
 
 def merge(a: ShardedArrayState, b: ShardedArrayState) -> ShardedArrayState:

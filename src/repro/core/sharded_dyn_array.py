@@ -36,7 +36,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import dyn_array, hashing, key_directory, qsketch_dyn, sharding
+from . import dyn_array, estimation, hashing, key_directory, qsketch_dyn, sharding
 from .types import DynArrayState, ShardedDynArrayState, SketchConfig
 
 AXIS = sharding.AXIS
@@ -127,23 +127,37 @@ def estimate_all(state: ShardedDynArrayState) -> jnp.ndarray:
     return state.chats
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def _estimate_mle(cfg: SketchConfig, mesh, axis: str, regs):
-    def local(regs_l):
-        return dyn_array.estimate_mle_rows(cfg, regs_l)
+@functools.partial(jax.jit, static_argnums=(0, 1, 2), static_argnames=("solver",))
+def _estimate_mle(cfg: SketchConfig, mesh, axis: str, regs, hists, *, solver: str = "newton"):
+    def local(regs_l, hists_l):
+        if solver == "lut":
+            full = hists_l.at[:, 0].set(cfg.m - jnp.sum(hists_l, axis=1))
+            return estimation.estimate_hists(cfg, full, kind="routed", solver="lut")
+        return dyn_array.estimate_mle_rows(cfg, regs_l, solver=solver)
 
-    # check_rep=False: the MLE Newton is a lax.while_loop (no replication
-    # rule); the solve is shard-local so the check is vacuous.
+    # check_rep=False on the newton path only: the MLE Newton is a
+    # lax.while_loop (no replication rule); the solve is shard-local so the
+    # check is vacuous. The lut solver is while_loop-free and reads the
+    # maintained histograms — replication check stays on.
     return sharding.shard_map_rows(
-        local, mesh, in_dims=(0,), out_dims=0, axis=axis, check_rep=False
-    )(regs)
+        local, mesh, in_dims=(0, 0), out_dims=0, axis=axis,
+        check_rep=(solver == "lut"),
+    )(regs, hists)
 
 
-def estimate_mle_all(cfg: SketchConfig, mesh, state: ShardedDynArrayState, axis: str = AXIS) -> jnp.ndarray:
-    """Per-key histogram-MLE re-estimate, Ĉ[K]; shard-local Newton (the
+def estimate_mle_all(
+    cfg: SketchConfig, mesh, state: ShardedDynArrayState, axis: str = AXIS,
+    *, solver: str = "newton",
+) -> jnp.ndarray:
+    """Per-key histogram-MLE re-estimate, Ĉ[K]; shard-local solve (the
     O(K·2^b) cost divides by the shard count). Use after cross-fleet
-    ``merge`` or as a self-check — the hot path reads ``estimate_all``."""
-    return _estimate_mle(cfg, mesh, axis, state.regs)
+    ``merge`` or as a self-check — the hot path reads ``estimate_all``.
+    ``solver="lut"`` reads each shard's maintained histograms (no register
+    walk, no while_loop; the lut grid is per-row so the answer is batch-
+    independent mathematically, but the per-shard GEMM tiles differently
+    than the single-host call's, so agreement is at f32 rounding — within
+    the documented tolerance — not bitwise)."""
+    return _estimate_mle(cfg, mesh, axis, state.regs, state.hists, solver=solver)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2))

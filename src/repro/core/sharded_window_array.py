@@ -167,43 +167,56 @@ def rotate(cfg: SketchConfig, mesh, state: ShardedWindowArrayState, axis: str = 
     return ShardedWindowArrayState(*_rotate(cfg, mesh, axis, state))
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
-def _estimate_subring(cfg: SketchConfig, mesh, axis: str, w: int, regs, head):
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3), static_argnames=("solver",))
+def _estimate_subring(cfg: SketchConfig, mesh, axis: str, w: int, regs, head, *, solver: str = "newton"):
     def local(regs_l, head):
         st = WindowArrayState(
             regs_l, None, None, None, None, None,
             head=head, filled=jnp.int32(0), epoch_id=jnp.int32(0),
         )
-        return dyn_array.estimate_mle_rows(cfg, window_array.window_union_regs(st, w))
+        return dyn_array.estimate_mle_rows(
+            cfg, window_array.window_union_regs(st, w), solver=solver
+        )
 
+    # check_rep stays off for newton (lax.while_loop, no replication rule)
+    # and fused (pallas_call, same); lut is while_loop-free so it keeps the
+    # replication check on.
     return sharding.shard_map_rows(
-        local, mesh, in_dims=(1, None), out_dims=0, axis=axis, check_rep=False
+        local, mesh, in_dims=(1, None), out_dims=0, axis=axis,
+        check_rep=(solver == "lut"),
     )(regs, head)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def _estimate_full_ring(cfg: SketchConfig, mesh, axis: str, union_hists):
+@functools.partial(jax.jit, static_argnums=(0, 1, 2), static_argnames=("solver",))
+def _estimate_full_ring(cfg: SketchConfig, mesh, axis: str, union_hists, *, solver: str = "newton"):
     def local(hists_l):
-        return window_array._chats_from_touched_hists(cfg, hists_l)
+        return window_array._chats_from_touched_hists(cfg, hists_l, solver=solver)
 
     return sharding.shard_map_rows(
-        local, mesh, in_dims=(0,), out_dims=0, axis=axis, check_rep=False
+        local, mesh, in_dims=(0,), out_dims=0, axis=axis,
+        check_rep=(solver == "lut"),
     )(union_hists)
 
 
-def estimate_window(cfg: SketchConfig, mesh, state: ShardedWindowArrayState, w: int, axis: str = AXIS) -> jnp.ndarray:
+def estimate_window(
+    cfg: SketchConfig, mesh, state: ShardedWindowArrayState, w: int, axis: str = AXIS,
+    *, solver: str = "newton",
+) -> jnp.ndarray:
     """Ĉ[K] over the last w <= E epochs (w static, host-side int), sharded.
 
     Shard-local epoch-plane union + histogram MLE — the union over epochs
     commutes with row sharding, so each shard's answer is exactly the
     single-host ``window_array.estimate_window`` restricted to its rows
-    (bit-identical; the full-ring w == E reads the cached union histograms
-    with no union/bincount pass, same as the single-host fast path).
+    (bit-identical for the default newton solver; the full-ring w == E reads
+    the cached union histograms with no union/bincount pass, same as the
+    single-host fast path). ``solver="lut"`` drops the Newton wall — each
+    shard anchors its own grid, so lut agreement with the single-host call
+    is at the documented tolerance, not bitwise.
     """
     w = window_array._check_w(state, w)
     if w == state.regs.shape[0]:
-        return _estimate_full_ring(cfg, mesh, axis, state.union_hists)
-    return _estimate_subring(cfg, mesh, axis, w, state.regs, state.head)
+        return _estimate_full_ring(cfg, mesh, axis, state.union_hists, solver=solver)
+    return _estimate_subring(cfg, mesh, axis, w, state.regs, state.head, solver=solver)
 
 
 def estimate_ring_anytime(state: ShardedWindowArrayState) -> jnp.ndarray:

@@ -39,7 +39,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import estimators, key_directory, qsketch
+from . import estimation, estimators, key_directory, qsketch
 from .types import QSketchState, SketchArrayState, SketchConfig
 
 
@@ -92,16 +92,25 @@ def histograms(cfg: SketchConfig, state: SketchArrayState) -> jnp.ndarray:
     return jax.vmap(lambda r: estimators.histogram(cfg, r))(state.regs)
 
 
-def estimate_all(cfg: SketchConfig, state: SketchArrayState) -> jnp.ndarray:
-    """Ĉ for every sketch: one vmapped histogram-MLE, O(K·2^b) + bincount."""
-    return estimate_all_with_ci(cfg, state)[0]
+def estimate_all(
+    cfg: SketchConfig, state: SketchArrayState, *, solver: str = "newton"
+) -> jnp.ndarray:
+    """Ĉ for every sketch: one batched histogram-MLE, O(K·2^b) + bincount."""
+    return estimate_all_with_ci(cfg, state, solver=solver)[0]
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def estimate_all_with_ci(cfg: SketchConfig, state: SketchArrayState):
-    """(Ĉ[K], stddev[K], converged[K]) — the vmapped estimate_with_ci."""
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("solver",))
+def estimate_all_with_ci(
+    cfg: SketchConfig, state: SketchArrayState, *, solver: str = "newton"
+):
+    """(Ĉ[K], stddev[K], converged[K]) — the batched estimate_with_ci.
+
+    Thin shim over ``estimation.estimate_hists(kind="full")``; ``solver``
+    picks newton / lut (DESIGN.md §8.7). Unlike DynArray there is no
+    maintained histogram, so every solver pays the vmapped bincount.
+    """
     hists = histograms(cfg, state)
-    return jax.vmap(lambda h: estimators.qsketch_mle(cfg, h))(hists)
+    return estimation.estimate_hists_with_ci(cfg, hists, kind="full", solver=solver)
 
 
 def merge(a: SketchArrayState, b: SketchArrayState) -> SketchArrayState:

@@ -181,13 +181,13 @@ def rotate(cfg: SketchConfig, state: WindowArrayState) -> WindowArrayState:
     )
 
 
-def _chats_from_touched_hists(cfg: SketchConfig, hists) -> jnp.ndarray:
+def _chats_from_touched_hists(cfg: SketchConfig, hists, solver: str = "newton") -> jnp.ndarray:
     """Per-row MLE Ĉ from touched-register histograms (bin 0 pinned to 0,
     the stored convention): fill bin 0 with the untouched count and run the
     shared histogram MLE — bit-identical to walking the registers again,
     without the second O(K·m) histogram pass."""
     full = hists.at[:, 0].set(cfg.m - jnp.sum(hists, axis=1))
-    return dyn_array.estimate_mle_hists(cfg, full)
+    return dyn_array.estimate_mle_hists(cfg, full, solver=solver)
 
 
 def _window_slots(state: WindowArrayState, w: int) -> jnp.ndarray:
@@ -210,32 +210,36 @@ def _check_w(state: WindowArrayState, w: int) -> int:
     return w
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def _estimate_subring(cfg: SketchConfig, state: WindowArrayState, w: int):
-    return dyn_array.estimate_mle_rows(cfg, window_union_regs(state, w))
+@functools.partial(jax.jit, static_argnums=(0, 2), static_argnames=("solver",))
+def _estimate_subring(cfg: SketchConfig, state: WindowArrayState, w: int, *, solver: str = "newton"):
+    return dyn_array.estimate_mle_rows(cfg, window_union_regs(state, w), solver=solver)
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def _estimate_full_ring(cfg: SketchConfig, state: WindowArrayState):
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("solver",))
+def _estimate_full_ring(cfg: SketchConfig, state: WindowArrayState, *, solver: str = "newton"):
     """Cached path: the union histograms are maintained incrementally, so the
     full-ring read skips union + bincount and goes straight to the MLE."""
-    return _chats_from_touched_hists(cfg, state.union_hists)
+    return _chats_from_touched_hists(cfg, state.union_hists, solver=solver)
 
 
-def estimate_window(cfg: SketchConfig, state: WindowArrayState, w: int) -> jnp.ndarray:
+def estimate_window(
+    cfg: SketchConfig, state: WindowArrayState, w: int, *, solver: str = "newton"
+) -> jnp.ndarray:
     """Ĉ[K] over the last w <= E epochs (w static, host-side int).
 
-    Union-of-epochs registers -> vmapped histogram MLE. Bit-identical to
+    Union-of-epochs registers -> batched histogram MLE. Bit-identical to
     rebuilding the retained epochs from their element logs (registers are
     max-monoid, estimation is a pure function of the union histogram). The
     full-ring window reads the cached union histograms — same bits, no
     union/bincount pass. Epochs beyond ``filled`` hold r_min everywhere, so
     w > filled clamps harmlessly; untouched windows report Ĉ = 0.
+    ``solver`` picks newton / lut / fused (core/estimation.py; the full-ring
+    path is histogram-fed, so "fused" applies to sub-ring reads only).
     """
     w = _check_w(state, w)
     if w == state.regs.shape[0]:
-        return _estimate_full_ring(cfg, state)
-    return _estimate_subring(cfg, state, w)
+        return _estimate_full_ring(cfg, state, solver=solver)
+    return _estimate_subring(cfg, state, w, solver=solver)
 
 
 def estimate_ring_anytime(state: WindowArrayState) -> jnp.ndarray:
@@ -246,14 +250,18 @@ def estimate_ring_anytime(state: WindowArrayState) -> jnp.ndarray:
     return state.union_chats
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def estimate_epochs_all(cfg: SketchConfig, state: WindowArrayState) -> jnp.ndarray:
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("solver",))
+def estimate_epochs_all(
+    cfg: SketchConfig, state: WindowArrayState, *, solver: str = "newton"
+) -> jnp.ndarray:
     """Per-epoch MLE re-estimates, Ĉ[E, K] — the naive alternative the
-    windowed read replaces (E independent Newton passes; benchmarked in
+    windowed read replaces (E independent solve passes; benchmarked in
     benchmarks/window_array.py). Per-epoch anytime reads are ``state.chats``.
     """
     e, k, m = state.regs.shape
-    return dyn_array.estimate_mle_rows(cfg, state.regs.reshape(e * k, m)).reshape(e, k)
+    return dyn_array.estimate_mle_rows(
+        cfg, state.regs.reshape(e * k, m), solver=solver
+    ).reshape(e, k)
 
 
 def update_tenants(

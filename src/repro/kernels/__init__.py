@@ -20,6 +20,7 @@ auto-selects based on the backend.
 
 from . import (
     dyn_array_update,
+    estimate,
     ops,
     qdyn_qr,
     qsketch_update,
@@ -30,6 +31,7 @@ from . import (
 
 __all__ = [
     "ops",
+    "estimate",
     "ref",
     "qsketch_update",
     "qdyn_qr",

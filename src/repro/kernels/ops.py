@@ -43,6 +43,7 @@ from repro.core.types import (
 
 from . import (
     dyn_array_update,
+    estimate,
     qdyn_qr,
     qsketch_update,
     sketch_array_update,
@@ -289,6 +290,7 @@ def window_union_estimate_op(
     state: WindowArrayState,
     w: int,
     *,
+    solver: str = "newton",
     block_k: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
@@ -330,7 +332,53 @@ def window_union_estimate_op(
         block_k=bk,
         interpret=interpret,
     )
-    return dyn_array.estimate_mle_hists(cfg, hists[:k, : cfg.num_bins])
+    return dyn_array.estimate_mle_hists(cfg, hists[:k, : cfg.num_bins], solver=solver)
+
+
+def estimate_rows_op(
+    cfg: SketchConfig,
+    regs,
+    *,
+    kind: str = "routed",
+    block_k: int | None = None,
+    interpret: bool | None = None,
+):
+    """Kernel-backed fused bincount + MLE over register rows — the
+    ``solver="fused"`` backend of ``core.estimation.estimate_rows(_with_ci)``.
+
+    One Pallas pass (``kernels/estimate.py``) streams the int8 rows through
+    VMEM and emits (Ĉ[K], stddev[K], converged[K]) without materializing the
+    ``[K, 2^b]`` histogram block in HBM. The kind convention matches the
+    estimation layer: ``"full"`` returns the MLE, ``"routed"`` scales ×m with
+    untouched rows (all registers at r_min) pinned to exactly 0.0 — inside
+    the kernel that guard coincides with the degenerate-low fallback.
+    """
+    from repro.core import estimation
+
+    estimation._check_kind(kind)
+    interpret = _interpret_default() if interpret is None else interpret
+    k, m = regs.shape
+
+    bk = block_k or min(estimate.DEFAULT_BLOCK_K, _round_up(k, 8))
+    kp, mp = _round_up(k, bk), _round_up(m, 128)
+    nbp = _round_up(cfg.num_bins, 128)
+
+    regs_p = jnp.pad(
+        regs, ((0, kp - k), (0, mp - m)), constant_values=cfg.r_min
+    )
+    chat, std, conv = estimate.estimate_rows_padded(
+        regs_p,
+        m=m,
+        nb_padded=nbp,
+        r_min=cfg.r_min,
+        top_bin=cfg.top_bin,
+        block_k=bk,
+        interpret=interpret,
+    )
+    chat, std, conv = chat[:k, 0], std[:k, 0], conv[:k, 0] > 0
+    if kind == "routed":
+        return chat * cfg.m, std * cfg.m, conv
+    return chat, std, conv
 
 
 def sharded_dyn_array_update_op(
@@ -392,6 +440,7 @@ def sharded_window_union_estimate_op(
     w: int,
     *,
     axis: str = sharding.AXIS,
+    solver: str = "newton",
     block_k: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
@@ -414,7 +463,7 @@ def sharded_window_union_estimate_op(
             head=head, filled=jnp.int32(0), epoch_id=jnp.int32(0),
         )
         return window_union_estimate_op(
-            cfg, st, w, block_k=block_k, interpret=interpret
+            cfg, st, w, solver=solver, block_k=block_k, interpret=interpret
         )
 
     return sharding.shard_map_rows(

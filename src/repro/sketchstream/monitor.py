@@ -80,6 +80,7 @@ import jax.numpy as jnp
 from repro.core import (
     SketchConfig,
     dyn_array,
+    estimation,
     estimators,
     key_directory,
     qsketch,
@@ -138,10 +139,10 @@ def update(cfg: SketchConfig, state: MonitorState, ids, weights=None, mask=None)
 
 
 def estimate(cfg: SketchConfig, state: MonitorState) -> jnp.ndarray:
-    """Weighted cardinality via the O(2^b) histogram MLE."""
+    """Weighted cardinality via the O(2^b) histogram MLE
+    (``estimation.estimate_hist``, the in-step monitor's full-kind solve)."""
     hist = estimators.histogram(cfg, state.regs)
-    chat, _, _ = estimators.qsketch_mle(cfg, hist)
-    return chat
+    return estimation.estimate_hist(cfg, hist, kind="full")
 
 
 def merge(cfg: SketchConfig, a: MonitorState, b: MonitorState) -> MonitorState:

@@ -1,0 +1,19 @@
+"""Shared pytest fixtures.
+
+The suite compiles several hundred distinct XLA programs (every container
+x solver x mesh combination is jitted). On the CPU backend that much
+accumulated compile state has crashed the compiler mid-suite — a native
+segfault in a late module's first `pjit` cache miss that no single module
+reproduces in isolation. Dropping the caches at module boundaries keeps
+each module's compile session small; the only cost is re-tracing shared
+helpers, which is noise next to the solves themselves.
+"""
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _fresh_compile_caches_per_module():
+    yield
+    jax.clear_caches()

@@ -1,0 +1,376 @@
+"""Unified estimation layer (core/estimation.py) tests.
+
+Three contracts (DESIGN.md §8.7):
+
+1. **Bit-identity** — ``solver="newton"`` must reproduce the pre-refactor
+   per-container solves *exactly*. The goldens below were captured from the
+   repo before any caller was re-pointed at the estimation layer (the same
+   stream recipe each time: m=64, b=8, K=16, B=4096, rng(7)); every container
+   — including the three sharded fronts on the 8-device host mesh — must hit
+   them to the last bit.
+
+2. **Tolerance** — ``solver="lut"`` and the fused Pallas kernel agree with
+   the float64 reference (``estimators.mle_numpy``) within the documented
+   combined tolerance |Δ| <= ATOL_FLOOR + LUT_RTOL·|ref| across an (m, b)
+   grid. The absolute floor covers collapse rows (bin-0 mass next to
+   high-bin mass drives the f32 *and* f64 MLE to ~0 — seed behaviour, not a
+   solver artifact).
+
+3. **Guard dedup** — the untouched-row Ĉ=0 guard now lives in ONE place
+   (``estimation._routed_chat`` / the in-solver degenerate-low path);
+   every routed container must still report exact 0.0 for untouched rows.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SketchConfig,
+    dyn_array,
+    estimation,
+    estimators,
+    qsketch,
+    qsketch_dyn,
+    sharded_array,
+    sharded_dyn_array,
+    sharded_window_array,
+    sketch_array,
+    window_array,
+)
+from repro.kernels import ops
+from repro.launch.mesh import make_sketch_mesh
+
+CFG = SketchConfig(m=64, b=8)
+K = 16
+B = 4096
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_sketch_mesh()  # 8 shards under scripts/test.sh
+
+
+@pytest.fixture(scope="module")
+def stream():
+    rng = np.random.default_rng(7)
+    ids = jnp.asarray(rng.integers(0, 1 << 62, size=B, dtype=np.uint64))
+    weights = jnp.asarray((rng.gamma(2.0, 2.0, size=B) + 0.05).astype(np.float32))
+    keys = jnp.asarray(rng.integers(0, K, size=B).astype(np.int32))
+    return ids, weights, keys
+
+
+# ---------------------------------------------------------------------------
+# pre-refactor goldens (newton bit-identity)
+# ---------------------------------------------------------------------------
+
+GOLD_QSKETCH_CHAT = 17106.220703125
+GOLD_QSKETCH_STD = 2218.718505859375
+
+GOLD_SA_CHATS = [
+    935.5822143554688, 864.5228271484375, 980.6492919921875, 1125.72265625,
+    1092.1175537109375, 1298.460693359375, 930.1397705078125, 800.5869750976562,
+    1060.95458984375, 1137.4371337890625, 1325.7677001953125, 1363.4495849609375,
+    938.951904296875, 1084.2130126953125, 1186.6209716796875, 1148.4674072265625,
+]
+GOLD_SA_STDS = [
+    120.88327026367188, 111.893310546875, 127.64154052734375, 145.25457763671875,
+    141.06802368164062, 167.89527893066406, 121.20880889892578, 103.5263442993164,
+    137.50711059570312, 146.7041015625, 171.20982360839844, 176.52880859375,
+    122.13787078857422, 140.13552856445312, 154.2786407470703, 148.9996337890625,
+]
+
+# DynArray routes each element to ONE register row (m-way split per key), so
+# per-key MLEs are tiny/collapsed at this K·m vs B ratio — that is seed
+# behaviour the refactor must preserve bit-for-bit, collapse values included.
+GOLD_DYN_MLE = [
+    4.0000000126843074e-30, 1.600000005073723e-29, 2.5600000081179567e-28,
+    1.600000005073723e-29, 2.5600000081179567e-28, 1080.39111328125,
+    697.1915283203125, 2.5600000081179567e-28, 2.5600000081179567e-28,
+    398.16497802734375, 784.46435546875, 2.5600000081179567e-28,
+    2.5600000081179567e-28, 1.600000005073723e-29, 1051.5003662109375,
+    5.1200000162359135e-28,
+]
+
+GOLD_QDYN_MLE = 18447.494140625
+GOLD_QDYN_MERGE = 18447.494140625
+
+GOLD_WIN_SUB2 = [
+    7.812496351354192e-33, 1.1102233481252159e-36, 5.000000015855384e-31,
+    1.953125924548471e-33, 1.250000003963846e-31, 7.812496351354192e-33,
+    1.250000003963846e-31, 7.812496351354192e-33, 7.812496351354192e-33,
+    6.25000001981923e-32, 1.250000003963846e-31, 7.812496351354192e-33,
+    1.953125924548471e-33, 7.812496351354192e-33, 2.0000000063421537e-30,
+    1.953125924548471e-33,
+]
+GOLD_WIN_EPOCHS_HEAD = [
+    0.0, 2.2204477724476523e-36, 0.0, 6.115608370297246e-36,
+    0.0, 1.1102233481252159e-36, 0.0, 0.0,
+]
+
+
+def _states(stream):
+    ids, weights, keys = stream
+    st = qsketch.update(CFG, qsketch.init(CFG), ids, weights)
+    sa = sketch_array.update(CFG, sketch_array.init(CFG, K), keys, ids, weights)
+    da = dyn_array.update_batch(CFG, dyn_array.init(CFG, K), keys, ids, weights)
+    wa = window_array.init(CFG, K, 4)
+    for epoch in range(4):
+        lo, hi = epoch * (B // 4), (epoch + 1) * (B // 4)
+        wa = window_array.update_batch(
+            CFG, wa, keys[lo:hi], ids[lo:hi], weights[lo:hi]
+        )
+        if epoch < 3:
+            wa = window_array.rotate(CFG, wa)
+    return st, sa, da, wa
+
+
+@pytest.fixture(scope="module")
+def states(stream):
+    return _states(stream)
+
+
+def test_newton_bit_identical_qsketch(states):
+    st = states[0]
+    chat, std, conv = qsketch.estimate_with_ci(CFG, st)
+    assert float(chat) == GOLD_QSKETCH_CHAT
+    assert float(std) == GOLD_QSKETCH_STD
+    assert bool(conv)
+    assert float(qsketch.estimate(CFG, st)) == GOLD_QSKETCH_CHAT
+
+
+def test_newton_bit_identical_sketch_array(states):
+    sa = states[1]
+    chats, stds, convs = sketch_array.estimate_all_with_ci(CFG, sa)
+    assert np.asarray(chats).tolist() == GOLD_SA_CHATS
+    assert np.asarray(stds).tolist() == GOLD_SA_STDS
+    assert np.asarray(sketch_array.estimate_all(CFG, sa)).tolist() == GOLD_SA_CHATS
+
+
+def test_newton_bit_identical_dyn_array(states):
+    da = states[2]
+    assert np.asarray(dyn_array.estimate_mle_all(CFG, da)).tolist() == GOLD_DYN_MLE
+
+
+def test_newton_bit_identical_qsketch_dyn(stream):
+    ids, weights, _ = stream
+    qd = qsketch_dyn.update_batch(CFG, qsketch_dyn.init(CFG), ids, weights)
+    assert float(qsketch_dyn.estimate_mle(CFG, qd)) == GOLD_QDYN_MLE
+    half_a = qsketch_dyn.update_batch(CFG, qsketch_dyn.init(CFG), ids[:2048], weights[:2048])
+    half_b = qsketch_dyn.update_batch(CFG, qsketch_dyn.init(CFG), ids[2048:], weights[2048:])
+    merged = qsketch_dyn.merge(CFG, half_a, half_b)
+    assert float(merged.chat) == GOLD_QDYN_MERGE
+
+
+def test_newton_bit_identical_window_array(states):
+    wa = states[3]
+    full = window_array.estimate_window(CFG, wa, 4)
+    assert np.asarray(full).tolist() == GOLD_DYN_MLE  # full ring == dyn union
+    sub = window_array.estimate_window(CFG, wa, 2)
+    assert np.asarray(sub).tolist() == GOLD_WIN_SUB2
+    ep = np.asarray(window_array.estimate_epochs_all(CFG, wa)).reshape(-1)
+    assert ep[:8].tolist() == GOLD_WIN_EPOCHS_HEAD
+
+
+def test_newton_bit_identical_sharded_fronts(states, mesh):
+    _, sa, da, wa = states
+    sh = sharded_array.from_array(sa, mesh)
+    assert np.asarray(sharded_array.estimate_all(CFG, mesh, sh)).tolist() == GOLD_SA_CHATS
+    sd = sharded_dyn_array.from_array(da, mesh)
+    assert np.asarray(sharded_dyn_array.estimate_mle_all(CFG, mesh, sd)).tolist() == GOLD_DYN_MLE
+    sw = sharded_window_array.from_array(wa, mesh)
+    assert (
+        np.asarray(sharded_window_array.estimate_window(CFG, mesh, sw, 4)).tolist()
+        == GOLD_DYN_MLE
+    )
+    assert (
+        np.asarray(sharded_window_array.estimate_window(CFG, mesh, sw, 2)).tolist()
+        == GOLD_WIN_SUB2
+    )
+
+
+def test_newton_matches_vmapped_reference_form(states):
+    """estimate_hists(kind="full") IS the vmapped estimators.qsketch_mle."""
+    sa = states[1]
+    hists = sketch_array.histograms(CFG, sa)
+    got = estimation.estimate_hists(CFG, hists, kind="full", solver="newton")
+    ref = jax.vmap(lambda h: estimators.qsketch_mle(CFG, h)[0])(hists)
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# lut / fused vs the float64 reference (tolerance contract)
+# ---------------------------------------------------------------------------
+
+
+def _within_tol(got, ref):
+    got = np.asarray(got, np.float64)
+    ref = np.asarray(ref, np.float64)
+    return np.abs(got - ref) <= estimation.ATOL_FLOOR + estimation.LUT_RTOL * np.abs(ref)
+
+
+def _grid_regs(cfg, n_rows, seed):
+    """n_rows sketches at wildly different scales (weights 2^-8 .. 2^20)."""
+    rng = np.random.default_rng(seed)
+    rows = []
+    for i in range(n_rows):
+        n = int(rng.integers(4, 2000))
+        ids = jnp.asarray(rng.integers(0, 1 << 62, size=n, dtype=np.uint64))
+        scale = float(2.0 ** rng.uniform(-8, 20))
+        w = jnp.asarray((rng.gamma(2.0, 2.0, size=n) * scale + 1e-6).astype(np.float32))
+        rows.append(qsketch.update(cfg, qsketch.init(cfg), ids, w).regs)
+    return jnp.stack(rows)
+
+
+@pytest.mark.parametrize("m,b", [(16, 4), (64, 6), (64, 8), (256, 8)])
+def test_lut_within_tolerance_of_f64_reference(m, b):
+    cfg = SketchConfig(m=m, b=b)
+    regs = _grid_regs(cfg, 12, seed=100 + m + b)
+    hists = jax.vmap(lambda r: estimators.histogram(cfg, r))(regs)
+    got = estimation.estimate_hists(cfg, hists, kind="full", solver="lut")
+    ref = np.array([estimators.mle_numpy(cfg, np.asarray(r)) for r in regs])
+    ok = _within_tol(got, ref)
+    assert ok.all(), f"lut out of tolerance: got={np.asarray(got)[~ok]} ref={ref[~ok]}"
+
+
+@pytest.mark.parametrize("m,b", [(16, 4), (64, 8), (256, 8)])
+def test_fused_within_tolerance_of_f64_reference(m, b):
+    cfg = SketchConfig(m=m, b=b)
+    regs = _grid_regs(cfg, 10, seed=200 + m + b)
+    chat, std, conv = ops.estimate_rows_op(cfg, regs, kind="full")
+    ref = np.array([estimators.mle_numpy(cfg, np.asarray(r)) for r in regs])
+    ok = _within_tol(chat, ref)
+    assert ok.all(), f"fused out of tolerance: got={np.asarray(chat)[~ok]} ref={ref[~ok]}"
+    assert np.asarray(std).shape == (10,)
+    assert np.asarray(conv).dtype == np.bool_
+
+
+def test_fused_conv_matches_newton(states):
+    sa = states[1]
+    _, _, conv_n = sketch_array.estimate_all_with_ci(CFG, sa)
+    _, _, conv_f = ops.estimate_rows_op(CFG, sa.regs, kind="full")
+    assert np.array_equal(np.asarray(conv_n), np.asarray(conv_f))
+
+
+def test_lut_chunked_matches_unchunked():
+    """K > _LUT_CHUNK goes through lax.map with per-chunk grids + edge pad;
+    each row's answer must still meet tolerance vs its own unchunked solve."""
+    cfg = SketchConfig(m=16, b=6)
+    k = estimation._LUT_CHUNK + 37  # forces the chunked path with a ragged tail
+    rng = np.random.default_rng(5)
+    # Synthetic histograms: random register draws per row at varied scales.
+    regs = jnp.asarray(
+        rng.integers(cfg.r_min, cfg.r_max + 1, size=(k, cfg.m), dtype=np.int64).astype(np.int8)
+    )
+    hists = jax.vmap(lambda r: estimators.histogram(cfg, r))(regs)
+    got = estimation.estimate_hists(cfg, hists, kind="full", solver="lut")
+    sample = np.asarray([0, 1, 4095, 8191, 8192, k - 1])
+    ref = estimation.estimate_hists(cfg, hists[sample], kind="full", solver="lut")
+    # Tolerance (not equality): the chunk a row lands in sets its grid anchor.
+    combined = np.abs(np.asarray(got)[sample] - np.asarray(ref))
+    assert (
+        combined <= estimation.ATOL_FLOOR + estimation.LUT_RTOL * np.abs(np.asarray(ref))
+    ).all()
+    assert got.shape == (k,)
+
+
+# ---------------------------------------------------------------------------
+# lut through the containers (tolerance vs their newton answers)
+# ---------------------------------------------------------------------------
+
+
+def test_lut_through_containers(states, mesh):
+    _, sa, da, wa = states
+    newton = np.asarray(sketch_array.estimate_all(CFG, sa), np.float64)
+    lut = np.asarray(sketch_array.estimate_all(CFG, sa, solver="lut"), np.float64)
+    assert _within_tol(lut, newton).all()
+
+    dyn_newton = np.asarray(dyn_array.estimate_mle_all(CFG, da), np.float64)
+    dyn_lut = np.asarray(dyn_array.estimate_mle_all(CFG, da, solver="lut"), np.float64)
+    assert _within_tol(dyn_lut, dyn_newton).all()
+
+    win_newton = np.asarray(window_array.estimate_window(CFG, wa, 2), np.float64)
+    win_lut = np.asarray(window_array.estimate_window(CFG, wa, 2, solver="lut"), np.float64)
+    assert _within_tol(win_lut, win_newton).all()
+
+    # Sharded lut: per-shard grids -> tolerance-level agreement with the host.
+    sh = sharded_array.from_array(sa, mesh)
+    sh_lut = np.asarray(sharded_array.estimate_all(CFG, mesh, sh, solver="lut"), np.float64)
+    assert _within_tol(sh_lut, newton).all()
+    sd = sharded_dyn_array.from_array(da, mesh)
+    sd_lut = np.asarray(
+        sharded_dyn_array.estimate_mle_all(CFG, mesh, sd, solver="lut"), np.float64
+    )
+    assert _within_tol(sd_lut, dyn_newton).all()
+    sw = sharded_window_array.from_array(wa, mesh)
+    sw_lut = np.asarray(
+        sharded_window_array.estimate_window(CFG, mesh, sw, 2, solver="lut"), np.float64
+    )
+    assert _within_tol(sw_lut, win_newton).all()
+
+
+# ---------------------------------------------------------------------------
+# untouched-row guard (the deduplicated Ĉ=0 contract)
+# ---------------------------------------------------------------------------
+
+
+def test_untouched_rows_exact_zero_everywhere(stream):
+    ids, weights, keys = stream
+    sel = np.asarray(keys) < 13  # rows 13..15 never touched
+    ids_s, w_s, k_s = ids[sel], weights[sel], keys[sel]
+
+    da = dyn_array.update_batch(CFG, dyn_array.init(CFG, K), k_s, ids_s, w_s)
+    mle = np.asarray(dyn_array.estimate_mle_all(CFG, da))
+    assert (mle[13:] == 0.0).all()
+    mle_lut = np.asarray(dyn_array.estimate_mle_all(CFG, da, solver="lut"))
+    assert (mle_lut[13:] == 0.0).all()
+
+    # Straight through the layer: routed kind zeroes all-r_min rows exactly.
+    regs = jnp.full((3, CFG.m), CFG.r_min, dtype=jnp.int8)
+    for solver in ("newton", "lut", "fused"):
+        if solver == "fused":
+            chat = ops.estimate_rows_op(CFG, regs, kind="routed")[0]
+        else:
+            chat = estimation.estimate_rows(CFG, regs, kind="routed", solver=solver)
+        assert (np.asarray(chat) == 0.0).all(), solver
+
+    # Window + qsketch_dyn merge keep the guard through their union paths.
+    wa = window_array.init(CFG, K, 4)
+    wa = window_array.update_batch(CFG, wa, k_s, ids_s, w_s)
+    win = np.asarray(window_array.estimate_window(CFG, wa, 4))
+    assert (win[13:] == 0.0).all()
+    empty = qsketch_dyn.init(CFG)
+    merged = qsketch_dyn.merge(CFG, empty, empty)
+    assert float(merged.chat) == 0.0
+
+
+def test_routed_scaling_vs_full():
+    """kind="routed" is m * the MLE of the routed likelihood (nonzero rows)."""
+    cfg = SketchConfig(m=16, b=6)
+    rng = np.random.default_rng(11)
+    regs = jnp.asarray(
+        rng.integers(cfg.r_min + 1, cfg.r_max, size=(4, cfg.m), dtype=np.int64).astype(np.int8)
+    )
+    hists = jax.vmap(lambda r: estimators.histogram(cfg, r))(regs)
+    full = estimation.estimate_hists(cfg, hists, kind="full")
+    routed = estimation.estimate_hists(cfg, hists, kind="routed")
+    assert np.allclose(np.asarray(routed), np.asarray(full) * cfg.m, rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# dispatch validation
+# ---------------------------------------------------------------------------
+
+
+def test_bad_solver_and_kind_raise(states):
+    sa = states[1]
+    hists = sketch_array.histograms(CFG, sa)
+    with pytest.raises(ValueError, match="solver"):
+        estimation.estimate_hists(CFG, hists, solver="bogus")
+    with pytest.raises(ValueError, match="kind"):
+        estimation.estimate_hists(CFG, hists, kind="bogus")
+    with pytest.raises(ValueError, match="fused"):
+        estimation.estimate_hists(CFG, hists, solver="fused")
+    with pytest.raises(ValueError, match="solver"):
+        estimation.estimate_rows(CFG, sa.regs, solver="bogus")
