@@ -1,0 +1,216 @@
+"""Headline figure: sustained ingest→estimate Mops, pipelined vs synchronous.
+
+The ROADMAP's heavy-traffic question: how many stream elements per second
+does ONE host sustain end-to-end — staging, device update, and a final
+estimate read — when traffic arrives as an unbounded Zipf-bursty stream
+instead of pre-built batches? Two methods per (K, batch-size) cell:
+
+* ``sync``      — the repo's historical mode: non-donated
+                  ``dyn_array.update_batch`` with the host blocking on every
+                  micro-batch (each batch also allocates a fresh
+                  int8[K, m] + int32[K, 2^b] state copy).
+* ``pipelined`` — ``sketchstream/ingest.py``: double-buffered staging,
+                  donated in-place updates, async dispatch with a bounded
+                  retire queue (policy="block").
+
+Both paths consume the identical element stream and produce bit-identical
+sketches (asserted per cell), so the ratio row (method "speedup") is pure
+pipeline/donation win: at paper-scale K the non-donated copy traffic
+dominates and the pipelined path must be strictly faster (an acceptance
+criterion checked by scripts/check_bench_schema.py readers and the PR
+driver). A second figure ("ingest_window") runs the WindowArray under
+rotation load through the same harness. Queue telemetry (stall counts/
+seconds, high-water in-flight depth, drops) rides on the pipelined rows.
+
+Results merge cumulatively into experiments/bench/ingest.json keyed by
+(k, bsz) cells (common.merge_save), schema-checked in tier-2.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import SketchConfig, dyn_array, window_array
+from repro.sketchstream import ingest
+
+from . import common
+
+_M, _B = 128, 8
+_CHUNK = 4096  # host arrival granularity of the load generator
+
+
+def zipf_bursty_chunks(n_keys, n_elements, *, s=1.2, burst_every=4,
+                       burst_frac=0.5, n_hot=4, seed=0):
+    """Zipf-bursty load: arrival chunks of (keys, ids, weights).
+
+    Key popularity is Zipf(s) over the K slots (heavy skew, as in the
+    paper's real streams); every ``burst_every``-th chunk is a BURST —
+    ``burst_frac`` of its elements collapse onto ``n_hot`` random hot keys,
+    the flash-crowd shape that stresses scatter contention and (in the
+    pipelined path) queue depth. Ids draw from a pool of ~n/2 so duplicate
+    suppression does real work; weights are gamma (heavy-tailed flows).
+    """
+    rng = np.random.default_rng(seed)
+    p = 1.0 / np.arange(1, n_keys + 1, dtype=np.float64) ** s
+    cdf = np.cumsum(p / p.sum())
+    pool = rng.integers(0, 2**32, max(n_elements // 2, 16), dtype=np.uint32)
+    chunks = []
+    for ci in range(-(-n_elements // _CHUNK)):
+        b = min(_CHUNK, n_elements - ci * _CHUNK)
+        keys = np.searchsorted(cdf, rng.random(b)).astype(np.int32)
+        if burst_every and ci % burst_every == burst_every - 1:
+            hot = rng.integers(0, n_keys, n_hot).astype(np.int32)
+            nb = int(b * burst_frac)
+            keys[:nb] = hot[rng.integers(0, n_hot, nb)]
+        ids = pool[rng.integers(0, len(pool), b)]
+        w = (rng.gamma(1.0, 2.0, b) + 1e-4).astype(np.float32)
+        chunks.append((keys, ids, w))
+    return chunks
+
+
+def _flat(chunks):
+    return tuple(np.concatenate([c[i] for c in chunks]) for i in range(3))
+
+
+def _run_sync(cfg, k, keys, ids, w, bsz):
+    """Synchronous baseline: blocking non-donated update per micro-batch,
+    then the estimate read. Returns (elapsed_s, chats)."""
+    state = dyn_array.init(cfg, k)
+    t0 = time.perf_counter()
+    for i in range(0, len(keys), bsz):
+        state = dyn_array.update_batch(
+            cfg, state,
+            jnp.asarray(keys[i : i + bsz]), jnp.asarray(ids[i : i + bsz]),
+            jnp.asarray(w[i : i + bsz]),
+        )
+        jax.block_until_ready(state.chats)
+    est = np.asarray(dyn_array.estimate_all(state))
+    return time.perf_counter() - t0, est
+
+
+def _run_pipelined(cfg, k, chunks, bsz, queue_depth=4):
+    """Pipelined ingest: donated updates, async retire queue, one barrier,
+    then the estimate read. Returns (elapsed_s, chats, metrics)."""
+    icfg = ingest.IngestConfig(batch_size=bsz, queue_depth=queue_depth)
+    pipe = ingest.dyn_pipeline(cfg, dyn_array.init(cfg, k), icfg)
+    t0 = time.perf_counter()
+    for keys, ids, w in chunks:
+        pipe.push(keys, ids, w)
+    state = pipe.result()
+    est = np.asarray(dyn_array.estimate_all(state))
+    return time.perf_counter() - t0, est, pipe.metrics()
+
+
+def run_sustained(quick=True):
+    ks = [2**10, 2**14] if quick else [2**14, 2**17, 2**20]
+    bszs = [4096, 16384] if quick else [16384, 65536]
+    n_batches = 6 if quick else 12
+    rows, swept = [], []
+    for k in ks:
+        cfg = SketchConfig(m=_M, b=_B, seed=7)
+        for bsz in bszs:
+            n = n_batches * bsz
+            chunks = zipf_bursty_chunks(k, n, seed=k % 1009 + bsz)
+            keys, ids, w = _flat(chunks)
+            # Warm every executable (sync update, pipelined update) on a
+            # fresh state of the same shapes so compiles stay out of the
+            # timed window.
+            _run_sync(cfg, k, keys[:bsz], ids[:bsz], w[:bsz], bsz)
+            _run_pipelined(cfg, k, chunks[: -(-bsz // _CHUNK)], bsz)
+
+            t_sync, est_sync = _run_sync(cfg, k, keys, ids, w, bsz)
+            t_pipe, est_pipe, met = _run_pipelined(cfg, k, chunks, bsz)
+            if not np.array_equal(est_sync, est_pipe):
+                raise AssertionError(
+                    f"ingest bench: pipelined estimates diverge from sync at "
+                    f"k={k} bsz={bsz}"
+                )
+            mops_s, mops_p = n / t_sync / 1e6, n / t_pipe / 1e6
+            rows.append({"figure": "ingest_sustained", "method": "sync",
+                         "k": k, "bsz": bsz, "sustained_mops": mops_s})
+            rows.append({"figure": "ingest_sustained", "method": "pipelined",
+                         "k": k, "bsz": bsz, "sustained_mops": mops_p,
+                         "stalls": met["ingest_stalls"],
+                         "stall_s": round(met["ingest_stall_s"], 4),
+                         "max_in_flight": met["ingest_max_in_flight"],
+                         "dropped": met["ingest_elements_dropped"]})
+            rows.append({"figure": "ingest_sustained", "method": "speedup",
+                         "k": k, "bsz": bsz, "x": mops_p / mops_s})
+            swept.append((k, bsz))
+            common.csv_row(
+                f"ingest/k{k}/bsz{bsz}", 1.0 / mops_p,
+                f"sustained_mops sync={mops_s:.3f} pipelined={mops_p:.3f} "
+                f"x={mops_p/mops_s:.2f} stalls={met['ingest_stalls']} "
+                f"stall_s={met['ingest_stall_s']:.3f}",
+            )
+    return rows, swept
+
+
+def run_window(quick=True):
+    """WindowArray under rotation load: same stream, rotate every 2 batches
+    (the retire barrier on the pipelined path). One cell — the figure shows
+    pipelining survives rotation barriers, not a second sweep."""
+    k, bsz, e = 2**12, 8192, 4
+    n_batches = 6 if quick else 12
+    cfg = SketchConfig(m=_M, b=_B, seed=9)
+    chunks = zipf_bursty_chunks(k, n_batches * bsz, seed=5)
+    keys, ids, w = _flat(chunks)
+    n = len(keys)
+
+    def sync_run():
+        st = window_array.init(cfg, k, e)
+        t0 = time.perf_counter()
+        nb = 0
+        for i in range(0, n, bsz):
+            st = window_array.update_batch(
+                cfg, st, jnp.asarray(keys[i : i + bsz]),
+                jnp.asarray(ids[i : i + bsz]), jnp.asarray(w[i : i + bsz]),
+            )
+            jax.block_until_ready(st.union_chats)
+            nb += 1
+            if nb % 2 == 0:
+                st = window_array.rotate(cfg, st)
+                jax.block_until_ready(st.union_chats)
+        return time.perf_counter() - t0, np.asarray(st.union_chats)
+
+    def pipe_run():
+        icfg = ingest.IngestConfig(batch_size=bsz, queue_depth=4)
+        pipe = ingest.window_pipeline(cfg, window_array.init(cfg, k, e), icfg)
+        t0 = time.perf_counter()
+        nb = 0
+        for keys_c, ids_c, w_c in chunks:
+            pipe.push(keys_c, ids_c, w_c)
+            nb = pipe.stats.batches
+            if nb and nb % 2 == 0 and pipe.stats.rotations < nb // 2:
+                pipe.rotate()
+        st = pipe.result()
+        return time.perf_counter() - t0, np.asarray(st.union_chats)
+
+    sync_run(); pipe_run()  # warm compiles
+    t_s, est_s = sync_run()
+    t_p, est_p = pipe_run()
+    if not np.array_equal(est_s, est_p):
+        raise AssertionError("ingest window bench: pipelined diverges from sync")
+    rows = [
+        {"figure": "ingest_window", "method": "sync", "k": k, "bsz": bsz,
+         "e": e, "sustained_mops": n / t_s / 1e6},
+        {"figure": "ingest_window", "method": "pipelined", "k": k, "bsz": bsz,
+         "e": e, "sustained_mops": n / t_p / 1e6},
+    ]
+    common.csv_row(
+        f"ingest_window/k{k}", t_p / max(n, 1) * 1e6,
+        f"sustained_mops sync={n/t_s/1e6:.3f} pipelined={n/t_p/1e6:.3f} "
+        f"(rotations as retire barriers)",
+    )
+    return rows, [(k, bsz)]
+
+
+def run(quick=True):
+    r1, s1 = run_sustained(quick)
+    r2, s2 = run_window(quick)
+    common.merge_save("ingest", r1 + r2, s1 + s2, sweep_keys=("k", "bsz"))
+    return r1 + r2

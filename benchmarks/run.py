@@ -26,6 +26,7 @@ SMOKE_SUITES = (
     "estimation",
     "window_array",
     "window_array_sharded",
+    "ingest",
 )
 
 
@@ -44,6 +45,7 @@ def main() -> None:
         batch_bias,
         dyn_array,
         estimation,
+        ingest,
         kernels,
         netflow,
         register_size,
@@ -66,6 +68,7 @@ def main() -> None:
         "dyn_array_sharded": dyn_array.run_sharded,  # sharded Dyn K sweep
         "window_array": window_array.run,  # sliding-window reads vs per-epoch Newton
         "window_array_sharded": window_array.run_sharded,  # sharded ring (K, E) sweep
+        "ingest": ingest.run,  # sustained_mops headline: pipelined vs sync
     }
     only = [s for s in args.only.split(",") if s]
     names = only or (list(SMOKE_SUITES) if args.smoke else list(suite))

@@ -32,10 +32,11 @@ CUMULATIVE = (
     "dyn_array.json",
     "dyn_array_sharded.json",
     "estimation.json",
+    "ingest.json",
     "window_array.json",
     "window_array_sharded.json",
 )
-PAYLOAD_KEYS = ("mops", "ms", "x", "us")
+PAYLOAD_KEYS = ("mops", "ms", "x", "us", "sustained_mops")
 
 
 def check_rows(name: str, rows) -> list[str]:
@@ -54,11 +55,18 @@ def check_rows(name: str, rows) -> list[str]:
         if "k" in r and not isinstance(r["k"], int):
             errors.append(f"{name}[{i}]: non-integer sweep key 'k': {r}")
         groups.setdefault(
-            (r.get("figure"), r.get("method"), r.get("e")), []
+            # "e" splits the window-suite ring sweeps; "bsz" splits the
+            # ingest batch-size sweep — within each group the k axis must
+            # stay unique + monotone.
+            (r.get("figure"), r.get("method"), r.get("e"), r.get("bsz")), []
         ).append(r)
-    for (figure, method, e), rs in groups.items():
+    for (figure, method, e, bsz), rs in groups.items():
         ks = [r["k"] for r in rs if "k" in r]
-        tag = f"{name}:{figure}/{method}" + (f"/e={e}" if e is not None else "")
+        tag = (
+            f"{name}:{figure}/{method}"
+            + (f"/e={e}" if e is not None else "")
+            + (f"/bsz={bsz}" if bsz is not None else "")
+        )
         if len(ks) != len(set(ks)):
             dupes = sorted({k for k in ks if ks.count(k) > 1})
             errors.append(f"{tag}: duplicate k cells {dupes} (broken cumulative merge)")

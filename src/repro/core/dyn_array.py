@@ -36,6 +36,7 @@ the per-key histogram MLE, mirroring ``qsketch_dyn.merge``.
 from __future__ import annotations
 
 import functools
+import typing
 
 import jax
 import jax.numpy as jnp
@@ -90,10 +91,34 @@ def _keyed_dedup_mask(keys, lo, hi, live):
     return mask
 
 
-def _apply_update(cfg: SketchConfig, state: DynArrayState, keys, lo, hi, w, live, q):
-    """Shared tail of the jnp and Pallas-backed update paths: dedup, batch-
-    start change indicators, register scatter-max, incremental histogram
-    moves, per-key martingale accumulation. ``q`` is the per-element update
+class UpdatePlan(typing.NamedTuple):
+    """B-sized scatter payloads from the read-only half of one batch update.
+
+    Produced by ``_plan_scatters`` (gathers + per-element math), consumed by
+    ``_commit_scatters`` (pure scatters). The split exists for the donated
+    hot path: when the gathers and the scatters of the same state buffer
+    share one executable, XLA's copy-insertion refuses to alias the donated
+    input and materialises full copies of the int32[K, 2^b] histograms
+    (~1 GiB per batch at K = 2^20) — compiling the halves as SEPARATE
+    executables keeps the commit scatter-only, which XLA updates in place.
+    """
+
+    keys: jax.Array  # int32[B] clipped row routes
+    j: jax.Array  # int32[B] register choice g(x)
+    y_eff: jax.Array  # int8[B] scatter-max payload (r_min where unchanged)
+    chat_add: jax.Array  # f32[B] martingale increments w/q (0 where unchanged)
+    old_bin: jax.Array  # int32[B] batch-start histogram bin of regs[key, j]
+    final_bin: jax.Array  # int32[B] post-batch histogram bin of regs[key, j]
+    hist_dec: jax.Array  # int32[B] -1 where this element retires old_bin mass
+    hist_inc: jax.Array  # int32[B] +1 where this element deposits final_bin
+
+
+def _plan_scatters(
+    cfg: SketchConfig, state: DynArrayState, keys, lo, hi, w, live, q
+) -> UpdatePlan:
+    """Read-only half of the update: dedup, batch-start change indicators,
+    incremental-histogram bookkeeping — every output is B-sized and state
+    is only gathered, never written. ``q`` is the per-element update
     probability from the element's key's batch-start histogram."""
     j, y = qsketch_dyn._choose_and_quantize(cfg, lo, hi, w)
 
@@ -101,36 +126,97 @@ def _apply_update(cfg: SketchConfig, state: DynArrayState, keys, lo, hi, w, live
     old = state.regs[keys, j].astype(jnp.int32)
     changed = alive & (y > old)
 
-    chats = state.chats.at[keys].add(jnp.where(changed, w / q, 0.0))
+    chat_add = jnp.where(changed, w / q, 0.0)
 
     # y_eff is r_min (unchanged) or in (old, r_max] (changed), so the
     # scatter-max runs on int8 directly — no int32 round-trip of the whole
     # [K, m] matrix on the hot path.
     y_eff = jnp.where(changed, y, jnp.int32(cfg.r_min))
-    regs = state.regs.at[keys, j].max(y_eff.astype(jnp.int8))
 
     # Incremental histogram: every register the batch changed moves one unit
-    # of mass old-bin -> final-bin, counted ONCE per (key, register) — the
-    # gathered final value is identical for every element routed there, so
-    # any first occurrence may report it. Equivalent to a full rebuild
-    # (bin 0 pinned to zero) at O(B) instead of O(K·m).
-    final = regs[keys, j].astype(jnp.int32)
+    # of mass old-bin -> final-bin, counted ONCE per (key, register).
+    # ``final`` — the register's post-batch value — is the segment max of
+    # y_eff over the element's (key, register) group, floored by ``old``:
+    # integer max, so EXACTLY the value the commit's scatter-max leaves
+    # there, computed without re-gathering the scattered matrix (which
+    # would drag the [K, m] buffer back into a gather-after-write live
+    # range). Equivalent to a full rebuild (bin 0 pinned to zero) at O(B)
+    # instead of O(K·m).
     reg_order = jnp.lexsort((j, keys))
     rk, rj = keys[reg_order], j[reg_order]
-    reg_first = jnp.concatenate(
+    starts = jnp.concatenate(
         [jnp.array([True]), (rk[1:] != rk[:-1]) | (rj[1:] != rj[:-1])]
     )
-    reg_first = jnp.zeros_like(reg_first).at[reg_order].set(reg_first)
+    seg = jnp.cumsum(starts) - 1
+    smax = jax.ops.segment_max(
+        y_eff[reg_order], seg, num_segments=y_eff.shape[0], indices_are_sorted=True
+    )
+    final_sorted = jnp.maximum(old[reg_order], smax[seg])
+    final = jnp.zeros_like(final_sorted).at[reg_order].set(final_sorted)
+    reg_first = jnp.zeros_like(starts).at[reg_order].set(starts)
     reg_changed = reg_first & (final > old)
     dec = reg_changed & (old > cfg.r_min)  # old at r_min was never tracked
-    hists = state.hists.at[keys, old - cfg.r_min].add(jnp.where(dec, -1, 0))
-    hists = hists.at[keys, final - cfg.r_min].add(jnp.where(reg_changed, 1, 0))
+    return UpdatePlan(
+        keys=keys,
+        j=j,
+        y_eff=y_eff.astype(jnp.int8),
+        chat_add=chat_add,
+        old_bin=old - cfg.r_min,
+        final_bin=final - cfg.r_min,
+        hist_dec=jnp.where(dec, -1, 0),
+        hist_inc=jnp.where(reg_changed, 1, 0),
+    )
+
+
+def _commit_scatters(state: DynArrayState, plan: UpdatePlan) -> DynArrayState:
+    """Scatter-only half of the update: register scatter-max, histogram
+    mass moves, martingale accumulation. Every state leaf is written, never
+    gathered — the shape XLA aliases in place under donation."""
+    regs = state.regs.at[plan.keys, plan.j].max(plan.y_eff)
+    hists = state.hists.at[plan.keys, plan.old_bin].add(plan.hist_dec)
+    hists = hists.at[plan.keys, plan.final_bin].add(plan.hist_inc)
+    chats = state.chats.at[plan.keys].add(plan.chat_add)
     return DynArrayState(regs=regs, hists=hists, chats=chats)
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def update_batch(
+def _apply_update(cfg: SketchConfig, state: DynArrayState, keys, lo, hi, w, live, q):
+    """Shared tail of the jnp and Pallas-backed update paths: the plan and
+    commit halves fused back into one trace. The sharded/window/kernel
+    routes and the non-donated ``update_batch`` all come through here, so
+    every route runs the identical math as the split donated path."""
+    return _commit_scatters(
+        state, _plan_scatters(cfg, state, keys, lo, hi, w, live, q)
+    )
+
+
+def _plan_batch(
     cfg: SketchConfig, state: DynArrayState, keys, ids, weights, mask=None
+) -> UpdatePlan:
+    k = state.regs.shape[0]
+    lo, hi = hashing.split_id64(ids)
+    w = weights.astype(jnp.float32)
+    keys = jnp.clip(keys.astype(jnp.int32), 0, k - 1)
+    live = qsketch_dyn._live_weight_mask(w, mask)
+    # Per-element q_R against the element's key's batch-start histogram —
+    # the same expression as the single sketch, broadcast over gathered rows.
+    q = qsketch_dyn._q_update_prob(cfg, state.hists[keys], w)
+    return _plan_scatters(cfg, state, keys, lo, hi, w, live, q)
+
+
+def _update_batch_impl(
+    cfg: SketchConfig, state: DynArrayState, keys, ids, weights, mask=None
+) -> DynArrayState:
+    return _commit_scatters(state, _plan_batch(cfg, state, keys, ids, weights, mask))
+
+
+_update_batch_jit = jax.jit(_update_batch_impl, static_argnums=(0,))
+_plan_batch_jit = jax.jit(_plan_batch, static_argnums=(0,))
+_commit_donated = jax.jit(_commit_scatters, donate_argnums=(0,))
+
+
+def update_batch(
+    cfg: SketchConfig, state: DynArrayState, keys, ids, weights, mask=None,
+    *, donate: bool = False,
 ) -> DynArrayState:
     """One fused keyed batch, batch-stale per row (qsketch_dyn.update_batch
     semantics lifted to K rows).
@@ -140,16 +226,22 @@ def update_batch(
     mask: optional bool[B]; masked rows and degenerate (non-positive /
       non-finite) weights are dropped before dedup — they neither shadow a
       live duplicate nor enter the martingale.
+    donate: run the update as TWO executables — a read-only plan (gathers +
+      per-element math) and a scatter-only commit that donates ``state``
+      (``donate_argnums``) — so the scatters reuse the state buffers
+      instead of allocating a fresh int8[K, m] + int32[K, 2^b] + f32[K]
+      copy per batch: the steady-state ingest mode (sketchstream/ingest.py).
+      The split matters because a single executable that both gathers and
+      scatters a donated buffer makes XLA's copy-insertion bail out of
+      aliasing and COPY the histograms anyway (measured ~10x slower at
+      K = 2^20). The caller's ``state`` is DEAD afterwards (same values
+      live on in the returned state); keep ``donate=False`` anywhere the
+      old state is still read (oracles, merges, A/B tests). Both modes are
+      bit-identical: the plan/commit math is one trace, split or fused.
     """
-    k = state.regs.shape[0]
-    lo, hi = hashing.split_id64(ids)
-    w = weights.astype(jnp.float32)
-    keys = jnp.clip(keys.astype(jnp.int32), 0, k - 1)
-    live = qsketch_dyn._live_weight_mask(w, mask)
-    # Per-element q_R against the element's key's batch-start histogram —
-    # the same expression as the single sketch, broadcast over gathered rows.
-    q = qsketch_dyn._q_update_prob(cfg, state.hists[keys], w)
-    return _apply_update(cfg, state, keys, lo, hi, w, live, q)
+    if donate:
+        return _commit_donated(state, _plan_batch_jit(cfg, state, keys, ids, weights, mask))
+    return _update_batch_jit(cfg, state, keys, ids, weights, mask)
 
 
 def rebuild_hists(cfg: SketchConfig, regs) -> jnp.ndarray:

@@ -157,6 +157,28 @@ def _lut_consts(num_bins: int, r_min: int, top_bin: int):
     return w_mat.astype(np.float32), h_tab.astype(np.float32)
 
 
+@functools.lru_cache(maxsize=16)
+def lut_family_consts(num_bins: int, r_min: int, top_bin: int):
+    """Device-resident LUT tables, shared across a whole (m, b) config FAMILY.
+
+    The solver tables depend on the sketch geometry only through
+    (num_bins, r_min, top_bin) — the constants an (m, b) pair fixes — never
+    on the seed or on which container instance is asking. Caching the
+    ``jnp`` arrays at that key means every DynArray / WindowArray / monitor
+    built from the same family reuses ONE tabulation and ONE device upload
+    (the returned arrays are the literal same buffers, asserted by
+    tests/test_estimation.py), instead of re-materializing the table per
+    instance/trace. Values are exactly ``_lut_consts``' (the float64-
+    evaluated, correctly-rounded f32 tables), so the LUT tolerance contract
+    (``LUT_RTOL``) is untouched.
+    """
+    w_mat_np, h_np = _lut_consts(num_bins, r_min, top_bin)
+    # Concrete even when first populated under a jit trace — a traced
+    # asarray would cache a tracer and leak it into later traces.
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(w_mat_np), jnp.asarray(h_np)
+
+
 def _log2_add(a, b):
     """log2(2^a + 2^b), finite for mismatched magnitudes (−inf allowed)."""
     hi = jnp.maximum(a, b)
@@ -208,8 +230,7 @@ def _lut_chunk_solve(cfg: SketchConfig, hists):
     nb = cfg.num_bins
     m = cfg.m
     top = cfg.top_bin
-    w_mat_np, h_np = _lut_consts(nb, cfg.r_min, top)
-    h = jnp.asarray(h_np)  # (W, G)
+    w_mat, h = lut_family_consts(nb, cfg.r_min, top)  # (nb, 3+G_t), (W, G)
 
     t = hists.astype(jnp.float32)  # (K, nb)
 
@@ -217,7 +238,7 @@ def _lut_chunk_solve(cfg: SketchConfig, hists):
     # One (K, nb) @ (nb, 3 + G_t) GEMM — a single pass over the histogram
     # block instead of a reduction per constant (at K = 2^20 the block is
     # ~1 GB; traffic, not FLOPs, dominates on hosts).
-    g3 = t @ jnp.asarray(w_mat_np)
+    g3 = t @ w_mat
     b_big, b_sml, a0 = g3[:, 0], g3[:, 1], g3[:, 2]
     gsum = g3[:, 3:]  # (K, G_t) coarse partial sums of T·act (minus top)
     l2_big = jnp.where(b_big > 0, jnp.log2(jnp.maximum(b_big, 1e-38)) + 96.0, -jnp.inf)

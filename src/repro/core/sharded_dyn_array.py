@@ -74,8 +74,7 @@ def num_sketches(state: ShardedDynArrayState) -> int:
     return state.regs.shape[0]
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def _update(cfg: SketchConfig, mesh, axis: str, state, keys, lo, hi, w, mask):
+def _update_impl(cfg: SketchConfig, mesh, axis: str, state, keys, lo, hi, w, mask):
     rows = state.regs.shape[0] // sharding.num_shards(mesh, axis)
 
     def local(st, keys, lo, hi, w, m):
@@ -101,9 +100,15 @@ def _update(cfg: SketchConfig, mesh, axis: str, state, keys, lo, hi, w, mask):
     )
 
 
+_update = jax.jit(_update_impl, static_argnums=(0, 1, 2))
+_update_donated = jax.jit(
+    _update_impl, static_argnums=(0, 1, 2), donate_argnums=(3,)
+)
+
+
 def update_batch(
     cfg: SketchConfig, mesh, state: ShardedDynArrayState, keys, ids, weights,
-    mask=None, axis: str = AXIS,
+    mask=None, axis: str = AXIS, *, donate: bool = False,
 ) -> ShardedDynArrayState:
     """One fused keyed batch, hash-routed; bit-identical to the single-host
     ``dyn_array.update_batch`` on every state leaf (chats included).
@@ -111,6 +116,9 @@ def update_batch(
     Same contract: ``keys`` are dense row indices in [0, K) (clipped),
     masked / degenerate-weight rows are dropped before dedup. Each element
     updates exactly the shard owning its row; no collective runs.
+    ``donate=True`` donates the sharded state leaves for in-place buffer
+    reuse (sharding is unchanged row-in/row-out, so aliasing is legal); the
+    caller's ``state`` is dead afterwards — the steady-state ingest mode.
     """
     sharding.check_divisible(state.regs.shape[0], mesh, axis)
     k = state.regs.shape[0]
@@ -118,7 +126,8 @@ def update_batch(
     w = weights.astype(jnp.float32)
     keys = jnp.clip(keys.astype(jnp.int32), 0, k - 1)
     mask = jnp.ones(keys.shape, bool) if mask is None else mask
-    return _update(cfg, mesh, axis, state, keys, lo, hi, w, mask)
+    fn = _update_donated if donate else _update
+    return fn(cfg, mesh, axis, state, keys, lo, hi, w, mask)
 
 
 def estimate_all(state: ShardedDynArrayState) -> jnp.ndarray:

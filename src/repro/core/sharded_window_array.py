@@ -95,8 +95,7 @@ def _local_window(st: ShardedWindowArrayState, arrays) -> WindowArrayState:
     return WindowArrayState(*arrays, head=st.head, filled=st.filled, epoch_id=st.epoch_id)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def _update(cfg: SketchConfig, mesh, axis: str, state, keys, lo, hi, w, mask):
+def _update_impl(cfg: SketchConfig, mesh, axis: str, state, keys, lo, hi, w, mask):
     rows = state.regs.shape[1] // sharding.num_shards(mesh, axis)
 
     def local(arrays, head, keys, lo, hi, w, m):
@@ -118,25 +117,33 @@ def _update(cfg: SketchConfig, mesh, axis: str, state, keys, lo, hi, w, mask):
     )
 
 
+_update = jax.jit(_update_impl, static_argnums=(0, 1, 2))
+_update_donated = jax.jit(
+    _update_impl, static_argnums=(0, 1, 2), donate_argnums=(3,)
+)
+
+
 def update_batch(
     cfg: SketchConfig, mesh, state: ShardedWindowArrayState, keys, ids, weights,
-    mask=None, axis: str = AXIS,
+    mask=None, axis: str = AXIS, *, donate: bool = False,
 ) -> ShardedWindowArrayState:
     """Fold one keyed batch into the current epoch (and the union cache),
     hash-routed; bit-identical to ``window_array.update_batch`` on every
     leaf. Same contract: keys clipped to [0, K), masked / degenerate-weight
-    rows dropped before dedup."""
+    rows dropped before dedup. ``donate=True`` donates the sharded epoch
+    planes + union cache for in-place reuse (sharding is unchanged, so
+    aliasing is legal); the caller's ``state`` is dead afterwards."""
     sharding.check_divisible(state.regs.shape[1], mesh, axis)
     k = state.regs.shape[1]
     lo, hi = hashing.split_id64(ids)
     w = weights.astype(jnp.float32)
     keys = jnp.clip(keys.astype(jnp.int32), 0, k - 1)
     mask = jnp.ones(keys.shape, bool) if mask is None else mask
-    return _update(cfg, mesh, axis, state, keys, lo, hi, w, mask)
+    fn = _update_donated if donate else _update
+    return fn(cfg, mesh, axis, state, keys, lo, hi, w, mask)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def _rotate(cfg: SketchConfig, mesh, axis: str, state):
+def _rotate_impl(cfg: SketchConfig, mesh, axis: str, state):
     def local(arrays, head, filled, epoch_id):
         st = WindowArrayState(*arrays, head=head, filled=filled, epoch_id=epoch_id)
         return tuple(window_array.rotate(cfg, st))
@@ -155,7 +162,16 @@ def _rotate(cfg: SketchConfig, mesh, axis: str, state):
     )(tuple(state)[:6], state.head, state.filled, state.epoch_id)
 
 
-def rotate(cfg: SketchConfig, mesh, state: ShardedWindowArrayState, axis: str = AXIS) -> ShardedWindowArrayState:
+_rotate = jax.jit(_rotate_impl, static_argnums=(0, 1, 2))
+_rotate_donated = jax.jit(
+    _rotate_impl, static_argnums=(0, 1, 2), donate_argnums=(3,)
+)
+
+
+def rotate(
+    cfg: SketchConfig, mesh, state: ShardedWindowArrayState, axis: str = AXIS,
+    *, donate: bool = False,
+) -> ShardedWindowArrayState:
     """Close the current epoch and open the next ring slot, shard-locally.
 
     Each shard runs ``window_array.rotate`` verbatim on its rows: O(1) ring
@@ -163,8 +179,11 @@ def rotate(cfg: SketchConfig, mesh, state: ShardedWindowArrayState, axis: str = 
     of ITS union-cache rows from the surviving epoch planes, and the MLE
     re-base of its anytime martingales. The replicated ring clock advances
     identically on every shard — no collective, no host sync.
+    ``donate=True`` reuses the ring buffers in place; safe once no earlier
+    view of the state is read again (the ingest retire barrier's contract).
     """
-    return ShardedWindowArrayState(*_rotate(cfg, mesh, axis, state))
+    fn = _rotate_donated if donate else _rotate
+    return ShardedWindowArrayState(*fn(cfg, mesh, axis, state))
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2, 3), static_argnames=("solver",))

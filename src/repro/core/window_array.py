@@ -120,9 +120,26 @@ def _apply_update(cfg: SketchConfig, state: WindowArrayState, keys, lo, hi, w, l
     )
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def update_batch(
+def _update_batch_impl(
     cfg: SketchConfig, state: WindowArrayState, keys, ids, weights, mask=None
+) -> WindowArrayState:
+    k = state.regs.shape[1]
+    lo, hi = hashing.split_id64(ids)
+    w = weights.astype(jnp.float32)
+    keys = jnp.clip(keys.astype(jnp.int32), 0, k - 1)
+    live = qsketch_dyn._live_weight_mask(w, mask)
+    return _apply_update(cfg, state, keys, lo, hi, w, live)
+
+
+_update_batch_jit = jax.jit(_update_batch_impl, static_argnums=(0,))
+_update_batch_donated = jax.jit(
+    _update_batch_impl, static_argnums=(0,), donate_argnums=(1,)
+)
+
+
+def update_batch(
+    cfg: SketchConfig, state: WindowArrayState, keys, ids, weights, mask=None,
+    *, donate: bool = False,
 ) -> WindowArrayState:
     """Fold one keyed batch into the current epoch (and the union cache).
 
@@ -138,17 +155,17 @@ def update_batch(
     The union-regs invariant (union == max over epochs) is preserved exactly:
     an element raises union[k, j] iff its y exceeds the union register, which
     already dominates the epoch register it also raises.
+
+    ``donate=True`` hands the (large: int8[E, K, m] + int32[E, K, 2^b]) ring
+    state to XLA for in-place reuse — the steady-state ingest mode; the
+    caller's ``state`` is dead afterwards (``dyn_array.update_batch`` has the
+    full contract).
     """
-    k = state.regs.shape[1]
-    lo, hi = hashing.split_id64(ids)
-    w = weights.astype(jnp.float32)
-    keys = jnp.clip(keys.astype(jnp.int32), 0, k - 1)
-    live = qsketch_dyn._live_weight_mask(w, mask)
-    return _apply_update(cfg, state, keys, lo, hi, w, live)
+    fn = _update_batch_donated if donate else _update_batch_jit
+    return fn(cfg, state, keys, ids, weights, mask)
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def rotate(cfg: SketchConfig, state: WindowArrayState) -> WindowArrayState:
+def _rotate_impl(cfg: SketchConfig, state: WindowArrayState) -> WindowArrayState:
     """Close the current epoch and open the next ring slot.
 
     Ring bookkeeping is O(1): advance ``head`` and reset the slot it lands on
@@ -179,6 +196,23 @@ def rotate(cfg: SketchConfig, state: WindowArrayState) -> WindowArrayState:
         filled=jnp.minimum(state.filled + 1, e),
         epoch_id=state.epoch_id + 1,
     )
+
+
+_rotate_jit = jax.jit(_rotate_impl, static_argnums=(0,))
+_rotate_donated = jax.jit(_rotate_impl, static_argnums=(0,), donate_argnums=(1,))
+
+
+def rotate(
+    cfg: SketchConfig, state: WindowArrayState, *, donate: bool = False
+) -> WindowArrayState:
+    """Close the current epoch and open the next ring slot (see
+    ``_rotate_impl`` for the full semantics: O(1) ring bookkeeping, oldest-
+    epoch eviction, union-cache rebuild, martingale re-base, monotone
+    ``epoch_id``). ``donate=True`` reuses the ring buffers in place — safe
+    whenever the pre-rotation state is not read again (the ingest layer's
+    retire barrier guarantees exactly that)."""
+    fn = _rotate_donated if donate else _rotate_jit
+    return fn(cfg, state)
 
 
 def _chats_from_touched_hists(cfg: SketchConfig, hists, solver: str = "newton") -> jnp.ndarray:

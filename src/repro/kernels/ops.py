@@ -217,6 +217,7 @@ def dyn_array_update_op(
     *,
     block_b: int | None = None,
     interpret: bool | None = None,
+    donate: bool = False,
 ) -> DynArrayState:
     """Kernel-backed equivalent of ``core.dyn_array.update_batch`` (bit-identical).
 
@@ -231,8 +232,45 @@ def dyn_array_update_op(
     sparse 64-bit tenant streams go through ``dyn_array_update_tenants_op``.
     Padding batch rows carry w = 1 against a zero histogram row (q = 1) and
     are sliced off before the tail.
+
+    ``donate=True`` runs the whole op under one jit with the state donated,
+    so the scatter tail reuses the state buffers in place instead of copying
+    the [K, m] + [K, 2^b] block per batch — the steady-state ingest mode
+    (the non-donating call stays un-jitted at top level: its Pallas stage
+    compiles per shape and the tail dispatches eagerly, the validation
+    configuration the bit-identity tests run). The caller's ``state`` is
+    dead after a donating call (``dyn_array.update_batch`` has the full
+    donation contract).
     """
     interpret = _interpret_default() if interpret is None else interpret
+    if donate:
+        return _dyn_array_update_donated(cfg, block_b, interpret)(
+            state, keys, ids, weights, mask
+        )
+    return _dyn_array_update_body(
+        cfg, state, keys, ids, weights, mask, block_b=block_b, interpret=interpret
+    )
+
+
+@functools.lru_cache(maxsize=32)
+def _dyn_array_update_donated(cfg: SketchConfig, block_b, interpret: bool):
+    """Jitted, state-donating closure of ``_dyn_array_update_body`` — one
+    cache entry per (cfg, block_b, interpret) so repeated ingest batches hit
+    the same executable (and its input-output buffer aliasing)."""
+
+    def fn(state, keys, ids, weights, mask):
+        return _dyn_array_update_body(
+            cfg, state, keys, ids, weights, mask,
+            block_b=block_b, interpret=interpret,
+        )
+
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+def _dyn_array_update_body(
+    cfg: SketchConfig, state: DynArrayState, keys, ids, weights, mask,
+    *, block_b, interpret,
+) -> DynArrayState:
     from repro.core import estimators
 
     k = state.regs.shape[0]

@@ -81,6 +81,18 @@ def main(argv=None):
                     help="shard the doc-window monitor's per-tenant state "
                          "over this many devices of a dedicated 'sketch' "
                          "mesh (0 = single-host WindowMonitor)")
+    ap.add_argument("--ingest", action="store_true",
+                    help="stream the doc-window telemetry through the async "
+                         "micro-batching ingest pipeline (sketchstream/"
+                         "ingest.py: donated updates, bounded retire queue) "
+                         "instead of updating inside the jitted step; "
+                         "requires --doc-window-capacity")
+    ap.add_argument("--ingest-batch", type=int, default=32768,
+                    help="ingest micro-batch size (fixed staging shape)")
+    ap.add_argument("--ingest-queue-depth", type=int, default=4,
+                    help="max in-flight ingest batches before backpressure")
+    ap.add_argument("--ingest-policy", default="block", choices=("block", "drop"),
+                    help="backpressure policy at a full ingest queue")
     ap.add_argument("--n-docs", type=int, default=512,
                     help="distinct document ids the token stream draws from "
                          "when the doc window is enabled")
@@ -110,8 +122,34 @@ def main(argv=None):
     # With --doc-window-shards the same monitor surface runs row-sharded
     # over a dedicated "sketch" mesh (DESIGN.md §8.6): bit-identical
     # estimates, per-tenant state divided across the shard devices.
+    # --ingest decouples that telemetry from the step: the jitted train step
+    # carries NO tenant state (tenant_monitor=None below), and the per-token
+    # (doc, token) elements are pushed host-side into a TenantWindowIngest —
+    # micro-batched, donated, asynchronous (DESIGN.md §8.8). Rotation +
+    # directory aging run behind the pipeline's retire barrier on the same
+    # --rotate-every clock. The ingest window state is telemetry, not model
+    # state: it is NOT checkpointed, and a resumed run restarts its window.
     tenant_mon = None
-    if args.doc_window_capacity:
+    doc_ingest = None
+    if args.doc_window_capacity and args.ingest:
+        from repro.core.key_directory import DirectoryConfig
+        from repro.sketchstream import ingest as ingest_lib
+
+        tcfg = paper_qsketch.telemetry_default()
+        doc_ingest = ingest_lib.TenantWindowIngest(
+            tcfg,
+            DirectoryConfig(capacity=args.doc_window_capacity, seed=tcfg.seed),
+            args.doc_window_epochs,
+            ingest_lib.IngestConfig(
+                batch_size=args.ingest_batch,
+                queue_depth=args.ingest_queue_depth,
+                policy=args.ingest_policy,
+            ),
+            mesh=(make_sketch_mesh(args.doc_window_shards)
+                  if args.doc_window_shards else None),
+            evict_after=args.doc_window_epochs,
+        )
+    elif args.doc_window_capacity:
         if args.doc_window_shards:
             tenant_mon = monitor.ShardedWindowMonitor.for_mesh(
                 paper_qsketch.telemetry_default(), args.doc_window_capacity,
@@ -169,7 +207,7 @@ def main(argv=None):
 
     stream = TokenStream(
         cfg.vocab, args.batch, args.seq, seed=args.seed,
-        n_docs=args.n_docs if tenant_mon is not None else 0,
+        n_docs=args.n_docs if (tenant_mon is not None or doc_ingest is not None) else 0,
     )
     ckpt = checkpoint.AsyncCheckpointer(args.ckpt_dir)
     metrics_f = open(args.metrics_file, "a") if args.metrics_file else None
@@ -200,7 +238,25 @@ def main(argv=None):
             ema = dt if ema is None else 0.9 * ema + 0.1 * dt
             if dt > args.straggler_factor * ema and step > start_step + 3:
                 print(f"[watchdog] straggler step {step}: {dt:.2f}s vs ema {ema:.2f}s", flush=True)
+            if doc_ingest is not None and "doc_ids" in batch:
+                # Host-side ingest of the step's (doc, token) elements: one
+                # tenant key per token (lo + hi uint32 words), pushed while
+                # the NEXT step's device work proceeds — the async overlap
+                # the in-step monitor can't have.
+                shape = batch["tokens"].shape
+                doc_ingest.push(
+                    (np.broadcast_to(batch["doc_ids"][:, None], shape).ravel(),
+                     np.broadcast_to(batch["doc_ids_hi"][:, None], shape).ravel()),
+                    batch["tokens"].astype(np.uint32).ravel(),
+                    mask=(batch["tokens_mask"].ravel()
+                          if "tokens_mask" in batch else None),
+                )
             step += 1
+            if doc_ingest is not None and step % args.rotate_every == 0:
+                # Epoch tick behind the retire barrier: every earlier element
+                # lands in the pre-rotation epoch, then the ring rotates and
+                # cold fingerprints age — the synchronous ordering.
+                doc_ingest.rotate()
             if tenant_mon is not None and step % args.rotate_every == 0:
                 # Epoch tick: rotate the document window (evicting the oldest
                 # epoch + aging cold fingerprints) OUTSIDE the jit'd step.
@@ -210,6 +266,11 @@ def main(argv=None):
                 )
             if step % args.log_every == 0 or step == args.steps:
                 line = {"step": step, "time_s": round(dt, 4), **{k: round(v, 5) for k, v in metrics.items()}}
+                if doc_ingest is not None:
+                    line.update({
+                        k: round(v, 5) if isinstance(v, float) else v
+                        for k, v in doc_ingest.metrics().items()
+                    })
                 print(f"[train] {json.dumps(line)}", flush=True)
                 if metrics_f:
                     metrics_f.write(json.dumps(line) + "\n")

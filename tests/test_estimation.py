@@ -246,6 +246,31 @@ def test_fused_within_tolerance_of_f64_reference(m, b):
     assert np.asarray(conv).dtype == np.bool_
 
 
+def test_lut_family_consts_shared_across_configs():
+    """The LUT solver tables are cached per (num_bins, r_min, top_bin)
+    FAMILY, not per container/config instance: configs differing only in m
+    or seed must hand back the very same device arrays (no rebuild, no
+    re-upload), and the shared tables must still solve within the
+    documented tolerance for each config."""
+    a = SketchConfig(m=64, b=8, seed=1)
+    c = SketchConfig(m=256, b=8, seed=9)
+    ta = estimation.lut_family_consts(a.num_bins, a.r_min, a.top_bin)
+    tc = estimation.lut_family_consts(c.num_bins, c.r_min, c.top_bin)
+    assert ta[0] is tc[0] and ta[1] is tc[1], "same family rebuilt its tables"
+    # A different family must NOT share.
+    d = SketchConfig(m=64, b=6)
+    td = estimation.lut_family_consts(d.num_bins, d.r_min, d.top_bin)
+    assert td[0] is not ta[0]
+    # Golden accuracy through the shared tables, per config.
+    for cfg in (a, c):
+        regs = _grid_regs(cfg, 6, seed=300 + cfg.m)
+        hists = jax.vmap(lambda r: estimators.histogram(cfg, r))(regs)
+        got = estimation.estimate_hists(cfg, hists, kind="full", solver="lut")
+        ref = np.array([estimators.mle_numpy(cfg, np.asarray(r)) for r in regs])
+        ok = _within_tol(got, ref)
+        assert ok.all(), f"m={cfg.m}: {np.asarray(got)[~ok]} vs {ref[~ok]}"
+
+
 def test_fused_conv_matches_newton(states):
     sa = states[1]
     _, _, conv_n = sketch_array.estimate_all_with_ci(CFG, sa)

@@ -75,6 +75,31 @@ def test_resume_continues_exactly(tmp_path):
     assert worst < 5e-5, worst
 
 
+def test_ingest_mode_runs_and_logs_telemetry(tmp_path):
+    """--ingest moves the doc-window telemetry out of the jitted step and
+    through the async pipeline: the run completes, rotations tick on the
+    --rotate-every clock, and every pushed element is accounted for
+    (pushed == batch*seq*steps, dropped == 0 under the block policy)."""
+    import json
+
+    mfile = str(tmp_path / "metrics.jsonl")
+    train_mod.main([
+        "--arch", "small-lm-16m", "--smoke", "--steps", "8", "--batch", "2",
+        "--seq", "32", "--ckpt-dir", str(tmp_path / "ck"), "--ckpt-every", "100",
+        "--log-every", "4", "--metrics-file", mfile,
+        "--doc-window-capacity", "64", "--doc-window-epochs", "3",
+        "--rotate-every", "4", "--ingest", "--ingest-batch", "128",
+    ])
+    lines = [json.loads(l) for l in open(mfile)]
+    last = lines[-1]
+    assert last["ingest_elements_pushed"] == 8 * 2 * 32
+    assert last["ingest_elements_dropped"] == 0
+    assert last["ingest_rotations"] == 2  # steps 4 and 8
+    assert last["tenant_slots_claimed"] > 0
+    # The jitted step carries no tenant state in this mode.
+    assert "distinct_tokens_est" in last  # scalar telemetry still in-step
+
+
 def test_elastic_reshard_subprocess(tmp_path):
     """Save under an 8-device mesh, restore+reshard under 4 devices."""
     script = r"""
