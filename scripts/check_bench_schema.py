@@ -1,22 +1,12 @@
-"""CI guard for the cumulative bench-JSON files (scripts/test.sh --tier2).
+"""Thin shim: the bench-JSON schema check now lives in qlint (DESIGN.md §9).
 
-The sweep suites (benchmarks/dyn_array.py, benchmarks/window_array.py) merge
-quick/smoke re-measurements into their JSON so cheap runs never erase the
-paper-scale rows a ``--full`` run paid for (common.merge_save). A broken
-merge fails SILENTLY at bench time — duplicate cells, dropped rows, unsorted
-output — and only shows up when someone plots stale data. This script makes
-it fail loudly instead:
-
-  * every row carries the required keys ("figure", "method", and a payload
-    of at least one of mops/ms/x);
-  * within each (figure, method[, e]) group the swept "k" values are unique
-    and stored in strictly increasing order (merge_save sorts; a duplicate k
-    means two merges claimed the same cell, out-of-order means someone
-    bypassed merge_save).
+The full suite runs via ``scripts/check_static.py`` (wired into
+``scripts/test.sh --tier2``); this entry point is kept for muscle memory
+and for checking individual files:
 
 Usage:  python scripts/check_bench_schema.py [file.json ...]
-        (no args: checks the cumulative sweep files that exist under
-        experiments/bench/, requiring the ones the smoke suite just wrote)
+        (no args: the cumulative sweep files under experiments/bench/,
+        requiring the ones the smoke suite maintains)
 """
 
 from __future__ import annotations
@@ -25,79 +15,34 @@ import json
 import os
 import sys
 
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
 
-# Files written through common.merge_save — the cumulative-merge contract.
-CUMULATIVE = (
-    "dyn_array.json",
-    "dyn_array_sharded.json",
-    "estimation.json",
-    "ingest.json",
-    "window_array.json",
-    "window_array_sharded.json",
-)
-PAYLOAD_KEYS = ("mops", "ms", "x", "us", "sustained_mops")
-
-
-def check_rows(name: str, rows) -> list[str]:
-    errors = []
-    if not isinstance(rows, list) or not rows:
-        return [f"{name}: expected a non-empty list of row dicts"]
-    groups: dict[tuple, list] = {}
-    for i, r in enumerate(rows):
-        for key in ("figure", "method"):
-            if not isinstance(r.get(key), str):
-                errors.append(f"{name}[{i}]: missing/non-string '{key}': {r}")
-        if not any(isinstance(r.get(p), (int, float)) for p in PAYLOAD_KEYS):
-            errors.append(
-                f"{name}[{i}]: no numeric payload among {PAYLOAD_KEYS}: {r}"
-            )
-        if "k" in r and not isinstance(r["k"], int):
-            errors.append(f"{name}[{i}]: non-integer sweep key 'k': {r}")
-        groups.setdefault(
-            # "e" splits the window-suite ring sweeps; "bsz" splits the
-            # ingest batch-size sweep — within each group the k axis must
-            # stay unique + monotone.
-            (r.get("figure"), r.get("method"), r.get("e"), r.get("bsz")), []
-        ).append(r)
-    for (figure, method, e, bsz), rs in groups.items():
-        ks = [r["k"] for r in rs if "k" in r]
-        tag = (
-            f"{name}:{figure}/{method}"
-            + (f"/e={e}" if e is not None else "")
-            + (f"/bsz={bsz}" if bsz is not None else "")
-        )
-        if len(ks) != len(set(ks)):
-            dupes = sorted({k for k in ks if ks.count(k) > 1})
-            errors.append(f"{tag}: duplicate k cells {dupes} (broken cumulative merge)")
-        if ks != sorted(ks):
-            errors.append(f"{tag}: k not monotone increasing: {ks}")
-    return errors
+from repro.analysis.rules.bench_schema import check_rows  # noqa: E402
 
 
 def main(paths=None) -> int:
-    if not paths:
-        paths = [
-            os.path.join(RESULTS_DIR, f)
-            for f in CUMULATIVE
-            if os.path.exists(os.path.join(RESULTS_DIR, f))
-        ]
-        missing = [f for f in CUMULATIVE if not os.path.exists(os.path.join(RESULTS_DIR, f))]
-        if missing:
-            print(f"check_bench_schema: FAIL — expected cumulative files missing: {missing}")
+    """Validate explicit bench JSONs, or run the full rule via qlint."""
+    if paths:
+        errors = []
+        for path in paths:
+            with open(path) as f:
+                rows = json.load(f)
+            errors += [
+                f"{f_.message}" for f_ in check_rows(os.path.basename(path), rows)
+            ]
+        if errors:
+            print("check_bench_schema: FAIL")
+            for e in errors:
+                print(f"  - {e}")
             return 1
-    errors = []
-    for path in paths:
-        with open(path) as f:
-            rows = json.load(f)
-        errors += check_rows(os.path.basename(path), rows)
-    if errors:
-        print("check_bench_schema: FAIL")
-        for e in errors:
-            print(f"  - {e}")
-        return 1
-    print(f"check_bench_schema: OK ({', '.join(os.path.basename(p) for p in paths)})")
-    return 0
+        print(
+            f"check_bench_schema: OK ({', '.join(os.path.basename(p) for p in paths)})"
+        )
+        return 0
+    from check_static import main as qlint_main
+
+    return qlint_main(["--rules", "bench-schema", "--json", ""])
 
 
 if __name__ == "__main__":

@@ -1,26 +1,12 @@
-"""CI guard: every public symbol in the sketch library carries a docstring.
+"""Thin shim: the docstring audit now lives in qlint (DESIGN.md §9).
 
-The library's contracts live in docstrings — shape/dtype conventions
-(int8[K, m] registers, touched-register histograms, replicated ring
-scalars), merge semantics (max monoid vs martingale additivity), and
-padding/masking rules. A public function without one is an API the next
-reader has to reverse-engineer, so tier-2 (scripts/test.sh --tier2) fails
-the build instead.
-
-Checked, via AST (no imports, so a broken module still reports precisely):
-  * module docstrings,
-  * public module-level functions and classes,
-  * public methods of public classes (``__init__`` and other dunders are
-    exempt — the class docstring owns construction; NamedTuple field
-    declarations have no methods to check).
-
-Scope: ``src/repro/core/``, ``src/repro/sketchstream/``, and
-``src/repro/kernels/`` — the layers whose docstrings double as the design
-record (DESIGN.md cites them; the kernel wrappers state the bit-identity
-and interpret-mode contracts).
+The full suite runs via ``scripts/check_static.py`` (wired into
+``scripts/test.sh --tier2``); this entry point is kept for muscle memory
+and for checking individual files:
 
 Usage:  python scripts/check_docstrings.py [path ...]
-        (no args: checks the default scope)
+        (no args: the rule's default scope — core/, sketchstream/,
+        kernels/, analysis/)
 """
 
 from __future__ import annotations
@@ -30,15 +16,9 @@ import os
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DEFAULT_SCOPE = (
-    os.path.join(REPO, "src", "repro", "core"),
-    os.path.join(REPO, "src", "repro", "sketchstream"),
-    os.path.join(REPO, "src", "repro", "kernels"),
-)
+sys.path.insert(0, os.path.join(REPO, "src"))
 
-
-def _is_public(name: str) -> bool:
-    return not name.startswith("_")
+from repro.analysis.rules.docstrings import check_tree  # noqa: E402
 
 
 def check_file(path: str) -> list[str]:
@@ -46,47 +26,25 @@ def check_file(path: str) -> list[str]:
     with open(path) as f:
         tree = ast.parse(f.read(), filename=path)
     rel = os.path.relpath(path, REPO)
-    errors = []
-    if not ast.get_docstring(tree):
-        errors.append(f"{rel}: missing module docstring")
-    for node in tree.body:
-        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-            if _is_public(node.name) and not ast.get_docstring(node):
-                errors.append(f"{rel}:{node.lineno}: function '{node.name}' has no docstring")
-        elif isinstance(node, ast.ClassDef) and _is_public(node.name):
-            if not ast.get_docstring(node):
-                errors.append(f"{rel}:{node.lineno}: class '{node.name}' has no docstring")
-            for item in node.body:
-                if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                    continue
-                if item.name.startswith("_"):  # dunders + private helpers
-                    continue
-                if not ast.get_docstring(item):
-                    errors.append(
-                        f"{rel}:{item.lineno}: method '{node.name}.{item.name}' has no docstring"
-                    )
-    return errors
+    return [f"{f_.path}:{f_.line}: {f_.message}" for f_ in check_tree(tree, rel)]
 
 
 def main(paths=None) -> int:
-    """Walk the scope, report every missing docstring, exit nonzero on any."""
-    if not paths:
-        paths = []
-        for root in DEFAULT_SCOPE:
-            for dirpath, _, files in os.walk(root):
-                paths += [
-                    os.path.join(dirpath, f) for f in sorted(files) if f.endswith(".py")
-                ]
-    errors = []
-    for path in paths:
-        errors += check_file(path)
-    if errors:
-        print("check_docstrings: FAIL")
-        for e in errors:
-            print(f"  - {e}")
-        return 1
-    print(f"check_docstrings: OK ({len(paths)} files)")
-    return 0
+    """Run the docstrings rule (explicit files, or the default scope)."""
+    if paths:
+        errors = []
+        for path in paths:
+            errors += check_file(path)
+        if errors:
+            print("check_docstrings: FAIL")
+            for e in errors:
+                print(f"  - {e}")
+            return 1
+        print(f"check_docstrings: OK ({len(paths)} files)")
+        return 0
+    from check_static import main as qlint_main
+
+    return qlint_main(["--rules", "docstrings", "--json", ""])
 
 
 if __name__ == "__main__":

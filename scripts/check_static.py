@@ -1,0 +1,118 @@
+#!/usr/bin/env python
+"""qlint CLI — run the repo's static-analysis suite (DESIGN.md §9).
+
+One runner replaces the former trio (docstring audit, qsketch_mle layering
+grep, bench-schema check) and adds the contract rules: layering,
+int8-overflow, donation-safety, jit-purity, kernel-contract.
+
+Usage:
+    python scripts/check_static.py                     # full repo
+    python scripts/check_static.py --changed-only      # git-changed files
+    python scripts/check_static.py src/repro/core/dyn_array.py
+    python scripts/check_static.py --rules layering,int8-overflow
+    python scripts/check_static.py --list-rules
+    python scripts/check_static.py --update-baseline   # grandfather new findings
+    python scripts/check_static.py --prune-baseline    # drop stale entries
+
+Writes a JSON report (default ``experiments/analysis/report.json``) and
+exits non-zero on any finding that is neither baselined
+(``scripts/qlint_baseline.json``) nor inline-suppressed
+(``# qlint: disable=<rule>``). Wired into ``scripts/test.sh --tier2``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.analysis import all_rules, run_qlint  # noqa: E402
+from repro.analysis.baseline import Baseline  # noqa: E402
+from repro.analysis.runner import DEFAULT_BASELINE  # noqa: E402
+
+
+def main(argv: list[str] | None = None) -> int:
+    """Parse args, run qlint, print the summary, return the exit code."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", help="repo-relative files to report on")
+    ap.add_argument("--root", default=REPO, help="repo root (default: this repo)")
+    ap.add_argument("--changed-only", action="store_true",
+                    help="report only on git-changed files")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset (default: all)")
+    ap.add_argument("--json", dest="json_out",
+                    default=os.path.join("experiments", "analysis", "report.json"),
+                    help="report path relative to root ('' disables)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file relative to root ('' disables)")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="add every new finding to the baseline (justify after!)")
+    ap.add_argument("--prune-baseline", action="store_true",
+                    help="drop baseline entries no finding matches anymore "
+                         "(full runs only — a partial run cannot tell stale "
+                         "from unexercised)")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.name:16s} {rule.description}")
+        return 0
+
+    report = run_qlint(
+        args.root,
+        rule_subset=args.rules.split(",") if args.rules else None,
+        selected=args.paths or None,
+        changed_only=args.changed_only,
+        baseline_path=args.baseline or None,
+    )
+
+    if args.json_out:
+        out_path = os.path.join(args.root, args.json_out)
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+
+    if args.update_baseline or args.prune_baseline:
+        base = Baseline(os.path.join(args.root, args.baseline))
+        changed = False
+        if args.update_baseline:
+            for row in report["findings"]:
+                if not row["baselined"]:
+                    base.entries[row["key"]] = "TODO: justify (added by --update-baseline)"
+                    changed = True
+        if args.prune_baseline:
+            for key in report["stale_baseline_keys"]:
+                base.entries.pop(key, None)
+                changed = True
+        if changed:
+            base.save()
+            print(f"qlint: baseline updated ({len(base.entries)} entries)")
+        return 0
+
+    counts = report["counts"]
+    new_rows = [r for r in report["findings"] if not r["baselined"]]
+    for row in new_rows:
+        print(f"{row['path']}:{row['line']}: [{row['rule']}] {row['message']}")
+    per_rule = " ".join(f"{k}={v}" for k, v in counts["per_rule"].items())
+    status = "OK" if report["ok"] else "FAIL"
+    print(
+        f"qlint: {status} — {counts['new']} new, {counts['baselined']} "
+        f"baselined/suppressed over {report['files_selected']} files "
+        f"({report['elapsed_s']}s; {per_rule})"
+    )
+    if report["stale_baseline_keys"]:
+        print(
+            f"qlint: note — {len(report['stale_baseline_keys'])} stale "
+            "baseline entr(ies); run --prune-baseline"
+        )
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

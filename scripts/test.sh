@@ -2,26 +2,27 @@
 # Tier-1 test entry: one command, correct env.
 #
 #   scripts/test.sh                 # full tier-1 suite
-#   scripts/test.sh --tier2         # tier-1 + benchmark smoke paths
+#   scripts/test.sh --tier2         # tier-1 + benchmark smoke + qlint
 #   scripts/test.sh tests/test_kernels.py -k qsketch   # pass-through args
 #
 # - PYTHONPATH=src so `repro` imports without an install step.
 # - XLA_FLAGS exposes 8 host devices (per SNIPPETS.md) so mesh/sharding tests
 #   exercise multi-device code paths on a CPU-only box; an existing
 #   XLA_FLAGS setting is preserved and extended.
-# - --tier2 additionally (1) audits public docstrings in core/ +
-#   sketchstream/ + kernels/ (scripts/check_docstrings.py — the shape/dtype
-#   and merge contracts live there), (2) enforces the estimation layering:
-#   containers and monitors must solve histograms through core/estimation.py
-#   (DESIGN.md §8.7), never by calling estimators.qsketch_mle themselves —
-#   a direct call would bypass the solver registry, the routed ×m scaling,
-#   and the untouched-row guard, (3) runs `python -m benchmarks.run --smoke`
-#   (the quick profile over the fast suites, incl. the sharded SketchArray /
+# - --tier2 additionally (1) runs `python -m benchmarks.run --smoke` (the
+#   quick profile over the fast suites, incl. the sharded SketchArray /
 #   DynArray / WindowArray sweeps and the estimation solver sweep) so CI
 #   catches benchmark-path rot without paying for the paper-scale sweeps,
-#   then (4) asserts the cumulative bench-JSON schema (required keys,
-#   unique + monotone K per group) so a broken cumulative merge fails
-#   loudly instead of silently dropping or duplicating rows.
+#   then (2) runs the qlint static-analysis suite (scripts/check_static.py,
+#   DESIGN.md §9): the estimation-layering rule (containers solve
+#   histograms only through core/estimation.py — this replaced the old
+#   qsketch_mle grep, which could not see through import aliases or cover
+#   kernels/), int8-overflow, donation-safety, jit-purity, kernel-contract,
+#   the public-docstring audit, and the cumulative bench-JSON schema check
+#   (which is why qlint runs AFTER the smoke benchmarks). The JSON report
+#   lands in experiments/analysis/report.json; any finding that is neither
+#   baselined (scripts/qlint_baseline.json) nor inline-suppressed fails
+#   the build.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -37,20 +38,8 @@ fi
 python -m pytest -x -q "$@"
 
 if [[ "$tier2" == 1 ]]; then
-  echo "== tier-2: public docstring audit =="
-  python scripts/check_docstrings.py
-  echo "== tier-2: estimation layering check =="
-  # Only the estimation layer may call the raw Newton solver; everything
-  # else goes through estimation.estimate_* (solver registry + guards).
-  if grep -rn "qsketch_mle" src/repro/core src/repro/sketchstream \
-      --include='*.py' \
-      --exclude=estimation.py --exclude=estimators.py; then
-    echo "FAIL: call estimators.qsketch_mle only via core/estimation.py" >&2
-    exit 1
-  fi
-  echo "layering: OK"
   echo "== tier-2: benchmark smoke paths =="
   python -m benchmarks.run --smoke
-  echo "== tier-2: bench JSON schema =="
-  python scripts/check_bench_schema.py
+  echo "== tier-2: qlint static analysis =="
+  python scripts/check_static.py
 fi

@@ -1,0 +1,37 @@
+"""qlint — the repo's AST-based static-analysis suite (DESIGN.md §9).
+
+QSketch's correctness story rests on contracts a unit test can't see from
+the outside: int8 register arithmetic must upcast before any additive op,
+donated buffers must never be read after the donating call, nothing
+host-impure may hide inside a jit region, Pallas kernels must keep their
+Ref/BlockSpec discipline, and only ``core/estimation.py`` may touch the raw
+Newton solver. qlint machine-checks those contracts over the source tree:
+
+* ``registry``   — rule registration + lookup,
+* ``findings``   — the Finding record (rule, file, line, message) and its
+  stable baseline key,
+* ``astutil``    — shared AST helpers (module naming, import/alias
+  resolution, dotted-name chains),
+* ``baseline``   — the checked-in suppression file for grandfathered
+  findings (``scripts/qlint_baseline.json``),
+* ``runner``     — file collection (full-repo / changed-only), rule
+  execution, JSON report writing,
+* ``rules/``     — the rule implementations (layering, int8-overflow,
+  donation-safety, jit-purity, kernel-contract, docstrings, bench-schema).
+
+Entry point: ``scripts/check_static.py`` (wired into
+``scripts/test.sh --tier2``); exits non-zero on any non-baselined finding.
+"""
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import all_rules, get_rule, rule_names
+from repro.analysis.runner import build_context, run_qlint
+
+__all__ = [
+    "Finding",
+    "all_rules",
+    "get_rule",
+    "rule_names",
+    "build_context",
+    "run_qlint",
+]

@@ -1,0 +1,163 @@
+"""Shared AST helpers for qlint rules.
+
+The rules never import the code under analysis (a broken module must still
+report precisely, and analysis must stay side-effect free), so everything
+here is pure-syntax machinery:
+
+* ``module_name_for`` — repo-relative path -> dotted module name
+  (``src/repro/core/dyn_array.py`` -> ``repro.core.dyn_array``),
+* ``dotted`` — collapse a Name/Attribute chain to ``"a.b.c"``,
+* ``ImportMap`` — per-module local-name -> fully-qualified-name table built
+  from ``import`` / ``from ... import`` (relative imports resolved against
+  the module's package) plus simple module-level aliases
+  (``solve = estimators.qsketch_mle``); ``resolve`` rewrites an expression's
+  dotted chain through it,
+* ``walk_functions`` — every (qualname, def-node) in a module, including
+  nested defs and methods.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+
+def module_name_for(rel: str) -> str:
+    """Dotted module name for a repo-relative posix path.
+
+    ``src/`` is the import root for ``repro``; top-level ``benchmarks/`` and
+    ``examples/`` are importable as themselves. ``__init__.py`` maps to the
+    package name.
+    """
+    parts = rel.split("/")
+    if parts[0] == "src":
+        parts = parts[1:]
+    if parts[-1] == "__init__.py":
+        parts = parts[:-1]
+    elif parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][:-3]
+    return ".".join(parts)
+
+
+def dotted(node: ast.AST) -> str | None:
+    """``"a.b.c"`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class ImportMap:
+    """Local-name -> fully-qualified dotted name for one module.
+
+    Built from the module's import statements and simple ``name = <dotted>``
+    aliases at any nesting level (an alias of an already-resolvable chain is
+    folded in, so ``e = estimators; f = e.qsketch_mle`` resolves fully).
+    """
+
+    def __init__(self, tree: ast.Module, module_name: str):
+        self.module_name = module_name
+        self.names: dict[str, str] = {}
+        self._build(tree)
+
+    def _package_parts(self, level: int) -> list[str]:
+        parts = self.module_name.split(".")
+        # A non-package module's level-1 base is its containing package.
+        parts = parts[:-1]
+        if level > 1:
+            parts = parts[: len(parts) - (level - 1)]
+        return parts
+
+    def _build(self, tree: ast.Module) -> None:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.asname:
+                        self.names[alias.asname] = alias.name
+                    else:
+                        # ``import a.b.c`` binds the root name ``a``.
+                        root = alias.name.split(".")[0]
+                        self.names.setdefault(root, root)
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:
+                    base = ".".join(
+                        self._package_parts(node.level)
+                        + ([node.module] if node.module else [])
+                    )
+                else:
+                    base = node.module or ""
+                for alias in node.names:
+                    if alias.name == "*":
+                        continue
+                    local = alias.asname or alias.name
+                    self.names[local] = f"{base}.{alias.name}" if base else alias.name
+        # Fold in simple aliases (one fixpoint pass is enough for chains
+        # written in source order, which is all the repo uses).
+        for _ in range(2):
+            for node in ast.walk(tree):
+                if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                    continue
+                target = node.targets[0]
+                if not isinstance(target, ast.Name):
+                    continue
+                qual = self.resolve(node.value)
+                if qual and qual != target.id:
+                    self.names.setdefault(target.id, qual)
+
+    def resolve(self, node: ast.AST) -> str | None:
+        """Fully-qualified name of an expression's dotted chain, or None."""
+        d = dotted(node)
+        if d is None:
+            return None
+        head, _, rest = d.partition(".")
+        base = self.names.get(head)
+        if base is None:
+            return None
+        return f"{base}.{rest}" if rest else base
+
+
+def walk_functions(
+    tree: ast.Module,
+) -> Iterator[tuple[str, ast.FunctionDef | ast.AsyncFunctionDef]]:
+    """Yield (qualname, def-node) for every function, methods and nested
+    defs included (``Class.method``, ``outer.<locals>.inner``)."""
+
+    def visit(node: ast.AST, prefix: str) -> Iterator:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{child.name}"
+                yield qual, child
+                yield from visit(child, f"{qual}.<locals>.")
+            elif isinstance(child, ast.ClassDef):
+                yield from visit(child, f"{prefix}{child.name}.")
+            else:
+                yield from visit(child, prefix)
+
+    yield from visit(tree, "")
+
+
+def call_keyword(call: ast.Call, name: str) -> ast.expr | None:
+    """The value of keyword ``name`` in a call, or None."""
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def literal_int_tuple(node: ast.expr | None) -> tuple[int, ...] | None:
+    """Evaluate a literal tuple/int of ints (``(0, 1)`` or ``0``), else None."""
+    if node is None:
+        return None
+    try:
+        val = ast.literal_eval(node)
+    except (ValueError, SyntaxError):
+        return None
+    if isinstance(val, int):
+        return (val,)
+    if isinstance(val, tuple) and all(isinstance(v, int) for v in val):
+        return val
+    return None

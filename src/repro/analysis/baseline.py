@@ -1,0 +1,87 @@
+"""The qlint baseline: checked-in suppressions for grandfathered findings.
+
+Policy (DESIGN.md §9): a finding lands in the baseline only with a written
+justification — either the flagged code is deliberately outside the
+contract (e.g. a documented host-side entry point the purity rule's
+conservative reachability over-approximates) or fixing it is tracked
+elsewhere. Entries match on the finding's line-number-free key
+(``rule::path::message``), so they survive unrelated edits but die with the
+code they excuse: rename the symbol or fix the site and the entry goes
+stale (``--prune-baseline`` drops stale entries).
+
+File format (``scripts/qlint_baseline.json``)::
+
+    {"entries": [{"key": "...", "justification": "..."}]}
+
+Inline escape hatch: a ``# qlint: disable=<rule>`` comment on the finding
+line suppresses it without a baseline entry — for single sites where the
+justification reads best next to the code.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+
+from repro.analysis.findings import Finding
+
+_INLINE = re.compile(r"#\s*qlint:\s*disable=([\w,\- ]+)")
+
+
+class Baseline:
+    """In-memory view of the suppression file (missing file = empty)."""
+
+    def __init__(self, path: str | None):
+        self.path = path
+        self.entries: dict[str, str] = {}
+        if path and os.path.exists(path):
+            with open(path) as f:
+                data = json.load(f)
+            for entry in data.get("entries", []):
+                self.entries[entry["key"]] = entry.get("justification", "")
+
+    def justification(self, finding: Finding) -> str | None:
+        """The entry's justification if ``finding`` is baselined, else None."""
+        return self.entries.get(finding.key)
+
+    def stale_keys(self, findings: list[Finding]) -> list[str]:
+        """Baseline entries no current finding matches (candidates to prune)."""
+        live = {f.key for f in findings}
+        return [k for k in self.entries if k not in live]
+
+    def save(self, path: str | None = None) -> None:
+        """Write the entries back out, sorted by key."""
+        path = path or self.path
+        assert path is not None
+        data = {
+            "_policy": (
+                "Every entry needs a justification (DESIGN.md §9). Keys are "
+                "rule::path::message (no line numbers)."
+            ),
+            "entries": [
+                {"key": k, "justification": v}
+                for k, v in sorted(self.entries.items())
+            ],
+        }
+        with open(path, "w") as f:
+            json.dump(data, f, indent=2)
+            f.write("\n")
+
+
+def inline_suppressed(finding: Finding, source_lines: list[str]) -> bool:
+    """True if ``# qlint: disable=<rule>`` sits on the finding's line or on
+    a comment-only line immediately above it."""
+    if not 1 <= finding.line <= len(source_lines):
+        return False
+    candidates = [source_lines[finding.line - 1]]
+    prev = source_lines[finding.line - 2] if finding.line >= 2 else ""
+    if prev.lstrip().startswith("#"):
+        candidates.append(prev)
+    for text in candidates:
+        m = _INLINE.search(text)
+        if m:
+            rules = {r.strip() for r in m.group(1).split(",")}
+            if finding.rule in rules or "all" in rules:
+                return True
+    return False

@@ -1,0 +1,34 @@
+"""The Finding record qlint rules emit, and its stable baseline key.
+
+A finding pins (rule, repo-relative path, 1-based line, message). The
+baseline key deliberately EXCLUDES the line number — grandfathered findings
+must survive unrelated edits above them — so rule messages must themselves
+be stable (symbol names, not line numbers or column offsets, in the text).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at a source location.
+
+    ``path`` is repo-relative with forward slashes; ``message`` must be
+    deterministic and line-number-free (it is part of the baseline key).
+    """
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    @property
+    def key(self) -> str:
+        """Stable identity used by the baseline file: rule::path::message."""
+        return f"{self.rule}::{self.path}::{self.message}"
+
+    def format(self) -> str:
+        """Human-readable one-liner: ``path:line: [rule] message``."""
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"

@@ -1,0 +1,65 @@
+"""qlint rule registry.
+
+A rule is a class with ``name`` / ``description`` attributes and a
+``run(ctx) -> list[Finding]`` method; ``@register`` adds it to the global
+table the runner iterates. Rules receive the full parsed Context (so
+cross-module facts — import graphs, jit reachability — are available) and
+are responsible for restricting findings to ``ctx.is_selected`` paths so
+``--changed-only`` stays cheap and precise.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Type
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.analysis.findings import Finding
+    from repro.analysis.runner import Context
+
+_RULES: dict[str, "Rule"] = {}
+
+
+class Rule:
+    """Base class for qlint rules (subclass, set ``name``/``description``,
+    implement ``run``)."""
+
+    name: str = ""
+    description: str = ""
+
+    def run(self, ctx: "Context") -> "list[Finding]":
+        """Analyze the context and return findings (selected files only)."""
+        raise NotImplementedError
+
+
+def register(cls: Type[Rule]) -> Type[Rule]:
+    """Class decorator adding one instance of ``cls`` to the registry."""
+    inst = cls()
+    if not inst.name:
+        raise ValueError(f"rule {cls.__name__} has no name")
+    if inst.name in _RULES:
+        raise ValueError(f"duplicate rule name {inst.name!r}")
+    _RULES[inst.name] = inst
+    return cls
+
+
+def _ensure_loaded() -> None:
+    # Importing the rules package populates the registry as a side effect.
+    from repro.analysis import rules  # noqa: F401
+
+
+def all_rules() -> list[Rule]:
+    """Every registered rule, in registration order."""
+    _ensure_loaded()
+    return list(_RULES.values())
+
+
+def rule_names() -> list[str]:
+    """Names of every registered rule."""
+    _ensure_loaded()
+    return list(_RULES)
+
+
+def get_rule(name: str) -> Rule:
+    """Look up one rule by name (KeyError on unknown)."""
+    _ensure_loaded()
+    return _RULES[name]

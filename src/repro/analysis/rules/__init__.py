@@ -1,0 +1,16 @@
+"""qlint rule implementations — importing this package registers them all.
+
+Order here is report order: contract rules first (layering, int8-overflow,
+donation-safety, jit-purity, kernel-contract), then the folded-in legacy
+audits (docstrings, bench-schema).
+"""
+
+from repro.analysis.rules import (  # noqa: F401
+    layering,
+    int8_overflow,
+    donation,
+    purity,
+    kernel_contract,
+    docstrings,
+    bench_schema,
+)

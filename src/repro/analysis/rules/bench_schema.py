@@ -1,0 +1,145 @@
+"""bench-schema — the cumulative bench JSONs keep their merge contract.
+
+The sweep suites merge quick/smoke re-measurements into their JSON so cheap
+runs never erase the paper-scale rows a ``--full`` run paid for
+(``benchmarks/common.merge_save``). A broken merge fails SILENTLY at bench
+time — duplicate cells, dropped rows, unsorted output — and only shows up
+when someone plots stale data. This rule makes it fail loudly:
+
+* every row carries the required keys ("figure", "method", and a numeric
+  payload among mops/ms/x/us/sustained_mops),
+* within each (figure, method[, e][, bsz]) group the swept "k" values are
+  unique and strictly increasing (merge_save sorts; a duplicate k means two
+  merges claimed the same cell, out-of-order means someone bypassed
+  merge_save),
+* in a full run, every cumulative file the smoke suite maintains must
+  exist.
+
+This rule absorbs the former standalone ``scripts/check_bench_schema.py``
+(which now delegates here). It is a repo-level (non-AST) rule: in
+``--changed-only`` mode it only runs when a bench JSON is in the selection.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Rule, register
+
+BENCH_DIR = "experiments/bench"
+
+# Files written through common.merge_save — the cumulative-merge contract.
+CUMULATIVE = (
+    "dyn_array.json",
+    "dyn_array_sharded.json",
+    "estimation.json",
+    "ingest.json",
+    "window_array.json",
+    "window_array_sharded.json",
+)
+PAYLOAD_KEYS = ("mops", "ms", "x", "us", "sustained_mops")
+
+
+def check_rows(rel: str, rows, rule_name: str = "bench-schema") -> list[Finding]:
+    """Schema findings for one bench JSON's row list."""
+    findings = []
+    if not isinstance(rows, list) or not rows:
+        return [Finding(rule_name, rel, 1, "expected a non-empty list of row dicts")]
+    groups: dict[tuple, list] = {}
+    for i, r in enumerate(rows):
+        for key in ("figure", "method"):
+            if not isinstance(r.get(key), str):
+                findings.append(
+                    Finding(rule_name, rel, 1, f"row missing/non-string '{key}': {r}")
+                )
+        if not any(isinstance(r.get(p), (int, float)) for p in PAYLOAD_KEYS):
+            findings.append(
+                Finding(
+                    rule_name, rel, 1,
+                    f"row has no numeric payload among {PAYLOAD_KEYS}: {r}",
+                )
+            )
+        if "k" in r and not isinstance(r["k"], int):
+            findings.append(
+                Finding(rule_name, rel, 1, f"non-integer sweep key 'k': {r}")
+            )
+        # "e" splits the window-suite ring sweeps; "bsz" splits the ingest
+        # batch-size sweep — within each group k must stay unique + monotone.
+        groups.setdefault(
+            (r.get("figure"), r.get("method"), r.get("e"), r.get("bsz")), []
+        ).append(r)
+    for (figure, method, e, bsz), rs in groups.items():
+        ks = [r["k"] for r in rs if "k" in r]
+        tag = (
+            f"{figure}/{method}"
+            + (f"/e={e}" if e is not None else "")
+            + (f"/bsz={bsz}" if bsz is not None else "")
+        )
+        if len(ks) != len(set(ks)):
+            dupes = sorted({k for k in ks if ks.count(k) > 1})
+            findings.append(
+                Finding(
+                    rule_name, rel, 1,
+                    f"{tag}: duplicate k cells {dupes} (broken cumulative merge)",
+                )
+            )
+        if ks != sorted(ks):
+            findings.append(
+                Finding(rule_name, rel, 1, f"{tag}: k not monotone increasing: {ks}")
+            )
+    return findings
+
+
+@register
+class BenchSchemaRule(Rule):
+    """Validate the cumulative bench JSONs under experiments/bench."""
+
+    name = "bench-schema"
+    description = (
+        "cumulative bench JSONs: required keys, numeric payload, unique + "
+        "monotone k per (figure, method, e, bsz) group"
+    )
+
+    def run(self, ctx) -> list[Finding]:
+        """Run the rule over the context's selected modules."""
+        bench_dir = os.path.join(ctx.root, BENCH_DIR)
+        findings: list[Finding] = []
+        if ctx.selected is not None:
+            # Same scope as a full run: only the merge_save-maintained files
+            # carry this contract (other bench JSONs use their own payloads).
+            targets = sorted(
+                p for p in ctx.selected
+                if p.startswith(BENCH_DIR + "/")
+                and os.path.basename(p) in CUMULATIVE
+            )
+            # Nothing bench-related changed: the rule has nothing to say.
+        else:
+            targets = [
+                f"{BENCH_DIR}/{f}"
+                for f in CUMULATIVE
+                if os.path.exists(os.path.join(bench_dir, f))
+            ]
+            for f in CUMULATIVE:
+                if not os.path.exists(os.path.join(bench_dir, f)):
+                    findings.append(
+                        Finding(
+                            self.name, f"{BENCH_DIR}/{f}", 1,
+                            "expected cumulative bench file is missing",
+                        )
+                    )
+        for rel in targets:
+            path = os.path.join(ctx.root, rel)
+            if not os.path.exists(path):
+                continue
+            with open(path) as f:
+                try:
+                    rows = json.load(f)
+                except json.JSONDecodeError as e:
+                    findings.append(
+                        Finding(self.name, rel, 1, f"invalid JSON: {e.msg}")
+                    )
+                    continue
+            findings += check_rows(rel, rows, self.name)
+        return findings

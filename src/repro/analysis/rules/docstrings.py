@@ -1,0 +1,92 @@
+"""docstrings — every public symbol in the sketch library is documented.
+
+The library's contracts live in docstrings — shape/dtype conventions
+(int8[K, m] registers, touched-register histograms, replicated ring
+scalars), merge semantics (max monoid vs martingale additivity), and
+padding/masking rules. A public function without one is an API the next
+reader has to reverse-engineer, so tier-2 fails the build instead.
+
+Checked per module: the module docstring, public module-level functions
+and classes, and public methods of public classes (dunders and private
+helpers exempt — the class docstring owns construction). Scope: ``core/``,
+``sketchstream/``, ``kernels/``, and ``analysis/`` itself (qlint eats its
+own dog food).
+
+This rule absorbs the former standalone ``scripts/check_docstrings.py``
+(which now delegates here).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Rule, register
+
+SCOPE = (
+    "src/repro/core/",
+    "src/repro/sketchstream/",
+    "src/repro/kernels/",
+    "src/repro/analysis/",
+)
+
+
+def _is_public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def check_tree(tree: ast.Module, rel: str, rule_name: str = "docstrings") -> list[Finding]:
+    """Findings for every missing docstring in one parsed module."""
+    findings = []
+    if not ast.get_docstring(tree):
+        findings.append(Finding(rule_name, rel, 1, "missing module docstring"))
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if _is_public(node.name) and not ast.get_docstring(node):
+                findings.append(
+                    Finding(
+                        rule_name, rel, node.lineno,
+                        f"function '{node.name}' has no docstring",
+                    )
+                )
+        elif isinstance(node, ast.ClassDef) and _is_public(node.name):
+            if not ast.get_docstring(node):
+                findings.append(
+                    Finding(
+                        rule_name, rel, node.lineno,
+                        f"class '{node.name}' has no docstring",
+                    )
+                )
+            for item in node.body:
+                if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                if item.name.startswith("_"):  # dunders + private helpers
+                    continue
+                if not ast.get_docstring(item):
+                    findings.append(
+                        Finding(
+                            rule_name, rel, item.lineno,
+                            f"method '{node.name}.{item.name}' has no docstring",
+                        )
+                    )
+    return findings
+
+
+@register
+class DocstringsRule(Rule):
+    """Flag missing docstrings on public symbols across the library scope."""
+
+    name = "docstrings"
+    description = (
+        "module, public function/class, and public-method docstrings are "
+        "required in core/, sketchstream/, kernels/, analysis/"
+    )
+
+    def run(self, ctx) -> list[Finding]:
+        """Run the rule over the context's selected modules."""
+        findings: list[Finding] = []
+        for mod in ctx.iter_modules(SCOPE):
+            if not ctx.is_selected(mod.rel):
+                continue
+            findings += check_tree(mod.tree, mod.rel, self.name)
+        return findings

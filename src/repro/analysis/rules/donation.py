@@ -1,0 +1,327 @@
+"""donation-safety — donated buffers are dead after the donating call.
+
+The ingest pipeline's steady-state speed comes from ``donate_argnums`` /
+``donate=True`` in-place updates (DESIGN.md §8.8): XLA aliases the donated
+input's buffer to the output, so the caller's reference is *invalidated* at
+dispatch. Reading it afterwards is either a runtime "donated buffer" error
+or — worse, under some backends — silent garbage. Two checks:
+
+1. **use-after-donate**: inside one function, after a donating call, the
+   donated argument must not be read again unless the same statement (or a
+   later one, before the read) rebinds it — the canonical safe shape is
+   ``state = update_batch(cfg, state, ..., donate=True)``.
+2. **donating entry points return the new buffer**: a function wrapped by
+   ``jax.jit(fn, donate_argnums=...)`` must contain a value-returning
+   ``return`` — donation with no returned successor strands the caller
+   with nothing but the dead input.
+
+Donating callees are recognized three ways:
+
+* names bound to ``jax.jit(..., donate_argnums=(i, ...))`` at module or
+  ``self.X = ...`` scope (donated positions = the literal tuple),
+* calls carrying ``donate=True`` whose callee resolves to a project
+  function: the donated argument is the one bound to the callee's ``state``
+  parameter (the repo-wide convention for every donate-capable entry);
+  unresolvable callees fall back to flagging args literally named
+  ``state``/``st``,
+* calls of factory results (``make_donating(...)(state, ...)``) where the
+  factory's return statement is ``jax.jit(..., donate_argnums=...)``.
+
+Linear statement order approximates control flow; branch-crossing false
+positives go to the baseline with justification.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import ImportMap, call_keyword, dotted, literal_int_tuple
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Rule, register
+
+SCOPE = ("src/repro/", "benchmarks/", "examples/")
+
+
+def _donate_argnums(call: ast.Call, imap: ImportMap) -> tuple[int, ...] | None:
+    """Donated positions if ``call`` is jax.jit(..., donate_argnums=...)."""
+    if imap.resolve(call.func) != "jax.jit":
+        return None
+    return literal_int_tuple(call_keyword(call, "donate_argnums"))
+
+
+def _param_index(fn: ast.FunctionDef, name: str) -> int | None:
+    params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    return params.index(name) if name in params else None
+
+
+def _positional_arg(call: ast.Call, idx: int) -> ast.expr | None:
+    if idx < len(call.args):
+        a = call.args[idx]
+        return None if isinstance(a, ast.Starred) else a
+    return None
+
+
+class _ProjectIndex:
+    """Cross-module lookup of function defs + donating-name registries."""
+
+    def __init__(self, ctx):
+        self.ctx = ctx
+        self.defs: dict[str, dict[str, ast.FunctionDef]] = {}  # mod -> top-level defs
+        self.donating: dict[str, dict[str, tuple[int, ...]]] = {}  # mod -> name -> pos
+        for mod in ctx.iter_modules(SCOPE):
+            imap = ImportMap(mod.tree, mod.name)
+            defs: dict[str, ast.FunctionDef] = {}
+            donating: dict[str, tuple[int, ...]] = {}
+            for node in mod.tree.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    defs[node.name] = node
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Assign) or not isinstance(
+                    node.value, ast.Call
+                ):
+                    continue
+                pos = _donate_argnums(node.value, imap)
+                if pos is None:
+                    continue
+                for target in node.targets:
+                    d = dotted(target)
+                    if d is not None:
+                        donating[d] = pos
+            self.defs[mod.name] = defs
+            self.donating[mod.name] = donating
+
+    def resolve_def(
+        self, call: ast.Call, mod, imap: ImportMap
+    ) -> ast.FunctionDef | None:
+        """The project function def a call's callee resolves to, if any."""
+        func = call.func
+        if isinstance(func, ast.Name):
+            return self.defs.get(mod.name, {}).get(func.id)
+        qual = imap.resolve(func)
+        if qual is None:
+            return None
+        owner, _, leaf = qual.rpartition(".")
+        return self.defs.get(owner, {}).get(leaf)
+
+    def factory_donates(self, fn: ast.FunctionDef, imap: ImportMap) -> tuple[int, ...] | None:
+        """Donated positions of the callable a factory returns, if its
+        return statement is a literal jax.jit(..., donate_argnums=...)."""
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Return) and isinstance(node.value, ast.Call):
+                pos = _donate_argnums(node.value, imap)
+                if pos is not None:
+                    return pos
+        return None
+
+
+def _donated_args(
+    call: ast.Call, mod, imap: ImportMap, index: _ProjectIndex
+) -> list[ast.expr]:
+    """Argument expressions whose buffers this call donates (possibly [])."""
+    out: list[ast.expr] = []
+    callee = dotted(call.func)
+
+    # 1. Known donating name (module-level or self.X registry).
+    if callee is not None:
+        pos = index.donating.get(mod.name, {}).get(callee)
+        if pos is None and "." in callee:
+            qual = imap.resolve(call.func)
+            if qual is not None:
+                owner, _, leaf = qual.rpartition(".")
+                pos = index.donating.get(owner, {}).get(leaf)
+        if pos is not None:
+            out += [a for i in pos if (a := _positional_arg(call, i)) is not None]
+            return out
+
+    # 2. donate=True convention: the callee's ``state`` parameter.
+    donate_kw = call_keyword(call, "donate")
+    if isinstance(donate_kw, ast.Constant) and donate_kw.value is True:
+        fn = index.resolve_def(call, mod, imap)
+        if fn is not None:
+            for pname in ("state", "st"):
+                idx = _param_index(fn, pname)
+                if idx is not None:
+                    kwarg = call_keyword(call, pname)
+                    arg = kwarg if kwarg is not None else _positional_arg(call, idx)
+                    if arg is not None:
+                        out.append(arg)
+                    break
+        else:
+            out += [
+                a
+                for a in call.args
+                if not isinstance(a, ast.Starred)
+                and (dotted(a) or "").split(".")[-1] in ("state", "st")
+            ]
+        return out
+
+    # 3. Factory-result call: make_donating(...)(state, ...).
+    if isinstance(call.func, ast.Call):
+        fn = index.resolve_def(call.func, mod, imap)
+        if fn is not None:
+            pos = index.factory_donates(fn, imap)
+            if pos is not None:
+                out += [a for i in pos if (a := _positional_arg(call, i)) is not None]
+    return out
+
+
+def _pos(node: ast.AST) -> tuple[int, int]:
+    return (getattr(node, "end_lineno", node.lineno), getattr(node, "end_col_offset", 0))
+
+
+@register
+class DonationSafetyRule(Rule):
+    """Flag reads of donated arguments after the donating call, and
+    donating jit wrappers whose impl never returns a value."""
+
+    name = "donation-safety"
+    description = (
+        "a donated buffer is dead after the donating call: rebind it from "
+        "the result, never read the old reference"
+    )
+
+    def run(self, ctx) -> list[Finding]:
+        """Run the rule over the context's selected modules."""
+        index = _ProjectIndex(ctx)
+        findings: list[Finding] = []
+        for mod in ctx.iter_modules(SCOPE):
+            if not ctx.is_selected(mod.rel):
+                continue
+            imap = ImportMap(mod.tree, mod.name)
+            findings += self._check_returns(mod, imap, index)
+            for _, fn in self._functions(mod.tree):
+                findings += self._check_function(fn, mod, imap, index)
+        return findings
+
+    @staticmethod
+    def _functions(tree: ast.Module):
+        from repro.analysis.astutil import walk_functions
+
+        return list(walk_functions(tree))
+
+    def _check_returns(self, mod, imap, index) -> list[Finding]:
+        out = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            pos = _donate_argnums(node, imap)
+            if pos is None or not node.args:
+                continue
+            target = node.args[0]
+            fn: ast.FunctionDef | None = None
+            if isinstance(target, ast.Name):
+                fn = index.defs.get(mod.name, {}).get(target.id)
+                if fn is None:
+                    # Local def in an enclosing function.
+                    for _, cand in self._functions(mod.tree):
+                        if cand.name == target.id:
+                            fn = cand
+                            break
+            elif isinstance(target, ast.Call) and imap.resolve(target.func) in (
+                "functools.partial",
+                "partial",
+            ):
+                inner = target.args[0] if target.args else None
+                if isinstance(inner, ast.Name):
+                    fn = index.defs.get(mod.name, {}).get(inner.id)
+            if fn is None:
+                continue
+            if not any(
+                isinstance(n, ast.Return) and n.value is not None
+                for n in ast.walk(fn)
+            ):
+                out.append(
+                    Finding(
+                        self.name,
+                        mod.rel,
+                        node.lineno,
+                        f"jax.jit donates into '{fn.name}' which never returns "
+                        "a value — the donated buffer's successor is lost",
+                    )
+                )
+        return out
+
+    def _check_function(self, fn, mod, imap, index) -> list[Finding]:
+        out: list[Finding] = []
+        # Events: (position, kind, dotted-name, node)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            donated = _donated_args(node, mod, imap, index)
+            if not donated:
+                continue
+            names = {d for a in donated if (d := dotted(a)) is not None}
+            if not names:
+                continue
+            # A donating call inside a ``return`` leaves the function on its
+            # own path — syntactically-later reads are other branches.
+            if any(
+                isinstance(ret, ast.Return)
+                and ret.value is not None
+                and any(n is node for n in ast.walk(ret.value))
+                for ret in ast.walk(fn)
+            ):
+                continue
+            # Same-statement rebinding (state = f(state, donate=True)).
+            stmt = self._enclosing_assign(fn, node)
+            if stmt is not None:
+                targets = (
+                    stmt.targets if isinstance(stmt, ast.Assign) else [stmt.target]
+                )
+                for t in targets:
+                    for tn in ast.walk(t):
+                        d = dotted(tn)
+                        if d in names:
+                            names.discard(d)
+            if not names:
+                continue
+            out += self._reads_after(fn, node, names, mod)
+        return out
+
+    @staticmethod
+    def _enclosing_assign(fn, call: ast.Call):
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                if any(n is call for n in ast.walk(node.value or node)):
+                    return node
+        return None
+
+    def _reads_after(self, fn, call: ast.Call, names: set[str], mod) -> list[Finding]:
+        out = []
+        cpos = _pos(call)
+        # First rebinding position per name bounds the scan.
+        rebound: dict[str, tuple[int, int]] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                for t in node.targets if isinstance(node, ast.Assign) else [node.target]:
+                    for tn in ast.walk(t):
+                        d = dotted(tn)
+                        if d in names and _pos(tn) > cpos:
+                            p = _pos(tn)
+                            if d not in rebound or p < rebound[d]:
+                                rebound[d] = p
+        for node in ast.walk(fn):
+            d = dotted(node)
+            if d not in names:
+                continue
+            if not isinstance(
+                getattr(node, "ctx", None), ast.Load
+            ):
+                continue
+            p = (node.lineno, node.col_offset)
+            if p <= cpos:
+                continue
+            bound = rebound.get(d)
+            if bound is not None and p > bound:
+                continue
+            out.append(
+                Finding(
+                    self.name,
+                    mod.rel,
+                    node.lineno,
+                    f"'{d}' is read after being donated to "
+                    f"'{dotted(call.func) or '<call>'}' — the buffer is dead; "
+                    "rebind from the call's result first",
+                )
+            )
+        return out

@@ -1,0 +1,235 @@
+"""int8-overflow — no additive arithmetic on int8 register arrays.
+
+QSketch registers are quantized to ``int8[m]`` (the paper's whole memory
+win); the max monoid is closed on int8 so scatter-max / union / compare are
+safe at native width, but ``+``, ``-``, ``*``, ``sum`` & friends overflow at
++-127 and *silently wrap* under jnp — corrupting histograms and estimates
+without any test failing at small scale. The repo convention is therefore:
+**upcast to int32 (or float) before any additive op** (e.g.
+``state.regs.astype(jnp.int32) - cfg.r_min``). This rule enforces it over
+``core/`` and ``kernels/``.
+
+Taint model (per function, linear flow):
+
+* int8 sources — ``.astype(jnp.int8)``, array creation with
+  ``dtype=jnp.int8``, and (convention) names/attributes called ``regs`` /
+  ``union_regs`` / ``*_regs`` with no contrary local evidence,
+* cleansers — ``.astype(<non-int8>)``, creation with a non-int8 dtype;
+  assignment re-types the target name,
+* propagation — subscripts, ``jnp.where/maximum/minimum/pad/clip/...``,
+  max/min reductions (still int8, still safe),
+* violations — BinOp/AugAssign with ``+ - * / // % **``, unary ``-``, and
+  additive reductions (``sum``, ``cumsum``, ``prod``, ``dot``, ``mean``,
+  ``matmul``, ``einsum``, ``tensordot``) on a tainted operand.
+
+The name convention over-approximates (``FloatSketchState.regs`` is f32 by
+design — the LM baseline's min-register sketch); such sites carry a
+baseline entry with the justification rather than weakening the rule.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import call_keyword, dotted
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Rule, register
+
+SCOPE = ("src/repro/core/", "src/repro/kernels/", "src/repro/sketchstream/")
+
+INT8_NAME_HINTS = ("regs", "union_regs")
+ARITH_REDUCTIONS = {
+    "sum", "cumsum", "prod", "cumprod", "dot", "mean", "average",
+    "matmul", "einsum", "tensordot",
+}
+PROPAGATING = {
+    "where", "maximum", "minimum", "max", "min", "pad", "clip", "roll",
+    "reshape", "concatenate", "stack", "broadcast_to", "transpose", "flip",
+    "take", "take_along_axis", "squeeze", "expand_dims",
+}
+_ARITH_OPS = (ast.Add, ast.Sub, ast.Mult, ast.Div, ast.FloorDiv, ast.Mod, ast.Pow)
+
+# Tri-state taint.
+INT8, OTHER = "int8", "other"
+
+
+def _name_hints_int8(name: str) -> bool:
+    return name in INT8_NAME_HINTS or name.endswith("_regs")
+
+
+def _dtype_of(node: ast.expr | None) -> str | None:
+    """'int8' / 'other' for an explicit dtype expression, None if unknown."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return INT8 if node.value == "int8" else OTHER
+    d = dotted(node)
+    if d is None:
+        return None
+    leaf = d.rsplit(".", 1)[-1]
+    if leaf == "int8":
+        return INT8
+    known = {
+        "int16", "int32", "int64", "uint8", "uint16", "uint32", "uint64",
+        "float16", "bfloat16", "float32", "float64", "float_", "bool_",
+    }
+    return OTHER if leaf in known else None
+
+
+class _FunctionChecker(ast.NodeVisitor):
+    """Linear-flow int8 taint over one function (or the module body)."""
+
+    def __init__(self, rule: str, rel: str):
+        self.rule = rule
+        self.rel = rel
+        self.env: dict[str, str] = {}
+        self.findings: list[Finding] = []
+
+    # -- taint evaluation --------------------------------------------------
+
+    def taint(self, node: ast.expr) -> str:
+        """INT8 if the expression may be an int8 register array."""
+        if isinstance(node, ast.Name):
+            got = self.env.get(node.id)
+            if got is not None:
+                return got
+            return INT8 if _name_hints_int8(node.id) else OTHER
+        if isinstance(node, ast.Attribute):
+            if node.attr == "at":
+                # ``x.at[i]`` scatter chains are transparent for taint.
+                return self.taint(node.value)
+            return INT8 if _name_hints_int8(node.attr) else OTHER
+        if isinstance(node, ast.Subscript):
+            return self.taint(node.value)
+        if isinstance(node, ast.IfExp):
+            if INT8 in (self.taint(node.body), self.taint(node.orelse)):
+                return INT8
+            return OTHER
+        if isinstance(node, ast.Call):
+            return self._call_taint(node)
+        return OTHER
+
+    def _call_taint(self, node: ast.Call) -> str:
+        func = node.func
+        if isinstance(func, ast.Attribute):
+            # x.astype(dt) — explicit retype decides.
+            if func.attr == "astype" and node.args:
+                return _dtype_of(node.args[0]) or OTHER
+            # jnp.full(..., dtype=...) and friends.
+            if func.attr in {
+                "full", "zeros", "ones", "empty", "array", "asarray",
+                "full_like", "zeros_like", "ones_like", "empty_like",
+            }:
+                return _dtype_of(call_keyword(node, "dtype")) or OTHER
+            # Propagating ops keep int8 alive: jnp.maximum(regs, y), x.max().
+            if func.attr in PROPAGATING:
+                operands = [func.value] + list(node.args)
+                if any(self.taint(a) == INT8 for a in operands
+                       if isinstance(a, ast.expr)):
+                    return INT8
+                return OTHER
+        return OTHER
+
+    # -- violations --------------------------------------------------------
+
+    def _flag(self, node: ast.AST, what: str) -> None:
+        self.findings.append(
+            Finding(
+                self.rule,
+                self.rel,
+                node.lineno,
+                f"{what} on int8 register data without .astype(jnp.int32) upcast",
+            )
+        )
+
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        if isinstance(node.op, _ARITH_OPS) and INT8 in (
+            self.taint(node.left),
+            self.taint(node.right),
+        ):
+            self._flag(node, f"arithmetic '{type(node.op).__name__}'")
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        if isinstance(node.op, _ARITH_OPS) and INT8 in (
+            self.taint(node.target),
+            self.taint(node.value),
+        ):
+            self._flag(node, f"augmented '{type(node.op).__name__}'")
+        self.generic_visit(node)
+
+    def visit_UnaryOp(self, node: ast.UnaryOp) -> None:
+        if isinstance(node.op, ast.USub) and self.taint(node.operand) == INT8:
+            self._flag(node, "negation")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        func = node.func
+        if isinstance(func, ast.Attribute) and func.attr in (
+            ARITH_REDUCTIONS | {"add", "subtract", "multiply"}
+        ):
+            # Covers jnp.sum(x) (first arg), x.sum() (the base), and
+            # additive scatters regs.at[i].add(1) (the at-chain base).
+            cands: list[ast.expr] = list(node.args[:1]) + [func.value]
+            if any(self.taint(a) == INT8 for a in cands):
+                self._flag(node, f"additive op '{func.attr}'")
+        self.generic_visit(node)
+
+    # -- env maintenance ---------------------------------------------------
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.visit(node.value)
+        t = self.taint(node.value)
+        for target in node.targets:
+            if isinstance(target, ast.Name):
+                self.env[target.id] = t
+            else:
+                for n in ast.walk(target):
+                    if isinstance(n, ast.Name):
+                        # Tuple unpack etc: fall back to name convention.
+                        self.env.pop(n.id, None)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self.visit(node.value)
+            if isinstance(node.target, ast.Name):
+                self.env[node.target.id] = self.taint(node.value)
+
+    def visit_For(self, node: ast.For) -> None:
+        for n in ast.walk(node.target):
+            if isinstance(n, ast.Name):
+                self.env.pop(n.id, None)
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        # Nested functions get their own checker (fresh env, convention
+        # fallback for params).
+        inner = _FunctionChecker(self.rule, self.rel)
+        for stmt in node.body:
+            inner.visit(stmt)
+        self.findings += inner.findings
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+
+@register
+class Int8OverflowRule(Rule):
+    """Flag additive arithmetic on int8-tracked register arrays in
+    core/ and kernels/."""
+
+    name = "int8-overflow"
+    description = (
+        "additive ops (+, -, *, sum, ...) on int8 register arrays must "
+        "upcast to int32 first — jnp wraps silently at +-127"
+    )
+
+    def run(self, ctx) -> list[Finding]:
+        """Run the rule over the context's selected modules."""
+        findings: list[Finding] = []
+        for mod in ctx.iter_modules(SCOPE):
+            if not ctx.is_selected(mod.rel):
+                continue
+            checker = _FunctionChecker(self.name, mod.rel)
+            checker.visit(mod.tree)
+            findings += checker.findings
+        return findings

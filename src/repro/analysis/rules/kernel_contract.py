@@ -1,0 +1,249 @@
+"""kernel-contract — Pallas kernels keep their Ref/BlockSpec discipline.
+
+A ``pl.pallas_call`` kernel body executes on-device per grid step; its
+contract in this repo (DESIGN.md §6, /opt guides) is:
+
+1. **Ref params only** — every positional parameter is a ``Ref`` (named
+   ``*_ref`` by repo convention; operands, outputs, and VMEM scratch all
+   follow it). Static scalars ride keyword-only, bound via
+   ``functools.partial`` before the ``pallas_call``.
+2. **No host-fallback ops** — ``np.*`` inside the body runs at trace time
+   on concrete shapes only (and at all on padded tracers it just breaks);
+   data-dependent jnp ops (``nonzero``, ``unique``, ``sort``, ``argsort``,
+   ``searchsorted``, ``median``, ``percentile``) have no Mosaic lowering
+   and force interpret-only kernels; ``print`` is a trace-time ghost.
+3. **Consistent ranks** — each literal ``pl.BlockSpec((shape...), index_map)``
+   must have ``len(shape) == len(index_map(...)'s returned tuple)``; every
+   index_map takes exactly ``len(grid)`` arguments; a literal
+   ``dimension_semantics`` tuple must match the grid rank; and inside the
+   kernel, a literal tuple subscript on an operand Ref must match its
+   BlockSpec rank.
+
+Only literal specs are checked — computed specs are skipped, not guessed.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import ImportMap, call_keyword, dotted
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Rule, register
+
+SCOPE = ("src/repro/kernels/",)
+
+BANNED_JNP = {
+    "nonzero", "unique", "sort", "argsort", "searchsorted", "median",
+    "percentile", "quantile",
+}
+
+
+def _spec_list(node: ast.expr | None) -> list[ast.expr]:
+    if node is None:
+        return []
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    return [node]
+
+
+def _block_rank(spec: ast.expr, imap: ImportMap) -> int | None:
+    """Rank of a literal pl.BlockSpec((d0, d1, ...), ...), else None."""
+    if not isinstance(spec, ast.Call):
+        return None
+    qual = imap.resolve(spec.func) or ""
+    if not qual.endswith("BlockSpec"):
+        return None
+    if spec.args and isinstance(spec.args[0], ast.Tuple):
+        return len(spec.args[0].elts)
+    return None
+
+
+def _index_map(spec: ast.expr) -> ast.Lambda | None:
+    if isinstance(spec, ast.Call) and len(spec.args) >= 2 and isinstance(
+        spec.args[1], ast.Lambda
+    ):
+        return spec.args[1]
+    return None
+
+
+def _lambda_out_rank(lam: ast.Lambda) -> int | None:
+    if isinstance(lam.body, ast.Tuple):
+        return len(lam.body.elts)
+    return 1
+
+
+@register
+class KernelContractRule(Rule):
+    """Flag Ref-naming, host-fallback, and rank-consistency breaches in
+    Pallas kernels."""
+
+    name = "kernel-contract"
+    description = (
+        "Pallas kernels: Ref params only, no host-fallback ops in the body, "
+        "BlockSpec/grid/index_map/indexing ranks consistent"
+    )
+
+    def run(self, ctx) -> list[Finding]:
+        """Run the rule over the context's selected modules."""
+        findings: list[Finding] = []
+        for mod in ctx.iter_modules(SCOPE):
+            if not ctx.is_selected(mod.rel):
+                continue
+            imap = ImportMap(mod.tree, mod.name)
+            defs = {
+                n.name: n
+                for n in ast.walk(mod.tree)
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            }
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                qual = imap.resolve(node.func) or ""
+                if not qual.endswith("pallas_call"):
+                    continue
+                findings += self._check_call(node, defs, mod, imap)
+        return findings
+
+    def _check_call(self, call: ast.Call, defs, mod, imap) -> list[Finding]:
+        out: list[Finding] = []
+
+        # Resolve the kernel def (direct name or functools.partial(name, ...)).
+        kernel = call.args[0] if call.args else None
+        if isinstance(kernel, ast.Call):
+            kernel = kernel.args[0] if kernel.args else None
+        kfn = defs.get(kernel.id) if isinstance(kernel, ast.Name) else None
+
+        grid = call_keyword(call, "grid")
+        grid_rank = len(grid.elts) if isinstance(grid, ast.Tuple) else None
+
+        in_specs = _spec_list(call_keyword(call, "in_specs"))
+        out_specs = _spec_list(call_keyword(call, "out_specs"))
+        ranks: list[int | None] = []
+        for label, spec in [("in_specs", s) for s in in_specs] + [
+            ("out_specs", s) for s in out_specs
+        ]:
+            rank = _block_rank(spec, imap)
+            if label == "in_specs":
+                ranks.append(rank)
+            lam = _index_map(spec)
+            if lam is None:
+                continue
+            lam_rank = _lambda_out_rank(lam)
+            if rank is not None and lam_rank is not None and rank != lam_rank:
+                out.append(
+                    Finding(
+                        self.name,
+                        mod.rel,
+                        spec.lineno,
+                        f"BlockSpec rank {rank} != index_map output rank "
+                        f"{lam_rank} in {label}",
+                    )
+                )
+            if grid_rank is not None and len(lam.args.args) != grid_rank:
+                out.append(
+                    Finding(
+                        self.name,
+                        mod.rel,
+                        spec.lineno,
+                        f"index_map takes {len(lam.args.args)} grid indices "
+                        f"but grid rank is {grid_rank} in {label}",
+                    )
+                )
+
+        # dimension_semantics vs grid rank.
+        for kw_call in ast.walk(call):
+            if isinstance(kw_call, ast.Call):
+                sem = call_keyword(kw_call, "dimension_semantics")
+                if isinstance(sem, ast.Tuple) and grid_rank is not None:
+                    if len(sem.elts) != grid_rank:
+                        out.append(
+                            Finding(
+                                self.name,
+                                mod.rel,
+                                sem.lineno,
+                                f"dimension_semantics has {len(sem.elts)} "
+                                f"entries but grid rank is {grid_rank}",
+                            )
+                        )
+
+        if kfn is None:
+            return out
+
+        # 1. Ref-only positional params.
+        for arg in kfn.args.posonlyargs + kfn.args.args:
+            if not arg.arg.endswith("_ref"):
+                out.append(
+                    Finding(
+                        self.name,
+                        mod.rel,
+                        kfn.lineno,
+                        f"kernel '{kfn.name}' positional param '{arg.arg}' is "
+                        "not a Ref ('*_ref') — statics go keyword-only via "
+                        "functools.partial",
+                    )
+                )
+
+        # 2. Banned ops in the body.
+        for node in ast.walk(kfn):
+            if not isinstance(node, ast.Call):
+                continue
+            q = imap.resolve(node.func) or dotted(node.func) or ""
+            leaf = q.rsplit(".", 1)[-1]
+            if q.startswith(("numpy.", "np.")):
+                out.append(
+                    Finding(
+                        self.name, mod.rel, node.lineno,
+                        f"np.{leaf} inside kernel '{kfn.name}' runs at trace "
+                        "time on the host — use jnp",
+                    )
+                )
+            elif leaf in BANNED_JNP and q.split(".")[0] in ("jnp", "jax") or (
+                q.startswith("jax.numpy.") and leaf in BANNED_JNP
+            ):
+                out.append(
+                    Finding(
+                        self.name, mod.rel, node.lineno,
+                        f"jnp.{leaf} inside kernel '{kfn.name}' has no Mosaic "
+                        "lowering (forces interpret-only)",
+                    )
+                )
+            elif isinstance(node.func, ast.Name) and node.func.id == "print":
+                out.append(
+                    Finding(
+                        self.name, mod.rel, node.lineno,
+                        f"print() inside kernel '{kfn.name}' — use "
+                        "pl.debug_print",
+                    )
+                )
+
+        # 3. Operand-Ref indexing rank vs BlockSpec rank.
+        kparams = [a.arg for a in kfn.args.posonlyargs + kfn.args.args]
+        rank_by_param = {
+            p: r for p, r in zip(kparams, ranks) if r is not None
+        }
+        for node in ast.walk(kfn):
+            if not isinstance(node, ast.Subscript):
+                continue
+            base = node.value
+            if not (isinstance(base, ast.Name) and base.id in rank_by_param):
+                continue
+            idx = node.slice
+            if isinstance(idx, ast.Tuple) and not any(
+                isinstance(e, ast.Constant) and e.value is Ellipsis
+                for e in idx.elts
+            ):
+                if any(isinstance(e, ast.Starred) for e in idx.elts):
+                    continue
+                want = rank_by_param[base.id]
+                if len(idx.elts) != want:
+                    out.append(
+                        Finding(
+                            self.name,
+                            mod.rel,
+                            node.lineno,
+                            f"'{base.id}' indexed with {len(idx.elts)} "
+                            f"dims but its BlockSpec rank is {want} in "
+                            f"kernel '{kfn.name}'",
+                        )
+                    )
+        return out

@@ -1,0 +1,110 @@
+"""layering — the raw Newton solver is reachable only via core/estimation.py.
+
+``estimators.qsketch_mle`` is the bit-identity reference solver; calling it
+directly bypasses the estimation layer's solver registry, the routed x*m
+scaling, and the untouched-row guard (DESIGN.md §8.7). The old tier-2 grep
+enforced this textually over ``core/`` + ``sketchstream/`` only — it could
+not cover ``kernels/`` (docstrings there mention the symbol), could not see
+through ``from ... import ... as`` renames at the *use* site, and matched
+comments. This rule resolves uses through the import/alias graph instead:
+
+* ``from repro.core.estimators import qsketch_mle as f`` — the binding and
+  every later ``f(...)`` use are findings,
+* ``from repro.core import estimators as e`` + ``e.qsketch_mle`` — finding,
+* local aliases (``solve = estimators.qsketch_mle``) — finding at each use,
+* ``getattr(estimators, "qsketch_mle")`` — finding,
+
+anywhere in the analysis scope except the estimation layer itself
+(``core/estimation.py`` and the defining ``core/estimators.py``).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import ImportMap, dotted
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Rule, register
+
+TARGET = "repro.core.estimators.qsketch_mle"
+SYMBOL = "qsketch_mle"
+ALLOWED = ("src/repro/core/estimation.py", "src/repro/core/estimators.py")
+
+
+def _is_target(qual: str | None) -> bool:
+    return qual is not None and (
+        qual == TARGET or qual.endswith(".estimators." + SYMBOL)
+    )
+
+
+@register
+class LayeringRule(Rule):
+    """Flag any resolved reference to ``estimators.qsketch_mle`` outside the
+    estimation layer."""
+
+    name = "layering"
+    description = (
+        "estimators.qsketch_mle may only be referenced from core/estimation.py "
+        "(solver registry, routed scaling, untouched-row guard)"
+    )
+
+    def run(self, ctx) -> list[Finding]:
+        """Run the rule over the context's selected modules."""
+        findings: list[Finding] = []
+        for mod in ctx.iter_modules():
+            if mod.rel in ALLOWED or not ctx.is_selected(mod.rel):
+                continue
+            imap = ImportMap(mod.tree, mod.name)
+            # Direct from-imports of the symbol are findings at the binding.
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.ImportFrom):
+                    for alias in node.names:
+                        if alias.name == SYMBOL and _is_target(
+                            imap.names.get(alias.asname or alias.name)
+                        ):
+                            findings.append(
+                                Finding(
+                                    self.name,
+                                    mod.rel,
+                                    node.lineno,
+                                    f"imports estimators.{SYMBOL}"
+                                    + (f" as '{alias.asname}'" if alias.asname else ""),
+                                )
+                            )
+                elif isinstance(node, (ast.Name, ast.Attribute)):
+                    if not isinstance(node.ctx, ast.Load):
+                        continue
+                    d = dotted(node)
+                    if d is None:
+                        continue
+                    if _is_target(imap.resolve(node)):
+                        findings.append(
+                            Finding(
+                                self.name,
+                                mod.rel,
+                                node.lineno,
+                                f"references estimators.{SYMBOL} via '{d}' — "
+                                "route through core/estimation.py",
+                            )
+                        )
+                elif isinstance(node, ast.Call):
+                    # getattr(<estimators module>, "qsketch_mle")
+                    if (
+                        isinstance(node.func, ast.Name)
+                        and node.func.id == "getattr"
+                        and len(node.args) >= 2
+                        and isinstance(node.args[1], ast.Constant)
+                        and node.args[1].value == SYMBOL
+                    ):
+                        base = imap.resolve(node.args[0])
+                        if base is not None and base.endswith("estimators"):
+                            findings.append(
+                                Finding(
+                                    self.name,
+                                    mod.rel,
+                                    node.lineno,
+                                    f"getattr access to estimators.{SYMBOL} — "
+                                    "route through core/estimation.py",
+                                )
+                            )
+        return findings

@@ -1,0 +1,212 @@
+"""qlint execution: file collection, rule running, report writing.
+
+``build_context`` parses the analysis scope (``src/repro``, ``benchmarks``,
+``examples`` — tests and host CLIs under ``scripts/`` are out of scope) into
+a Context the rules share; ``run_qlint`` executes the rules, matches
+findings against the baseline and inline suppressions, and returns the
+report dict the CLI serializes to ``experiments/analysis/report.json``.
+
+``--changed-only`` narrows *reporting* (not parsing — cross-module rules
+still see the whole tree) to files touched per git: unstaged + staged
+diffs against HEAD plus untracked files.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import subprocess
+import time
+from pathlib import Path
+
+from repro.analysis.baseline import Baseline, inline_suppressed
+from repro.analysis.findings import Finding
+from repro.analysis.registry import all_rules
+
+SCOPE_DIRS = ("src/repro", "benchmarks", "examples")
+DEFAULT_BASELINE = "scripts/qlint_baseline.json"
+
+
+@dataclasses.dataclass
+class Module:
+    """One parsed source file: paths, dotted name, AST, raw lines."""
+
+    path: str  # absolute
+    rel: str  # repo-relative, posix
+    name: str  # dotted module name
+    tree: ast.Module
+    source: str
+    lines: list[str]
+
+
+class Context:
+    """Everything a rule sees: the parsed module set, the repo root, and
+    the reporting selection (None = all files)."""
+
+    def __init__(self, root: str, modules: dict[str, Module], selected: set[str] | None):
+        self.root = root
+        self.modules = modules
+        self.selected = selected
+        self.parse_errors: list[Finding] = []
+        self._by_name = {m.name: m for m in modules.values()}
+
+    def is_selected(self, rel: str) -> bool:
+        """Whether findings in ``rel`` should be reported this run."""
+        return self.selected is None or rel in self.selected
+
+    def iter_modules(self, prefix: str | tuple[str, ...] = ()) -> list[Module]:
+        """Modules whose repo-relative path starts with ``prefix`` (all if
+        empty), sorted by path for deterministic reports."""
+        mods = [
+            m
+            for rel, m in sorted(self.modules.items())
+            if not prefix or rel.startswith(prefix)
+        ]
+        return mods
+
+    def module_by_name(self, dotted: str) -> Module | None:
+        """Parsed module for a dotted name (``repro.core.dyn_array``)."""
+        return self._by_name.get(dotted)
+
+
+def _iter_py_files(root: Path) -> list[Path]:
+    files = []
+    for scope in SCOPE_DIRS:
+        base = root / scope
+        if base.is_dir():
+            files += sorted(base.rglob("*.py"))
+    return files
+
+
+def build_context(root: str, selected: list[str] | None = None) -> Context:
+    """Parse the analysis scope under ``root`` into a Context.
+
+    ``selected``: repo-relative paths to *report on* (None = everything).
+    Unparseable files become ``parse-error`` findings rather than crashes.
+    """
+    rootp = Path(root).resolve()
+    modules: dict[str, Module] = {}
+    errors: list[Finding] = []
+    for path in _iter_py_files(rootp):
+        rel = path.relative_to(rootp).as_posix()
+        source = path.read_text()
+        try:
+            tree = ast.parse(source, filename=str(path))
+        except SyntaxError as e:
+            errors.append(
+                Finding("parse-error", rel, e.lineno or 1, f"syntax error: {e.msg}")
+            )
+            continue
+        from repro.analysis.astutil import module_name_for
+
+        modules[rel] = Module(
+            path=str(path),
+            rel=rel,
+            name=module_name_for(rel),
+            tree=tree,
+            source=source,
+            lines=source.splitlines(),
+        )
+    sel = None
+    if selected is not None:
+        sel = {Path(s).as_posix() for s in selected}
+    ctx = Context(str(rootp), modules, sel)
+    ctx.parse_errors = errors
+    return ctx
+
+
+def changed_files(root: str) -> list[str]:
+    """Repo-relative paths git considers changed: worktree + index diffs
+    against HEAD, plus untracked (non-ignored) files."""
+    out: set[str] = set()
+    for cmd in (
+        ["git", "diff", "--name-only", "HEAD"],
+        ["git", "ls-files", "--others", "--exclude-standard"],
+    ):
+        proc = subprocess.run(cmd, cwd=root, capture_output=True, text=True)
+        if proc.returncode == 0:
+            out.update(line for line in proc.stdout.splitlines() if line)
+    return sorted(out)
+
+
+def run_qlint(
+    root: str,
+    rule_subset: list[str] | None = None,
+    selected: list[str] | None = None,
+    changed_only: bool = False,
+    baseline_path: str | None = DEFAULT_BASELINE,
+) -> dict:
+    """Run the rules and return the report dict (see module docstring).
+
+    ``ok`` in the report is True iff no finding is new (un-baselined, not
+    inline-suppressed). ``selected`` and ``changed_only`` compose: explicit
+    paths win, else git-changed files, else the full scope.
+    """
+    t0 = time.monotonic()
+    if selected is None and changed_only:
+        selected = [p for p in changed_files(root) if p.endswith((".py", ".json"))]
+    ctx = build_context(root, selected)
+
+    rules = all_rules()
+    if rule_subset is not None:
+        wanted = set(rule_subset)
+        unknown = wanted - {r.name for r in rules}
+        if unknown:
+            raise KeyError(f"unknown rule(s): {sorted(unknown)}")
+        rules = [r for r in rules if r.name in wanted]
+
+    findings: list[Finding] = list(ctx.parse_errors)
+    per_rule: dict[str, int] = {}
+    for rule in rules:
+        got = sorted(rule.run(ctx))
+        per_rule[rule.name] = len(got)
+        findings += got
+
+    base = Baseline(str(Path(root) / baseline_path) if baseline_path else None)
+    rows = []
+    new = 0
+    for f in findings:
+        mod = ctx.modules.get(f.path)
+        just = base.justification(f)
+        if just is None and mod is not None and inline_suppressed(f, mod.lines):
+            just = "inline suppression"
+        row = {
+            "rule": f.rule,
+            "path": f.path,
+            "line": f.line,
+            "message": f.message,
+            "key": f.key,
+            "baselined": just is not None,
+        }
+        if just is not None:
+            row["justification"] = just
+        else:
+            new += 1
+        rows.append(row)
+
+    return {
+        "tool": "qlint",
+        "mode": "selected" if ctx.selected is not None else "full",
+        "rules": [r.name for r in rules],
+        "files_analyzed": len(ctx.modules),
+        "files_selected": (
+            len(ctx.selected) if ctx.selected is not None else len(ctx.modules)
+        ),
+        "findings": rows,
+        "counts": {
+            "total": len(rows),
+            "baselined": len(rows) - new,
+            "new": new,
+            "per_rule": per_rule,
+        },
+        # Staleness is only meaningful for a full run: a partial run (rule
+        # subset or file selection) cannot produce the findings the other
+        # entries match, so they would all look spuriously stale.
+        "stale_baseline_keys": (
+            base.stale_keys(findings)
+            if ctx.selected is None and rule_subset is None
+            else []
+        ),
+        "elapsed_s": round(time.monotonic() - t0, 3),
+        "ok": new == 0,
+    }

@@ -50,6 +50,7 @@ def lm_estimate(regs: jnp.ndarray) -> jnp.ndarray:
     """
     m = regs.shape[0]
     untouched = jnp.min(regs) >= jnp.float32(jnp.finfo(jnp.float32).max)
+    # qlint: disable=int8-overflow (LM min-registers are f32 by design, not int8)
     est = (m - 1) / jnp.sum(regs)
     return jnp.where(untouched, jnp.float32(0.0), est)
 

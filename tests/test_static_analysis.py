@@ -1,0 +1,715 @@
+"""qlint test suite (DESIGN.md §9): the analysis rules, baseline, and CLI.
+
+Each rule gets a positive fixture (a seeded violation in a throwaway
+mini-tree laid out like the repo: ``src/repro/...``) and a negative one
+(the idiomatic clean form). On top of the per-rule coverage:
+
+* the aliased-import regression the old tier-2 grep could not catch
+  (``test_layering_catches_aliased_import_the_grep_missed``),
+* the baseline round-trip: suppress -> clean -> unsuppress -> dirty,
+  plus stale-entry detection and the inline ``# qlint: disable=`` hatch,
+* ``--changed-only`` / explicit-path selection,
+* CLI exit codes: every rule's seeded violation makes
+  ``scripts/check_static.py`` exit non-zero (the acceptance criterion),
+* lock-in tests for the two suppressed findings in the real tree
+  (``check_disjoint_rows`` tracer guard, ``lm_estimate`` f32 semantics),
+* and a full run over the actual repo, which must be clean.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import build_context, run_qlint
+from repro.analysis.baseline import Baseline
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "scripts"))
+
+import check_static  # noqa: E402  (scripts/ entry point, path-injected above)
+
+
+def write(root: Path, rel: str, text: str) -> Path:
+    p = root / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(text))
+    return p
+
+
+def qlint(root, rules, **kw):
+    kw.setdefault("baseline_path", None)
+    return run_qlint(str(root), rule_subset=list(rules), **kw)
+
+
+def rows_for(report, rule):
+    return [r for r in report["findings"] if r["rule"] == rule]
+
+
+# ---------------------------------------------------------------------------
+# Seeded violations, one per rule — shared by the per-rule tests and the
+# CLI exit-code sweep.
+# ---------------------------------------------------------------------------
+
+VIOLATIONS = {
+    "layering": (
+        "src/repro/sketchstream/bad_layer.py",
+        '''
+        """Out-of-layer solve."""
+        from repro.core.estimators import qsketch_mle as _fast
+
+        def solve(hist):
+            """Solve a histogram without going through core/estimation."""
+            return _fast(hist)
+        ''',
+    ),
+    "int8-overflow": (
+        "src/repro/core/regs_math.py",
+        '''
+        """Arithmetic on int8 registers without an upcast."""
+        import jax.numpy as jnp
+
+        def total(regs):
+            """Sum registers (wraps silently at +-127)."""
+            return jnp.sum(regs)
+        ''',
+    ),
+    "donation-safety": (
+        "src/repro/core/donate_bad.py",
+        '''
+        """Read-after-donate."""
+        import jax
+
+        def _upd(state, xs):
+            """Pure update."""
+            return state + xs
+
+        upd = jax.jit(_upd, donate_argnums=(0,))
+
+        def caller(state, xs):
+            """Donates state, then reads the dead buffer."""
+            new = upd(state, xs)
+            return new, state.sum()
+        ''',
+    ),
+    "jit-purity": (
+        "src/repro/core/jit_impure.py",
+        '''
+        """Side effect inside a jitted function."""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def traced(x):
+            """Prints at trace time, silent thereafter."""
+            print("tracing", x)
+            return jnp.sum(x)
+        ''',
+    ),
+    "kernel-contract": (
+        "src/repro/kernels/bad_kernel.py",
+        '''
+        """Kernel param not named *_ref."""
+        import jax
+        from jax.experimental import pallas as pl
+
+        def _copy_kernel(x, o_ref):
+            """Copy block."""
+            o_ref[...] = x[...]
+
+        def run(x):
+            """Launch the copy kernel."""
+            return pl.pallas_call(
+                _copy_kernel,
+                out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            )(x)
+        ''',
+    ),
+    "docstrings": (
+        "src/repro/core/nodoc.py",
+        '''
+        """Module documented, function not."""
+
+        def public_fn(x):
+            return x
+        ''',
+    ),
+}
+
+
+@pytest.fixture
+def root(tmp_path):
+    return tmp_path
+
+
+# ---------------------------------------------------------------------------
+# layering
+# ---------------------------------------------------------------------------
+
+
+def test_layering_flags_from_import_alias(root):
+    write(root, *VIOLATIONS["layering"])
+    report = qlint(root, ["layering"])
+    got = rows_for(report, "layering")
+    assert got and all(r["path"] == "src/repro/sketchstream/bad_layer.py" for r in got)
+    assert not report["ok"]
+
+
+def test_layering_catches_aliased_import_the_grep_missed(root):
+    """The regression the AST rule exists for: the old tier-2 grep scanned
+    a fixed file list for the literal token ``qsketch_mle``, so (a) a
+    module-alias use in kernels/ was invisible to it (kernels/ was excluded
+    because docstrings there legitimately mention the symbol), and (b) a
+    docstring mention would have been a false positive. The AST rule
+    resolves the alias chain to the use site and ignores prose."""
+    write(
+        root,
+        "src/repro/kernels/alias_use.py",
+        '''
+        """Sneaky direct solve from kernels/ via a module alias."""
+        from repro.core import estimators as _e
+
+        def solve(hist):
+            """Bypass core/estimation through the alias."""
+            return _e.qsketch_mle(hist)
+        ''',
+    )
+    write(
+        root,
+        "src/repro/sketchstream/prose_only.py",
+        '''
+        """Routes solves to estimation (which wraps qsketch_mle internally).
+
+        Mentioning qsketch_mle in prose must NOT be a finding.
+        """
+        from repro.core import estimation
+
+        def solve(cfg, hist):
+            """Solve through the sanctioned layer."""
+            return estimation.estimate(cfg, hist)
+        ''',
+    )
+    report = qlint(root, ["layering"])
+    got = rows_for(report, "layering")
+    assert got, "aliased module-attribute use must be flagged"
+    assert {r["path"] for r in got} == {"src/repro/kernels/alias_use.py"}
+
+
+def test_layering_allows_the_estimation_layer(root):
+    write(
+        root,
+        "src/repro/core/estimation.py",
+        '''
+        """The one sanctioned import site."""
+        from repro.core.estimators import qsketch_mle
+
+        def estimate(hist):
+            """Routed solve."""
+            return qsketch_mle(hist)
+        ''',
+    )
+    assert qlint(root, ["layering"])["ok"]
+
+
+# ---------------------------------------------------------------------------
+# int8-overflow
+# ---------------------------------------------------------------------------
+
+
+def test_int8_overflow_flags_sum_and_add(root):
+    write(root, *VIOLATIONS["int8-overflow"])
+    write(
+        root,
+        "src/repro/core/regs_inc.py",
+        '''
+        """Scatter-add on int8 registers."""
+
+        def bump(regs, idx):
+            """In-place-style increment (wraps at 127)."""
+            return regs.at[idx].add(1)
+        ''',
+    )
+    report = qlint(root, ["int8-overflow"])
+    paths = {r["path"] for r in rows_for(report, "int8-overflow")}
+    assert paths == {"src/repro/core/regs_math.py", "src/repro/core/regs_inc.py"}
+
+
+def test_int8_overflow_upcast_and_max_monoid_are_clean(root):
+    write(
+        root,
+        "src/repro/core/regs_ok.py",
+        '''
+        """The sanctioned forms: upcast before arithmetic, max monoid as-is."""
+        import jax.numpy as jnp
+
+        def total(regs):
+            """Upcast then sum — no wrap."""
+            return jnp.sum(regs.astype(jnp.int32))
+
+        def union(regs, other_regs):
+            """Max monoid is closed on int8."""
+            return jnp.maximum(regs, other_regs)
+        ''',
+    )
+    assert qlint(root, ["int8-overflow"])["ok"]
+
+
+# ---------------------------------------------------------------------------
+# donation-safety
+# ---------------------------------------------------------------------------
+
+
+def test_donation_read_after_donate(root):
+    write(root, *VIOLATIONS["donation-safety"])
+    report = qlint(root, ["donation-safety"])
+    got = rows_for(report, "donation-safety")
+    assert got and "state" in got[0]["message"]
+
+
+def test_donation_rebind_is_clean(root):
+    write(
+        root,
+        "src/repro/core/donate_ok.py",
+        '''
+        """The sanctioned shape: rebind the donated name to the result."""
+        import jax
+
+        def _upd(state, xs):
+            """Pure update."""
+            return state + xs
+
+        upd = jax.jit(_upd, donate_argnums=(0,))
+
+        def caller(state, xs):
+            """Donate and rebind; the old buffer is never read again."""
+            state = upd(state, xs)
+            return state
+        ''',
+    )
+    assert qlint(root, ["donation-safety"])["ok"]
+
+
+def test_donation_jit_without_return(root):
+    write(
+        root,
+        "src/repro/core/donate_noreturn.py",
+        '''
+        """Donating entry point that drops the new buffer."""
+        import jax
+
+        def _sink(state):
+            """Mutation-style body: the .at result is discarded."""
+            state.at[0].set(1)
+
+        sink = jax.jit(_sink, donate_argnums=(0,))
+        ''',
+    )
+    report = qlint(root, ["donation-safety"])
+    assert rows_for(report, "donation-safety"), (
+        "a donating jit whose fn never returns the new buffer must be flagged"
+    )
+
+
+# ---------------------------------------------------------------------------
+# jit-purity
+# ---------------------------------------------------------------------------
+
+
+def test_purity_flags_print_in_jit(root):
+    write(root, *VIOLATIONS["jit-purity"])
+    report = qlint(root, ["jit-purity"])
+    got = rows_for(report, "jit-purity")
+    assert got and got[0]["path"] == "src/repro/core/jit_impure.py"
+
+
+def test_purity_flags_host_sync_reachable_through_helper(root):
+    write(
+        root,
+        "src/repro/core/jit_sync.py",
+        '''
+        """Host-sync two calls deep under jit."""
+        import jax
+        import jax.numpy as jnp
+
+        def _helper(x):
+            """Syncs the device value back to host."""
+            return float(jnp.sum(x))
+
+        @jax.jit
+        def traced(x):
+            """Reaches the sync through a helper."""
+            return _helper(x) * x
+        ''',
+    )
+    report = qlint(root, ["jit-purity"])
+    assert rows_for(report, "jit-purity"), "reachability must cross the helper call"
+
+
+def test_purity_unjitted_host_code_is_clean(root):
+    write(
+        root,
+        "src/repro/core/host_side.py",
+        '''
+        """Host entry point: prints and syncs freely, never traced."""
+        import jax.numpy as jnp
+
+        def report(x):
+            """Eager summary."""
+            total = float(jnp.sum(x))
+            print("total:", total)
+            return total
+        ''',
+    )
+    assert qlint(root, ["jit-purity"])["ok"]
+
+
+# ---------------------------------------------------------------------------
+# kernel-contract
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_contract_param_naming(root):
+    write(root, *VIOLATIONS["kernel-contract"])
+    report = qlint(root, ["kernel-contract"])
+    got = rows_for(report, "kernel-contract")
+    assert got and got[0]["path"] == "src/repro/kernels/bad_kernel.py"
+
+
+def test_kernel_contract_blockspec_rank_mismatch(root):
+    write(
+        root,
+        "src/repro/kernels/rank_kernel.py",
+        '''
+        """BlockSpec block rank vs index_map output rank disagree."""
+        import jax
+        from jax.experimental import pallas as pl
+
+        def _k(x_ref, o_ref):
+            """Copy block."""
+            o_ref[...] = x_ref[...]
+
+        def run(x):
+            """2-d block, 3-component index map."""
+            return pl.pallas_call(
+                _k,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0, 0))],
+                out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+                out_shape=jax.ShapeDtypeStruct((32, 128), x.dtype),
+            )(x)
+        ''',
+    )
+    report = qlint(root, ["kernel-contract"])
+    assert rows_for(report, "kernel-contract")
+
+
+def test_kernel_contract_clean_kernel(root):
+    write(
+        root,
+        "src/repro/kernels/good_kernel.py",
+        '''
+        """Contract-conforming copy kernel."""
+        import jax
+        from jax.experimental import pallas as pl
+
+        def _copy_kernel(x_ref, o_ref):
+            """Copy block."""
+            o_ref[...] = x_ref[...]
+
+        def run(x):
+            """Launch the copy kernel."""
+            return pl.pallas_call(
+                _copy_kernel,
+                out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            )(x)
+        ''',
+    )
+    assert qlint(root, ["kernel-contract"])["ok"]
+
+
+# ---------------------------------------------------------------------------
+# docstrings + bench-schema (the absorbed legacy checks)
+# ---------------------------------------------------------------------------
+
+
+def test_docstrings_rule(root):
+    write(root, *VIOLATIONS["docstrings"])
+    report = qlint(root, ["docstrings"])
+    got = rows_for(report, "docstrings")
+    assert got and "public_fn" in got[0]["message"]
+
+
+def test_bench_schema_selected_mode(root):
+    write(
+        root,
+        "experiments/bench/dyn_array.json",
+        json.dumps(
+            [
+                {"figure": "f7", "method": "qsketch", "k": 12, "mops": 1.0},
+                {"figure": "f7", "method": "qsketch", "k": 12, "mops": 2.0},
+            ]
+        ),
+    )
+    report = qlint(
+        root, ["bench-schema"], selected=["experiments/bench/dyn_array.json"]
+    )
+    got = rows_for(report, "bench-schema")
+    assert got and "duplicate k" in got[0]["message"]
+
+
+def test_bench_schema_selected_mode_matches_full_scope(root):
+    """A non-cumulative bench JSON (its suite uses its own payload keys)
+    must not be flagged just because it appears in a --changed-only
+    selection — selected mode may not be stricter than a full run."""
+    write(
+        root,
+        "experiments/bench/sketch_array_sharded.json",
+        json.dumps([{"figure": "f", "method": "m", "update_mops": 1.0}]),
+    )
+    report = qlint(
+        root,
+        ["bench-schema"],
+        selected=["experiments/bench/sketch_array_sharded.json"],
+    )
+    assert report["ok"] and not rows_for(report, "bench-schema")
+
+
+def test_partial_runs_do_not_report_stale_baseline(root):
+    """Baseline staleness is only computable on a full run: a rule-subset
+    or file-selected run never produces the other entries' findings."""
+    write(root, *VIOLATIONS["int8-overflow"])
+    base_path = root / "qlint_baseline.json"
+    base = Baseline(str(base_path))
+    base.entries["jit-purity::src/elsewhere.py::some message"] = "why"
+    base.save()
+    partial = qlint(
+        root, ["int8-overflow"], baseline_path="qlint_baseline.json"
+    )
+    assert partial["stale_baseline_keys"] == []
+
+
+def test_bench_schema_full_mode_requires_cumulative_files(root):
+    report = qlint(root, ["bench-schema"])
+    msgs = {r["message"] for r in rows_for(report, "bench-schema")}
+    assert {"expected cumulative bench file is missing"} == msgs
+    assert len(rows_for(report, "bench-schema")) == 6
+
+
+# ---------------------------------------------------------------------------
+# baseline + inline suppression
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_roundtrip(root):
+    write(root, *VIOLATIONS["int8-overflow"])
+    baseline_rel = "scripts/qlint_baseline.json"
+
+    # Dirty: the violation is new.
+    report = qlint(root, ["int8-overflow"], baseline_path=baseline_rel)
+    assert not report["ok"] and report["counts"]["new"] == 1
+    row = rows_for(report, "int8-overflow")[0]
+    key = row["key"]
+    # Keys are line-number-free (rule::path::message), so they survive edits
+    # elsewhere in the file.
+    assert key == f"int8-overflow::src/repro/core/regs_math.py::{row['message']}"
+
+    # Suppress: baseline the key -> clean, with the justification surfaced.
+    base_path = root / baseline_rel
+    base_path.parent.mkdir(parents=True, exist_ok=True)
+    base = Baseline(str(base_path))
+    base.entries[key] = "fixture: grandfathered for the round-trip test"
+    base.save()
+    report = qlint(root, ["int8-overflow"], baseline_path=baseline_rel)
+    assert report["ok"] and report["counts"]["baselined"] == 1
+    row = rows_for(report, "int8-overflow")[0]
+    assert row["baselined"] and "round-trip" in row["justification"]
+
+    # Unsuppress: empty the baseline -> dirty again.
+    base.entries.clear()
+    base.save()
+    report = qlint(root, ["int8-overflow"], baseline_path=baseline_rel)
+    assert not report["ok"] and report["counts"]["new"] == 1
+
+    # Stale entries (nothing matches them) are reported for pruning —
+    # on a full run only (see test_partial_runs_do_not_report_stale_baseline).
+    base.entries["int8-overflow::src/gone.py::stale message"] = "old"
+    base.save()
+    report = run_qlint(str(root), baseline_path=baseline_rel)
+    assert report["stale_baseline_keys"] == [
+        "int8-overflow::src/gone.py::stale message"
+    ]
+
+
+def test_inline_suppression(root):
+    rel, src = VIOLATIONS["int8-overflow"]
+    suppressed = textwrap.dedent(src).replace(
+        "    return jnp.sum(regs)",
+        "    # qlint: disable=int8-overflow (fixture)\n    return jnp.sum(regs)",
+    )
+    write(root, rel, suppressed)
+    report = qlint(root, ["int8-overflow"])
+    assert report["ok"] and report["counts"]["baselined"] == 1
+    assert rows_for(report, "int8-overflow")[0]["justification"] == (
+        "inline suppression"
+    )
+
+
+# ---------------------------------------------------------------------------
+# file selection: explicit paths and --changed-only
+# ---------------------------------------------------------------------------
+
+
+def test_selected_paths_narrow_reporting(root):
+    write(root, *VIOLATIONS["int8-overflow"])
+    write(
+        root,
+        "src/repro/core/regs_math2.py",
+        VIOLATIONS["int8-overflow"][1].replace("total", "total2"),
+    )
+    report = qlint(
+        root, ["int8-overflow"], selected=["src/repro/core/regs_math2.py"]
+    )
+    paths = {r["path"] for r in rows_for(report, "int8-overflow")}
+    assert paths == {"src/repro/core/regs_math2.py"}
+    assert report["mode"] == "selected"
+
+
+def test_changed_only_uses_git(root):
+    def git(*args):
+        subprocess.run(
+            ["git", "-c", "user.email=t@t", "-c", "user.name=t", *args],
+            cwd=root, check=True, capture_output=True,
+        )
+
+    write(root, *VIOLATIONS["int8-overflow"])  # committed -> not "changed"
+    git("init", "-q")
+    git("add", "-A")
+    git("commit", "-qm", "seed")
+    write(  # untracked -> changed
+        root,
+        "src/repro/core/regs_new.py",
+        VIOLATIONS["int8-overflow"][1].replace("total", "total_new"),
+    )
+    report = qlint(root, ["int8-overflow"], changed_only=True)
+    paths = {r["path"] for r in rows_for(report, "int8-overflow")}
+    assert paths == {"src/repro/core/regs_new.py"}
+
+
+# ---------------------------------------------------------------------------
+# CLI: exit codes, JSON report, baseline maintenance flags
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rule", sorted(VIOLATIONS))
+def test_cli_exits_nonzero_on_seeded_violation(root, rule, capsys):
+    write(root, *VIOLATIONS[rule])
+    rc = check_static.main(
+        ["--root", str(root), "--rules", rule, "--json", "", "--baseline", ""]
+    )
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "FAIL" in out and f"[{rule}]" in out
+
+
+def test_cli_json_report_and_update_baseline(root, capsys):
+    write(root, *VIOLATIONS["int8-overflow"])
+    args = ["--root", str(root), "--rules", "int8-overflow",
+            "--json", "report.json", "--baseline", "qlint_baseline.json"]
+    assert check_static.main(args) == 1
+    report = json.loads((root / "report.json").read_text())
+    assert report["tool"] == "qlint" and report["counts"]["new"] == 1
+
+    # --update-baseline grandfathers the finding; the next run is clean.
+    assert check_static.main(args + ["--update-baseline"]) == 0
+    assert check_static.main(args) == 0
+
+    # Fix the code -> the entry goes stale. A rule-subset run must NOT
+    # prune (it cannot tell stale from unexercised); a full run does.
+    write(
+        root,
+        "src/repro/core/regs_math.py",
+        VIOLATIONS["int8-overflow"][1].replace(
+            "jnp.sum(regs)", "jnp.sum(regs.astype(jnp.int32))"
+        ),
+    )
+    assert check_static.main(args + ["--prune-baseline"]) == 0
+    assert len(Baseline(str(root / "qlint_baseline.json")).entries) == 1
+    full_args = ["--root", str(root), "--json", "",
+                 "--baseline", "qlint_baseline.json"]
+    assert check_static.main(full_args + ["--prune-baseline"]) == 0
+    assert Baseline(str(root / "qlint_baseline.json")).entries == {}
+
+
+def test_cli_list_rules(capsys):
+    assert check_static.main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in (*VIOLATIONS, "bench-schema"):
+        assert rule in out
+
+
+def test_parse_error_becomes_finding(root):
+    write(root, "src/repro/core/broken.py", "def oops(:\n")
+    ctx = build_context(str(root))
+    assert ctx.parse_errors and ctx.parse_errors[0].rule == "parse-error"
+    report = qlint(root, ["layering"])
+    assert not report["ok"]
+    assert rows_for(report, "parse-error")
+
+
+def test_real_repo_is_clean():
+    """The acceptance gate, API-level: the checked-in tree has zero
+    non-baselined findings and analyzes well under the 30s budget."""
+    report = run_qlint(str(REPO))
+    new = [r for r in report["findings"] if not r["baselined"]]
+    assert new == [], f"unexpected qlint findings: {new}"
+    assert report["elapsed_s"] < 30.0
+    assert report["stale_baseline_keys"] == []
+
+
+# ---------------------------------------------------------------------------
+# Lock-in tests for the two suppressed findings in the real tree.
+# ---------------------------------------------------------------------------
+
+
+def test_check_disjoint_rows_raises_cleanly_under_tracing():
+    """The baselined jit-purity finding's justification: under jit the
+    host-side int() sync in check_disjoint_rows is unreachable because the
+    Tracer guard raises first — and eagerly the guard does its real job."""
+    from types import SimpleNamespace
+
+    from repro.core.dyn_array import check_disjoint_rows
+
+    a = SimpleNamespace(hists=jnp.array([[1, 0], [0, 0]], jnp.int32))
+    b_ok = SimpleNamespace(hists=jnp.array([[0, 0], [2, 0]], jnp.int32))
+    b_bad = SimpleNamespace(hists=jnp.array([[3, 0], [0, 0]], jnp.int32))
+
+    check_disjoint_rows(a, b_ok)  # disjoint partitions: no raise
+    with pytest.raises(ValueError, match="live in BOTH"):
+        check_disjoint_rows(a, b_bad)
+
+    def traced(ha, hb):
+        check_disjoint_rows(SimpleNamespace(hists=ha), SimpleNamespace(hists=hb))
+        return ha
+
+    with pytest.raises(ValueError, match="under\\s+jit tracing"):
+        jax.jit(traced)(a.hists, b_ok.hists)
+
+
+def test_lm_estimate_f32_semantics():
+    """The inline-suppressed int8-overflow site: lm_estimate's registers
+    are f32 min-registers (LM baseline), so the un-upcast jnp.sum is
+    correct by design. Lock Eq. 2 and the untouched-sketch guard."""
+    from repro.core.estimators import lm_estimate
+
+    regs = jnp.array([1.0, 2.0, 3.0, 4.0], jnp.float32)
+    np.testing.assert_allclose(float(lm_estimate(regs)), 3.0 / 10.0, rtol=1e-6)
+
+    untouched = jnp.full((8,), jnp.finfo(jnp.float32).max, jnp.float32)
+    assert float(lm_estimate(untouched)) == 0.0
+    assert lm_estimate(regs).dtype == jnp.float32
