@@ -35,12 +35,47 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import SketchConfig, dyn_array, window_array
+from repro.obs import trace as obs_trace
 from repro.sketchstream import ingest
 
 from . import common
 
 _M, _B = 128, 8
 _CHUNK = 4096  # host arrival granularity of the load generator
+
+# Ingest-stage span names -> the bench-row keys their totals land under.
+_SPAN_KEYS = {
+    "ingest/push": "span_push_s",
+    "ingest/seal": "span_seal_s",
+    "ingest/dispatch": "span_dispatch_s",
+    "ingest/retire": "span_retire_s",
+    "ingest/stall": "span_stall_s",
+    "ingest/rotate": "span_rotate_s",
+}
+
+
+def _stage_spans(run_fn):
+    """Per-stage host seconds for one traced run of ``run_fn``.
+
+    The timed measurement runs stay untraced (the headline sustained_mops
+    never pays for span bookkeeping); this extra run re-executes the same
+    cell with the default tracer on and folds ``stage_totals()`` into
+    ``span_*_s`` row keys.
+    """
+    was = obs_trace.enabled()
+    obs_trace.configure(enabled=True)
+    obs_trace.clear()
+    try:
+        run_fn()
+    finally:
+        obs_trace.configure(enabled=was)
+    totals = obs_trace.stage_totals()
+    obs_trace.clear()
+    return {
+        key: round(totals[name], 4)
+        for name, key in _SPAN_KEYS.items()
+        if name in totals
+    }
 
 
 def zipf_bursty_chunks(n_keys, n_elements, *, s=1.2, burst_every=4,
@@ -130,6 +165,7 @@ def run_sustained(quick=True):
                     f"k={k} bsz={bsz}"
                 )
             mops_s, mops_p = n / t_sync / 1e6, n / t_pipe / 1e6
+            spans = _stage_spans(lambda: _run_pipelined(cfg, k, chunks, bsz))
             rows.append({"figure": "ingest_sustained", "method": "sync",
                          "k": k, "bsz": bsz, "sustained_mops": mops_s})
             rows.append({"figure": "ingest_sustained", "method": "pipelined",
@@ -137,7 +173,8 @@ def run_sustained(quick=True):
                          "stalls": met["ingest_stalls"],
                          "stall_s": round(met["ingest_stall_s"], 4),
                          "max_in_flight": met["ingest_max_in_flight"],
-                         "dropped": met["ingest_elements_dropped"]})
+                         "dropped": met["ingest_elements_dropped"],
+                         **spans})
             rows.append({"figure": "ingest_sustained", "method": "speedup",
                          "k": k, "bsz": bsz, "x": mops_p / mops_s})
             swept.append((k, bsz))
@@ -195,11 +232,12 @@ def run_window(quick=True):
     t_p, est_p = pipe_run()
     if not np.array_equal(est_s, est_p):
         raise AssertionError("ingest window bench: pipelined diverges from sync")
+    spans = _stage_spans(pipe_run)
     rows = [
         {"figure": "ingest_window", "method": "sync", "k": k, "bsz": bsz,
          "e": e, "sustained_mops": n / t_s / 1e6},
         {"figure": "ingest_window", "method": "pipelined", "k": k, "bsz": bsz,
-         "e": e, "sustained_mops": n / t_p / 1e6},
+         "e": e, "sustained_mops": n / t_p / 1e6, **spans},
     ]
     common.csv_row(
         f"ingest_window/k{k}", t_p / max(n, 1) * 1e6,

@@ -1,0 +1,157 @@
+#!/usr/bin/env python
+"""obs_dump — inspect and assert on qobs observability artifacts.
+
+Subcommands (all read host-side artifacts the obs layer writes — see
+DESIGN.md §10):
+
+  jsonl PATH  [--require NAME ...]   summarize a --obs-jsonl metrics log:
+                                     record count, series of the last
+                                     snapshot; --require fails (exit 1) if a
+                                     metric family is absent (CI smoke).
+  trace PATH  [--require SPAN ...]   summarize a --obs-trace Chrome trace:
+                                     per-span counts and total seconds;
+                                     --require fails if a span is absent.
+  prom PATH   [--require NAME ...]   summarize a --obs-prom textfile:
+                                     family list; --require as above.
+  health      [--container qsketch]  build a healthy and a synthetically
+                                     top-bin-saturated sketch, print both
+                                     health reports, and fail unless the
+                                     saturated one warns while the healthy
+                                     one stays quiet (the acceptance probe).
+
+Usage:
+  PYTHONPATH=src python scripts/obs_dump.py jsonl /tmp/obs.jsonl \
+      --require ingest_elements_pushed tenant_slots_claimed
+  PYTHONPATH=src python scripts/obs_dump.py health
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+
+def _family(series_name: str) -> str:
+    """``name{a="x"}`` -> ``name`` (a bare name maps to itself)."""
+    return series_name.split("{", 1)[0]
+
+
+def _check_required(present: set, required: list, what: str) -> int:
+    missing = [r for r in required if r not in present]
+    if missing:
+        print(f"obs_dump: MISSING {what}: {', '.join(missing)}", file=sys.stderr)
+        return 1
+    if required:
+        print(f"obs_dump: all {len(required)} required {what} present")
+    return 0
+
+
+def cmd_jsonl(args) -> int:
+    """Summarize a JSONL metrics log; enforce --require families."""
+    recs = []
+    with open(args.path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                recs.append(json.loads(line))
+    if not recs:
+        print("obs_dump: empty JSONL log", file=sys.stderr)
+        return 1
+    last = recs[-1].get("metrics", {})
+    fams = sorted({_family(k) for k in last})
+    print(f"{args.path}: {len(recs)} records, last snapshot has "
+          f"{len(last)} series over {len(fams)} families")
+    for k in sorted(last):
+        v = last[k]
+        if isinstance(v, dict):  # histogram payload
+            v = f"histogram(count={v.get('count')}, sum={v.get('sum')})"
+        print(f"  {k} = {v}")
+    return _check_required(set(fams), args.require, "metric families")
+
+
+def cmd_trace(args) -> int:
+    """Summarize a Chrome trace JSON; enforce --require span names."""
+    with open(args.path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents", [])
+    totals: dict[str, list] = {}
+    for ev in events:
+        agg = totals.setdefault(ev["name"], [0, 0.0])
+        agg[0] += 1
+        agg[1] += ev.get("dur", 0.0) / 1e6
+    print(f"{args.path}: {len(events)} events over {len(totals)} span names")
+    for name in sorted(totals):
+        n, secs = totals[name]
+        print(f"  {name}: n={n} total={secs:.4f}s")
+    return _check_required(set(totals), args.require, "spans")
+
+
+def cmd_prom(args) -> int:
+    """Summarize a Prometheus textfile; enforce --require family names."""
+    fams = []
+    with open(args.path) as f:
+        for line in f:
+            m = re.match(r"# TYPE (\S+) (\S+)", line)
+            if m:
+                fams.append((m.group(1), m.group(2)))
+    print(f"{args.path}: {len(fams)} families")
+    for name, kind in fams:
+        print(f"  {name} ({kind})")
+    return _check_required({n for n, _ in fams}, args.require, "families")
+
+
+def cmd_health(args) -> int:
+    """Acceptance probe: saturated sketch warns, healthy sketch is quiet."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import qsketch
+    from repro.core.types import QSketchState, SketchConfig
+    from repro.obs import health
+
+    cfg = SketchConfig(m=128)
+    rng = np.random.default_rng(7)
+    ids = jnp.asarray(rng.integers(0, 2**63, 800, dtype=np.int64))
+    w = jnp.asarray(rng.uniform(0.1, 2.0, 800), jnp.float32)
+    healthy = qsketch.update(cfg, qsketch.init(cfg), ids, w)
+    saturated = QSketchState(
+        regs=jnp.full((cfg.m,), cfg.r_max, dtype=jnp.int8)
+    )
+
+    ok = 0
+    for label, state in (("healthy", healthy), ("saturated", saturated)):
+        rep = health.health_report(cfg, state)
+        print(f"[{label}] ok={rep['ok']} warnings={rep['warnings']}")
+        for name, c in rep["checks"].items():
+            print(f"  {name}: value={c['value']:.4g} "
+                  f"threshold={c['threshold']} warn={c['warn']}")
+        if label == "healthy" and not rep["ok"]:
+            print("obs_dump: healthy sketch raised warnings", file=sys.stderr)
+            ok = 1
+        if label == "saturated" and (
+            rep["ok"] or "register_saturation_frac" not in rep["warnings"]
+        ):
+            print("obs_dump: saturated sketch did not warn", file=sys.stderr)
+            ok = 1
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    for name, fn in (("jsonl", cmd_jsonl), ("trace", cmd_trace),
+                     ("prom", cmd_prom)):
+        p = sub.add_parser(name)
+        p.add_argument("path")
+        p.add_argument("--require", nargs="*", default=[])
+        p.set_defaults(fn=fn)
+    ph = sub.add_parser("health")
+    ph.set_defaults(fn=cmd_health)
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,7 +22,10 @@
 #   (which is why qlint runs AFTER the smoke benchmarks). The JSON report
 #   lands in experiments/analysis/report.json; any finding that is neither
 #   baselined (scripts/qlint_baseline.json) nor inline-suppressed fails
-#   the build.
+#   the build. Finally (3) an observability smoke: a short ingest-
+#   instrumented train run must produce a parseable --obs-jsonl snapshot
+#   with the required metric families and a Perfetto-loadable trace with
+#   the pipeline stage spans, asserted via scripts/obs_dump.py.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -42,4 +45,24 @@ if [[ "$tier2" == 1 ]]; then
   python -m benchmarks.run --smoke
   echo "== tier-2: qlint static analysis =="
   python scripts/check_static.py
+  echo "== tier-2: observability smoke (DESIGN.md §10) =="
+  # A few ingest-instrumented train steps must yield a parseable JSONL
+  # snapshot with the required metric families, a Perfetto-loadable trace
+  # with the pipeline stage spans, and health_report must flag a saturated
+  # sketch while staying quiet on a healthy one (scripts/obs_dump.py exits
+  # non-zero on any missing artifact).
+  obs_dir="$(mktemp -d)"
+  trap 'rm -rf "$obs_dir"' EXIT
+  python -m repro.launch.train --arch small-lm-16m --steps 4 --batch 2 \
+    --seq 32 --log-every 2 --ckpt-every 100 --ckpt-dir "$obs_dir/ckpt" \
+    --doc-window-capacity 64 --ingest --ingest-batch 128 --rotate-every 2 \
+    --obs-jsonl "$obs_dir/obs.jsonl" --obs-trace "$obs_dir/trace.json" \
+    > /dev/null
+  python scripts/obs_dump.py jsonl "$obs_dir/obs.jsonl" --require \
+    ingest_elements_pushed ingest_batches tenant_slots_claimed \
+    tenant_collision_rate > /dev/null
+  python scripts/obs_dump.py trace "$obs_dir/trace.json" --require \
+    ingest/push ingest/dispatch ingest/retire ingest/rotate > /dev/null
+  python scripts/obs_dump.py health > /dev/null
+  echo "obs smoke: OK"
 fi

@@ -1,8 +1,8 @@
 """qlint rule implementations — importing this package registers them all.
 
 Order here is report order: contract rules first (layering, int8-overflow,
-donation-safety, jit-purity, kernel-contract), then the folded-in legacy
-audits (docstrings, bench-schema).
+donation-safety, jit-purity, kernel-contract, metric-names), then the
+folded-in legacy audits (docstrings, bench-schema).
 """
 
 from repro.analysis.rules import (  # noqa: F401
@@ -11,6 +11,7 @@ from repro.analysis.rules import (  # noqa: F401
     donation,
     purity,
     kernel_contract,
+    metric_names,
     docstrings,
     bench_schema,
 )

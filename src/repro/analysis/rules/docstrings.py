@@ -9,8 +9,8 @@ reader has to reverse-engineer, so tier-2 fails the build instead.
 Checked per module: the module docstring, public module-level functions
 and classes, and public methods of public classes (dunders and private
 helpers exempt — the class docstring owns construction). Scope: ``core/``,
-``sketchstream/``, ``kernels/``, and ``analysis/`` itself (qlint eats its
-own dog food).
+``sketchstream/``, ``kernels/``, ``obs/``, and ``analysis/`` itself (qlint
+eats its own dog food).
 
 This rule absorbs the former standalone ``scripts/check_docstrings.py``
 (which now delegates here).
@@ -28,6 +28,7 @@ SCOPE = (
     "src/repro/sketchstream/",
     "src/repro/kernels/",
     "src/repro/analysis/",
+    "src/repro/obs/",
 )
 
 

@@ -1,0 +1,135 @@
+"""metric-names — the observability registry stays greppable and unique.
+
+Metric families are the public interface between this repo and whatever
+scrapes it (Prometheus, the JSONL log, dashboards built on either). Two
+failure modes silently rot that interface:
+
+* **Stringly-typed ad-hoc emissions.** A name computed at call time
+  (``counter(f"ingest_{field}")``) can't be grepped, renamed, or matched
+  against a recording rule; and a family declared inside a function body
+  re-registers on every call instead of once at import. Both defeat the
+  declare-once model ``obs.metrics`` is built around.
+* **Name collisions.** ``Registry._declare`` is idempotent for a
+  *matching* redeclaration and raises on a mismatched one — but only at
+  runtime, and only if both declaring sites actually execute in the same
+  process. Two modules independently claiming the same family name is a
+  merge-order landmine this rule catches statically.
+
+Checked: every call resolving (via each module's import map) to the
+sanctioned declaration points ``repro.obs.metrics.counter`` / ``gauge`` /
+``histogram`` must pass a literal ``snake_case`` name, sit at module
+scope, and be the name's only declaring site repo-wide. The defining
+module itself (``repro.obs.metrics``) is exempt — its ``counter`` et al.
+are the forwarding wrappers being policed.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.astutil import ImportMap
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Rule, register
+
+# The sanctioned declaration points: module-level forwarding functions on
+# the default registry. Registry *methods* aren't resolvable statically
+# (instance calls), which is fine — the repo's convention is the module
+# functions, and a private Registry is a test-local concern.
+DECL_FUNCS = {
+    "repro.obs.metrics.counter": "counter",
+    "repro.obs.metrics.gauge": "gauge",
+    "repro.obs.metrics.histogram": "histogram",
+}
+
+# Prometheus-compatible snake_case: lowercase start, word chars only.
+NAME_RE = re.compile(r"^[a-z][a-z0-9_]*$")
+
+DEFINING_MODULE = "repro.obs.metrics"
+
+
+def _function_body_calls(tree: ast.Module) -> set[int]:
+    """ids of every Call node nested inside any function/method body."""
+    inside: set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call):
+                    inside.add(id(sub))
+    return inside
+
+
+@register
+class MetricNamesRule(Rule):
+    """Flag non-literal, non-snake_case, function-scoped, or repo-wide
+    duplicate metric family declarations."""
+
+    name = "metric-names"
+    description = (
+        "metric families are declared once, at module scope, with literal "
+        "snake_case names unique across the repo"
+    )
+
+    def run(self, ctx) -> list[Finding]:
+        """Cross-module pass: collect every declaration site, then flag."""
+        findings: list[Finding] = []
+        # name -> (rel, lineno, kind) of the first declaring site seen, in
+        # deterministic module order, so duplicate reports are stable.
+        declared: dict[str, tuple[str, int, str]] = {}
+        for mod in ctx.iter_modules():
+            if mod.name == DEFINING_MODULE:
+                continue
+            imap = ImportMap(mod.tree, mod.name)
+            in_func = _function_body_calls(mod.tree)
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                qual = imap.resolve(node.func)
+                kind = DECL_FUNCS.get(qual or "")
+                if kind is None:
+                    continue
+                sel = ctx.is_selected(mod.rel)
+
+                def flag(msg: str) -> None:
+                    if sel:
+                        findings.append(
+                            Finding(self.name, mod.rel, node.lineno, msg)
+                        )
+
+                name_arg = node.args[0] if node.args else None
+                if name_arg is None:
+                    for kw in node.keywords:
+                        if kw.arg == "name":
+                            name_arg = kw.value
+                if not (
+                    isinstance(name_arg, ast.Constant)
+                    and isinstance(name_arg.value, str)
+                ):
+                    flag(
+                        f"{kind}() metric name must be a string literal "
+                        "(stringly-typed/ad-hoc names defeat grep, rename, "
+                        "and recording rules)"
+                    )
+                    continue
+                metric = name_arg.value
+                if not NAME_RE.match(metric):
+                    flag(
+                        f"metric name {metric!r} is not snake_case "
+                        "(expected ^[a-z][a-z0-9_]*$)"
+                    )
+                if id(node) in in_func:
+                    flag(
+                        f"metric family {metric!r} declared inside a "
+                        "function body — declare once at module scope"
+                    )
+                prior = declared.get(metric)
+                if prior is None:
+                    declared[metric] = (mod.rel, node.lineno, kind)
+                else:
+                    prel, plineno, pkind = prior
+                    flag(
+                        f"metric name {metric!r} already declared as "
+                        f"{pkind} at {prel}:{plineno} — family names must "
+                        "be unique repo-wide"
+                    )
+        return findings

@@ -40,6 +40,7 @@ from repro.core.types import (
     SketchConfig,
     WindowArrayState,
 )
+from repro.obs import metrics as obs_metrics
 
 from . import (
     dyn_array_update,
@@ -52,6 +53,26 @@ from . import (
 
 _NEG_INF = float(np.finfo(np.float32).min)
 _POS_INF = float(np.finfo(np.float32).max)
+
+_M_KERNEL_TRACES = obs_metrics.counter(
+    "kernel_trace_total",
+    help="op-wrapper executions under an active jax trace, per op — growth "
+         "at steady state means shape churn is forcing retraces",
+    labels=("op",),
+)
+
+
+def _note_trace(op: str) -> None:
+    """Count one trace-time execution of an op wrapper (retrace telemetry).
+
+    The wrapper body only re-runs when jit (re)traces, so at steady state
+    the per-op counter is flat; a rising count is the recompilation signal
+    (shape churn defeating the lru_cache'd executables). Host-side int
+    mutation during tracing captures no tracer, so the jitted computation
+    is untouched.
+    """
+    if obs_metrics.enabled() and not jax.core.trace_state_clean():
+        _M_KERNEL_TRACES.labels(op=op).inc()
 
 
 def _interpret_default() -> bool:
@@ -88,6 +109,7 @@ def qsketch_update_op(
     interpret: bool | None = None,
 ) -> QSketchState:
     """Kernel-backed equivalent of ``core.qsketch.update`` (bit-identical)."""
+    _note_trace("qsketch_update")
     interpret = _interpret_default() if interpret is None else interpret
     lo, hi = hashing.split_id64(ids)
     b = lo.shape[0]
@@ -138,6 +160,7 @@ def sketch_array_update_op(
     The register slab (K_pad x block_m, int32) must sit in VMEM next to the
     y tile; block_m is halved until the slab fits a ~6 MiB budget.
     """
+    _note_trace("sketch_array_update")
     interpret = _interpret_default() if interpret is None else interpret
     k = state.regs.shape[0]
     lo, hi = hashing.split_id64(ids)
@@ -273,6 +296,7 @@ def _dyn_array_update_body(
 ) -> DynArrayState:
     from repro.core import estimators
 
+    _note_trace("dyn_array_update")
     k = state.regs.shape[0]
     lo, hi = hashing.split_id64(ids)
     w = weights.astype(jnp.float32)
@@ -344,6 +368,7 @@ def window_union_estimate_op(
     bitwise. Epochs outside the window are masked by an include flag computed
     from the ring head, so the (traced) ``head`` never forces a host sync.
     """
+    _note_trace("window_union_estimate")
     interpret = _interpret_default() if interpret is None else interpret
     e, k, m = state.regs.shape
     w = window_array._check_w(state, w)
@@ -393,6 +418,7 @@ def estimate_rows_op(
     """
     from repro.core import estimation
 
+    _note_trace("estimate_rows")
     estimation._check_kind(kind)
     interpret = _interpret_default() if interpret is None else interpret
     k, m = regs.shape
@@ -444,6 +470,7 @@ def sharded_dyn_array_update_op(
     every operand the kernel touches is shard-local, so the check is
     vacuous.
     """
+    _note_trace("sharded_dyn_array_update")
     sharding.check_divisible(state.regs.shape[0], mesh, axis)
     k = state.regs.shape[0]
     rows = k // sharding.num_shards(mesh, axis)
@@ -492,6 +519,7 @@ def sharded_window_union_estimate_op(
     crosses a shard boundary. The ring head is replicated; w is a static
     host-side int.
     """
+    _note_trace("sharded_window_union_estimate")
     sharding.check_divisible(state.regs.shape[1], mesh, axis)
     w = window_array._check_w(state, w)
 
@@ -520,6 +548,7 @@ def float_sketch_update_op(
     interpret: bool | None = None,
 ) -> FloatSketchState:
     """Kernel-backed equivalent of ``core.baselines.lm_update`` (bit-identical)."""
+    _note_trace("float_sketch_update")
     interpret = _interpret_default() if interpret is None else interpret
     lo, hi = hashing.split_id64(ids)
     b = lo.shape[0]
@@ -545,6 +574,7 @@ def qdyn_qr_op(
     interpret: bool | None = None,
 ):
     """Kernel-backed q_R batch (matches core.qsketch_dyn._q_update_prob)."""
+    _note_trace("qdyn_qr")
     interpret = _interpret_default() if interpret is None else interpret
     b = weights.shape[0]
     bb = block_b or min(qdyn_qr.DEFAULT_BLOCK_B, _round_up(b, 8))

@@ -99,6 +99,18 @@ def main(argv=None):
     ap.add_argument("--no-resume", action="store_true")
     ap.add_argument("--straggler-factor", type=float, default=3.0)
     ap.add_argument("--metrics-file", default="")
+    ap.add_argument("--obs-jsonl", default="",
+                    help="append a registry snapshot (delta JSONL) every "
+                         "--log-every steps to this path")
+    ap.add_argument("--obs-prom", default="",
+                    help="write a Prometheus textfile snapshot here every "
+                         "--log-every steps (overwritten in place)")
+    ap.add_argument("--obs-trace", default="",
+                    help="record stage spans and save a Perfetto-loadable "
+                         "Chrome trace JSON here at exit")
+    ap.add_argument("--obs-sync-every", type=int, default=0,
+                    help="sampled block_until_ready cadence for device-time "
+                         "attribution in the trace (0 = never sync)")
     ap.add_argument("--abort-after", type=int, default=0,
                     help="simulate preemption: stop after N steps this invocation (tests)")
     args = ap.parse_args(argv)
@@ -107,8 +119,21 @@ def main(argv=None):
     from repro.data.tokens import TokenStream
     from repro.launch.mesh import make_local_mesh, make_sketch_mesh
     from repro.models import common as mcommon, sharding as msharding, transformer
+    from repro.obs import export as obs_export, trace as obs_trace
     from repro.sketchstream import monitor
     from repro.train import checkpoint, optimizer, train_step as ts
+
+    # Observability sinks (DESIGN.md §10): spans record only when a trace
+    # path is requested; the metrics registry is always live (QOBS_DISABLED
+    # turns it off) and the JSONL writer logs per-interval deltas.
+    if args.obs_trace or args.obs_sync_every:
+        obs_trace.configure(
+            enabled=bool(args.obs_trace), sync_every=args.obs_sync_every
+        )
+    obs_jsonl = (
+        obs_export.JsonlWriter(args.obs_jsonl, delta=True)
+        if args.obs_jsonl else None
+    )
 
     mesh = make_local_mesh()
     cfg = build_config(args.arch, args.smoke)
@@ -230,10 +255,11 @@ def main(argv=None):
         while step < args.steps and not stop["flag"]:
             batch = stream.batch_at(step)
             t0 = time.time()
-            params, opt_state, comp_state, sk_state, metrics = step_fn(
-                params, opt_state, comp_state, sk_state, batch
-            )
-            metrics = jax.tree.map(float, jax.device_get(metrics))
+            with obs_trace.span("train/step", step=step):
+                params, opt_state, comp_state, sk_state, metrics = step_fn(
+                    params, opt_state, comp_state, sk_state, batch
+                )
+                metrics = jax.tree.map(float, jax.device_get(metrics))
             dt = time.time() - t0
             ema = dt if ema is None else 0.9 * ema + 0.1 * dt
             if dt > args.straggler_factor * ema and step > start_step + 3:
@@ -275,6 +301,10 @@ def main(argv=None):
                 if metrics_f:
                     metrics_f.write(json.dumps(line) + "\n")
                     metrics_f.flush()
+                if obs_jsonl is not None:
+                    obs_jsonl.write(step=step)
+                if args.obs_prom:
+                    obs_export.write_prometheus(args.obs_prom)
             if step % args.ckpt_every == 0:
                 ckpt.save(step, {"params": params, "opt": opt_state, "comp": comp_state, "sk": sk_state})
             if args.abort_after and step - start_step >= args.abort_after:
@@ -288,6 +318,12 @@ def main(argv=None):
         ckpt.close()
         if metrics_f:
             metrics_f.close()
+        if args.obs_prom:
+            obs_export.write_prometheus(args.obs_prom)
+        if args.obs_trace:
+            obs_trace.save(args.obs_trace)
+            print(f"[train] obs trace saved to {args.obs_trace} "
+                  "(load at https://ui.perfetto.dev)", flush=True)
         for s, h in old_handlers.items():
             signal.signal(s, h)
     print(f"[train] done at step {step}", flush=True)

@@ -1,0 +1,27 @@
+"""qobs — host-side observability for the sketch stack (DESIGN.md §10).
+
+Four parts, all strictly OUTSIDE jit (no module here may touch a traced
+value — emissions are host Python, guarded by ``jax.core.trace_state_clean``
+wherever a caller might sit inside a traced region):
+
+* ``obs.metrics`` — a process-local registry of counters, gauges, and
+  log2-bucketed histograms (the paper's quantization idiom applied to
+  telemetry) with namespaced snake_case names, per-series labels,
+  delta/cumulative snapshots, and a no-op path when disabled.
+* ``obs.trace``   — span-based stage tracing (push/seal/dispatch/retire/
+  rotate/estimate/solve) with nesting via contextvars, Chrome trace-event
+  JSON export loadable in Perfetto, and a sampled ``block_until_ready``
+  hook so device wall-time is attributable without syncing every batch.
+* ``obs.health``  — sketch self-introspection over every container state
+  (top-bin saturation, histogram occupancy, union-cache staleness,
+  directory load, anytime-vs-MLE drift, CI width) behind one
+  ``health_report`` with configurable warn thresholds.
+* ``obs.export``  — Prometheus text-format and JSONL snapshot writers,
+  wired into ``launch/train.py`` / ``launch/serve.py`` (``--obs-jsonl``,
+  ``--obs-prom``) and the ``scripts/obs_dump.py`` CLI.
+"""
+
+from repro.obs import export, health, metrics, trace  # noqa: F401
+from repro.obs.health import health_report  # noqa: F401
+from repro.obs.metrics import default_registry  # noqa: F401
+from repro.obs.trace import span  # noqa: F401

@@ -1,0 +1,135 @@
+"""Registry exporters: Prometheus text format and JSONL snapshots.
+
+Two sinks, both pull-free (this repo has no HTTP server dependency and
+adds none):
+
+* ``prometheus_text(registry)`` renders the classic Prometheus exposition
+  format (text/plain version 0.0.4): ``# HELP`` / ``# TYPE`` per family,
+  one line per series, histograms expanded to cumulative
+  ``_bucket{le=...}`` lines plus ``_sum`` / ``_count``. Write it to a file
+  (``write_prometheus``) and let node_exporter's textfile collector — or a
+  test's golden comparison — pick it up.
+* ``JsonlWriter`` appends one JSON object per ``write()`` call to a
+  ``.jsonl`` file: ``{"ts": <unix seconds>, "metrics": {series: value}}``
+  plus any caller-supplied extras (step number, health report). Delta mode
+  reports per-interval change, which is what a training-loop log wants.
+
+Both render from a registry snapshot on the host; with the registry
+disabled the snapshot is empty and the writers emit empty payloads rather
+than erroring, so ``--obs-jsonl`` composes with ``QOBS_DISABLED``.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+from repro.obs import metrics as obs_metrics
+from repro.obs.metrics import Registry
+
+
+def _fmt(v) -> str:
+    """Prometheus sample value: integers render bare, floats as repr."""
+    if isinstance(v, bool):
+        return "1" if v else "0"
+    if isinstance(v, int):
+        return str(v)
+    f = float(v)
+    if f == float("inf"):
+        return "+Inf"
+    if f == float("-inf"):
+        return "-Inf"
+    return repr(f)
+
+
+def _labels(pairs: dict) -> str:
+    if not pairs:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in pairs.items())
+    return "{" + inner + "}"
+
+
+def _fmt_le(bound: float) -> str:
+    if bound == float("inf"):
+        return "+Inf"
+    return repr(bound) if bound != int(bound) else str(int(bound))
+
+
+def prometheus_text(registry: Registry | None = None) -> str:
+    """Render every family of ``registry`` (default: the process default)
+    in Prometheus text exposition format. Histogram buckets are emitted
+    cumulatively per the format's contract (our storage is per-bucket)."""
+    reg = registry if registry is not None else obs_metrics.default_registry()
+    if not reg.enabled:
+        return ""
+    lines: list[str] = []
+    for fam in reg.families():
+        series = fam.series()
+        if not series:
+            continue
+        if fam.help:
+            lines.append(f"# HELP {fam.name} {fam.help}")
+        lines.append(f"# TYPE {fam.name} {fam.kind}")
+        for s in series:
+            if fam.kind == "histogram":
+                payload = s.read()
+                cum = 0
+                for bucket_n, le in zip(payload["buckets"], payload["le"]):
+                    cum += bucket_n
+                    lbl = _labels({**s.labels, "le": _fmt_le(le)})
+                    lines.append(f"{fam.name}_bucket{lbl} {cum}")
+                base = _labels(s.labels)
+                lines.append(f"{fam.name}_sum{base} {_fmt(payload['sum'])}")
+                lines.append(f"{fam.name}_count{base} {payload['count']}")
+            else:
+                lines.append(f"{fam.name}{_labels(s.labels)} {_fmt(s.value)}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def write_prometheus(path: str, registry: Registry | None = None) -> str:
+    """Write the Prometheus text rendering to ``path``; returns the path.
+
+    Overwrites in place — the textfile-collector convention is one file
+    holding the latest scrape, not an append log (that's ``JsonlWriter``).
+    """
+    with open(path, "w") as f:
+        f.write(prometheus_text(registry))
+    return path
+
+
+class JsonlWriter:
+    """Append-mode JSONL metrics log: one snapshot object per ``write``."""
+
+    def __init__(self, path: str, registry: Registry | None = None,
+                 delta: bool = False):
+        self.path = path
+        self.registry = (
+            registry if registry is not None else obs_metrics.default_registry()
+        )
+        self.delta = delta
+        # Truncate at open so each run's log stands alone.
+        with open(path, "w"):
+            pass
+
+    def write(self, **extra) -> dict:
+        """Append one snapshot record (plus ``extra`` key/values, e.g.
+        ``step=12``) and return it."""
+        rec = {
+            "ts": time.time(),
+            "metrics": self.registry.snapshot(delta=self.delta),
+        }
+        rec.update(extra)
+        with open(self.path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        return rec
+
+
+def append_snapshot(path: str, registry: Registry | None = None,
+                    delta: bool = False, **extra) -> dict:
+    """One-shot JSONL append without holding a writer (truncates nothing)."""
+    reg = registry if registry is not None else obs_metrics.default_registry()
+    rec = {"ts": time.time(), "metrics": reg.snapshot(delta=delta)}
+    rec.update(extra)
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    return rec

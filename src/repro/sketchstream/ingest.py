@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
 import time
 
 import jax
@@ -66,8 +67,49 @@ from repro.core import (
     window_array,
 )
 from repro.core.types import SketchConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.sketchstream import monitor
 
 POLICIES = ("block", "drop")
+
+# Declared metric families (one per counter, labeled by pipeline instance —
+# the Prometheus data model lets N concurrent pipelines share each name).
+_M_PUSHED = obs_metrics.counter(
+    "ingest_elements_pushed", "elements accepted into staging", labels=("pipe",))
+_M_DROPPED = obs_metrics.counter(
+    "ingest_elements_dropped", "elements shed by the drop policy", labels=("pipe",))
+_M_BATCHES = obs_metrics.counter(
+    "ingest_batches", "micro-batches dispatched to the device", labels=("pipe",))
+_M_PARTIAL = obs_metrics.counter(
+    "ingest_partial_batches", "mask-padded dispatches (flush/rotate seals)",
+    labels=("pipe",))
+_M_STALLS = obs_metrics.counter(
+    "ingest_stalls", "block-policy waits on a full queue", labels=("pipe",))
+_M_STALL_S = obs_metrics.counter(
+    "ingest_stall_s", "total seconds spent in backpressure waits", labels=("pipe",))
+_M_MAX_IN_FLIGHT = obs_metrics.gauge(
+    "ingest_max_in_flight", "high-water mark of the retire queue", labels=("pipe",))
+_M_ROTATIONS = obs_metrics.counter(
+    "ingest_rotations", "epoch rotations behind the retire barrier", labels=("pipe",))
+_M_BARRIERS = obs_metrics.counter(
+    "ingest_barriers", "retire barriers", labels=("pipe",))
+_M_IN_FLIGHT = obs_metrics.gauge(
+    "ingest_in_flight", "unretired in-flight batches", labels=("pipe",))
+
+_STAT_FAMILIES = {
+    "pushed": _M_PUSHED,
+    "dropped": _M_DROPPED,
+    "batches": _M_BATCHES,
+    "partial_batches": _M_PARTIAL,
+    "stalls": _M_STALLS,
+    "stall_s": _M_STALL_S,
+    "max_in_flight": _M_MAX_IN_FLIGHT,
+    "rotations": _M_ROTATIONS,
+    "barriers": _M_BARRIERS,
+}
+
+_PIPE_SEQ = itertools.count()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,19 +138,93 @@ class IngestConfig:
             raise ValueError(f"ingest policy must be one of {POLICIES}")
 
 
-@dataclasses.dataclass
 class IngestStats:
-    """Mutable telemetry counters of one pipeline (read via ``metrics()``)."""
+    """Mutable telemetry counters of one pipeline (read via ``metrics()``).
 
-    pushed: int = 0  # elements accepted into staging
-    dropped: int = 0  # elements shed by the drop policy
-    batches: int = 0  # micro-batches dispatched to the device
-    partial_batches: int = 0  # dispatched mask-padded (flush/rotate seals)
-    stalls: int = 0  # block-policy waits on a full queue
-    stall_s: float = 0.0  # total time spent in those waits
-    max_in_flight: int = 0  # high-water mark of the retire queue
-    rotations: int = 0
-    barriers: int = 0
+    Fields: ``pushed`` (elements accepted into staging), ``dropped`` (shed
+    by the drop policy), ``batches`` (micro-batches dispatched),
+    ``partial_batches`` (mask-padded flush/rotate seals), ``stalls`` /
+    ``stall_s`` (block-policy waits and their total seconds),
+    ``max_in_flight`` (retire-queue high-water mark), ``rotations``,
+    ``barriers``. All readable and assignable as plain attributes.
+
+    Storage is dual-backend: when the default obs registry is enabled at
+    construction, every field lives in a registry series under its declared
+    ``ingest_*`` family (labeled ``pipe=<instance>``), so exporters see
+    pipeline counters for free; when disabled, fields fall back to plain
+    locals — ingest counters feed CONTROL FLOW (rotation cadence in
+    ``benchmarks/ingest.py``), so unlike optional telemetry they must keep
+    counting with observability off.
+
+    Lifetime semantics (the PR 9 fix): counters no longer accumulate
+    forever across runs — construction resets this instance's series, and
+    ``snapshot(delta=True)`` / ``reset()`` give interval reads and explicit
+    re-arming (the ``max_in_flight`` high-water and ``stall_s`` total are
+    per-lifetime, not per-process).
+    """
+
+    FIELDS = tuple(_STAT_FAMILIES)
+
+    def __init__(self, pipe: str | None = None):
+        self.pipe = str(next(_PIPE_SEQ)) if pipe is None else str(pipe)
+        reg = obs_metrics.default_registry()
+        if reg.enabled:
+            self._series = {
+                f: fam.labels(pipe=self.pipe) for f, fam in _STAT_FAMILIES.items()
+            }
+            # A reused label (explicit pipe= names, or a restarted process
+            # registry) must not inherit the previous lifetime's counts.
+            for s in self._series.values():
+                s.reset()
+            self._local = None
+        else:
+            self._series = None
+            self._local = dict.fromkeys(self.FIELDS, 0)
+            self._local["stall_s"] = 0.0
+            self._delta = dict(self._local)
+
+    def snapshot(self, delta: bool = False) -> dict:
+        """``{field: value}``; ``delta=True`` reports change since the
+        previous delta snapshot and advances the baseline."""
+        if self._series is not None:
+            return {f: s.read(delta) for f, s in self._series.items()}
+        if delta:
+            out = {f: self._local[f] - self._delta[f] for f in self.FIELDS}
+            # Gauge semantics match the registry backend: report current.
+            out["max_in_flight"] = self._local["max_in_flight"]
+            self._delta = dict(self._local)
+            return out
+        return dict(self._local)
+
+    def reset(self) -> None:
+        """Zero every counter, the high-water mark, and delta baselines."""
+        if self._series is not None:
+            for s in self._series.values():
+                s.reset()
+        else:
+            self._local = dict.fromkeys(self.FIELDS, 0)
+            self._local["stall_s"] = 0.0
+            self._delta = dict(self._local)
+
+
+def _stat_property(field: str) -> property:
+    def get(self):
+        if self._series is not None:
+            return self._series[field].value
+        return self._local[field]
+
+    def set_(self, v):
+        if self._series is not None:
+            self._series[field].value = v
+        else:
+            self._local[field] = v
+
+    return property(get, set_, doc=f"the ``{field}`` counter (see class doc)")
+
+
+for _f in IngestStats.FIELDS:
+    setattr(IngestStats, _f, _stat_property(_f))
+del _f
 
 
 class IngestPipeline:
@@ -128,12 +244,13 @@ class IngestPipeline:
     ``.state`` across a push.
     """
 
-    def __init__(self, icfg: IngestConfig, state, update_fn, *, rotate_fn=None):
+    def __init__(self, icfg: IngestConfig, state, update_fn, *, rotate_fn=None,
+                 name: str | None = None):
         self.icfg = icfg
         self._state = state
         self._update = update_fn
         self._rotate = rotate_fn
-        self.stats = IngestStats()
+        self.stats = IngestStats(pipe=name)
         b = icfg.batch_size
         self._staging = [
             {
@@ -181,18 +298,19 @@ class IngestPipeline:
         self.stats.pushed += len(keys)
         b = self.icfg.batch_size
         off = 0
-        while off < len(keys):
-            take = min(b - self._fill, len(keys) - off)
-            buf = self._staging[self._cur]
-            sl = slice(self._fill, self._fill + take)
-            buf["keys"][sl] = keys[off : off + take]
-            buf["ids"][sl] = ids[off : off + take]
-            buf["w"][sl] = w[off : off + take]
-            buf["mask"][sl] = True
-            self._fill += take
-            off += take
-            if self._fill == b:
-                self._dispatch()
+        with obs_trace.span("ingest/push", n=len(keys)):
+            while off < len(keys):
+                take = min(b - self._fill, len(keys) - off)
+                buf = self._staging[self._cur]
+                sl = slice(self._fill, self._fill + take)
+                buf["keys"][sl] = keys[off : off + take]
+                buf["ids"][sl] = ids[off : off + take]
+                buf["w"][sl] = w[off : off + take]
+                buf["mask"][sl] = True
+                self._fill += take
+                off += take
+                if self._fill == b:
+                    self._dispatch()
 
     def flush(self) -> None:
         """Seal and dispatch the partial staging buffer (mask-padded to the
@@ -209,10 +327,11 @@ class IngestPipeline:
         it without racing in-flight device work.
         """
         self.flush()
-        if self._inflight:
-            jax.block_until_ready(self._inflight)
-            self._inflight.clear()
-        jax.block_until_ready(jax.tree.leaves(self._state))
+        with obs_trace.span("ingest/retire", in_flight=len(self._inflight)):
+            if self._inflight:
+                jax.block_until_ready(self._inflight)
+                self._inflight.clear()
+            jax.block_until_ready(jax.tree.leaves(self._state))
         self.stats.barriers += 1
 
     def rotate(self) -> None:
@@ -227,7 +346,8 @@ class IngestPipeline:
         if self._rotate is None:
             raise ValueError("this pipeline fronts a container without rotate()")
         self.barrier()
-        self._state = self._rotate(self._state)
+        with obs_trace.span("ingest/rotate"):
+            self._state = self._rotate(self._state)
         self.stats.rotations += 1
 
     def result(self):
@@ -237,15 +357,19 @@ class IngestPipeline:
 
     def metrics(self) -> dict:
         """Telemetry counters in the monitor-layer style (queue depth, stall
-        time, drops — the knobs an operator watches under load)."""
+        time, drops — the knobs an operator watches under load). Reading
+        also refreshes this pipe's ``ingest_in_flight`` gauge, so registry
+        exporters see the live queue depth."""
         s = self.stats
+        if obs_metrics.enabled():
+            _M_IN_FLIGHT.labels(pipe=s.pipe).set(len(self._inflight))
         return {
             "ingest_elements_pushed": s.pushed,
             "ingest_elements_dropped": s.dropped,
             "ingest_batches": s.batches,
             "ingest_partial_batches": s.partial_batches,
             "ingest_stalls": s.stalls,
-            "ingest_stall_s": s.stall_s,
+            "ingest_stall_s": float(s.stall_s),
             "ingest_in_flight": len(self._inflight),
             "ingest_max_in_flight": s.max_in_flight,
             "ingest_rotations": s.rotations,
@@ -267,7 +391,8 @@ class IngestPipeline:
             if self.icfg.policy == "drop":
                 return False
             t0 = time.perf_counter()
-            jax.block_until_ready(self._inflight.pop(0))
+            with obs_trace.span("ingest/stall", in_flight=len(self._inflight)):
+                jax.block_until_ready(self._inflight.pop(0))
             self.stats.stall_s += time.perf_counter() - t0
             self.stats.stalls += 1
             self._reap()
@@ -290,16 +415,22 @@ class IngestPipeline:
         # before the in-flight batch is guaranteed to have read its inputs.
         # The memcpy IS the staging->transfer hop; jax holds the only
         # reference afterwards, so later staging writes can never race it.
-        keys = jnp.asarray(buf["keys"].copy())
-        ids = jnp.asarray(buf["ids"].copy())
-        w = jnp.asarray(buf["w"].copy())
-        mask = jnp.asarray(buf["mask"].copy())
-        buf["mask"][:] = False  # pre-cleared for this buffer's next fill
-        self._state, ticket = self._update(self._state, keys, ids, w, mask)
+        with obs_trace.span("ingest/seal", n=n, partial=partial):
+            keys = jnp.asarray(buf["keys"].copy())
+            ids = jnp.asarray(buf["ids"].copy())
+            w = jnp.asarray(buf["w"].copy())
+            mask = jnp.asarray(buf["mask"].copy())
+            buf["mask"][:] = False  # pre-cleared for this buffer's next fill
+        with obs_trace.span("ingest/dispatch", n=n):
+            self._state, ticket = self._update(self._state, keys, ids, w, mask)
         self._inflight.append(ticket)
         self.stats.batches += 1
         self.stats.partial_batches += bool(partial)
         self.stats.max_in_flight = max(self.stats.max_in_flight, len(self._inflight))
+        # Sampled device-time attribution: every sync_every-th batch blocks
+        # on its own ticket under a span (obs/trace.py — the sampled batch
+        # trades away its overlap for an honest device-side duration).
+        obs_trace.maybe_sync("ingest/device_sync", ticket, self.stats.batches)
 
 
 def _ticketed(update):
@@ -340,7 +471,7 @@ def _dyn_update_fn(cfg: SketchConfig, use_kernel: bool):
 
 def dyn_pipeline(
     cfg: SketchConfig, state, icfg: IngestConfig = IngestConfig(),
-    *, use_kernel: bool = False,
+    *, use_kernel: bool = False, name: str | None = None,
 ) -> IngestPipeline:
     """Ingest front of a DynArray: donated fused keyed updates, no rotate.
 
@@ -349,7 +480,7 @@ def dyn_pipeline(
     The jitted update closure is cached per cfg, so pipelines over the
     same geometry share one compiled executable.
     """
-    return IngestPipeline(icfg, state, _dyn_update_fn(cfg, use_kernel))
+    return IngestPipeline(icfg, state, _dyn_update_fn(cfg, use_kernel), name=name)
 
 
 @functools.lru_cache(maxsize=32)
@@ -361,13 +492,14 @@ def _window_update_fn(cfg: SketchConfig):
 
 
 def window_pipeline(
-    cfg: SketchConfig, state, icfg: IngestConfig = IngestConfig()
+    cfg: SketchConfig, state, icfg: IngestConfig = IngestConfig(),
+    *, name: str | None = None,
 ) -> IngestPipeline:
     """Ingest front of a WindowArray: donated epoch+union updates, with
     ``rotate()`` running the donated ring rotation behind the retire
     barrier."""
     rot = lambda st: window_array.rotate(cfg, st, donate=True)
-    return IngestPipeline(icfg, state, _window_update_fn(cfg), rotate_fn=rot)
+    return IngestPipeline(icfg, state, _window_update_fn(cfg), rotate_fn=rot, name=name)
 
 
 @functools.lru_cache(maxsize=32)
@@ -382,11 +514,11 @@ def _sharded_dyn_update_fn(cfg: SketchConfig, mesh, axis: str):
 
 def sharded_dyn_pipeline(
     cfg: SketchConfig, mesh, state, icfg: IngestConfig = IngestConfig(),
-    *, axis: str = sharding.AXIS,
+    *, axis: str = sharding.AXIS, name: str | None = None,
 ) -> IngestPipeline:
     """Ingest front of a ShardedDynArray: the replicated staging batch is
     hash-routed shard-locally inside one donating jit per micro-batch."""
-    return IngestPipeline(icfg, state, _sharded_dyn_update_fn(cfg, mesh, axis))
+    return IngestPipeline(icfg, state, _sharded_dyn_update_fn(cfg, mesh, axis), name=name)
 
 
 @functools.lru_cache(maxsize=32)
@@ -401,13 +533,14 @@ def _sharded_window_update_fn(cfg: SketchConfig, mesh, axis: str):
 
 def sharded_window_pipeline(
     cfg: SketchConfig, mesh, state, icfg: IngestConfig = IngestConfig(),
-    *, axis: str = sharding.AXIS,
+    *, axis: str = sharding.AXIS, name: str | None = None,
 ) -> IngestPipeline:
     """Ingest front of a ShardedWindowArray: hash-routed donated updates
     plus the donated shard-local ring rotation behind the retire barrier."""
     rot = lambda st: sharded_window_array.rotate(cfg, mesh, st, axis=axis, donate=True)
     return IngestPipeline(
-        icfg, state, _sharded_window_update_fn(cfg, mesh, axis), rotate_fn=rot
+        icfg, state, _sharded_window_update_fn(cfg, mesh, axis), rotate_fn=rot,
+        name=name,
     )
 
 
@@ -483,12 +616,14 @@ class TenantWindowIngest:
 
     def metrics(self) -> dict:
         """Pipeline counters + directory collision telemetry, merged (same
-        directory-health scalars the synchronous monitors report)."""
+        directory-health scalars the synchronous monitors report, via the
+        shared helper — published under ``monitor="tenant_window_ingest"``)."""
         out = self.pipe.metrics()
-        out["tenant_slots_claimed"] = int(
-            jnp.sum((self.directory.fingerprints != 0).astype(jnp.int32))
-        )
-        out["tenant_collision_rate"] = float(
-            key_directory.collision_rate(self.directory)
+        dm = monitor.directory_metrics(self.directory)
+        out["tenant_slots_claimed"] = int(dm["tenant_slots_claimed"])
+        out["tenant_collision_rate"] = float(dm["tenant_collision_rate"])
+        monitor.publish_tenant_metrics(
+            "tenant_window_ingest",
+            {k: out[k] for k in ("tenant_slots_claimed", "tenant_collision_rate")},
         )
         return out

@@ -75,6 +75,7 @@ from __future__ import annotations
 
 from typing import Any, NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import (
@@ -101,6 +102,79 @@ from repro.core.types import (
     SketchArrayState,
     WindowArrayState,
 )
+from repro.obs import metrics as obs_metrics
+
+# Declared tenant-telemetry families, labeled by monitor instance kind — the
+# five monitor classes (and the ingest-front TenantWindowIngest) publish
+# through these instead of each hand-rolling its own dict plumbing.
+_M_TENANT_SEEN = obs_metrics.gauge(
+    "tenant_elements_seen", "live elements folded across all tenants",
+    labels=("monitor",))
+_M_TENANT_SLOTS = obs_metrics.gauge(
+    "tenant_slots_claimed", "directory slots holding a fingerprint",
+    labels=("monitor",))
+_M_TENANT_COLLISIONS = obs_metrics.gauge(
+    "tenant_collision_rate", "fraction of routed elements that collided",
+    labels=("monitor",))
+_M_TENANT_WEIGHT = obs_metrics.gauge(
+    "tenant_weight_total", "sum of per-tenant anytime estimates",
+    labels=("monitor",))
+_M_TENANT_WINDOW_WEIGHT = obs_metrics.gauge(
+    "tenant_window_weight", "sum of per-tenant windowed anytime estimates",
+    labels=("monitor",))
+_M_TENANT_WINDOW_EPOCH = obs_metrics.gauge(
+    "tenant_window_epoch", "monotone epoch clock of the window ring",
+    labels=("monitor",))
+
+_TENANT_FAMILIES = {
+    "tenant_elements_seen": _M_TENANT_SEEN,
+    "tenant_slots_claimed": _M_TENANT_SLOTS,
+    "tenant_collision_rate": _M_TENANT_COLLISIONS,
+    "tenant_weight_total": _M_TENANT_WEIGHT,
+    "tenant_window_weight": _M_TENANT_WINDOW_WEIGHT,
+    "tenant_window_epoch": _M_TENANT_WINDOW_EPOCH,
+}
+
+
+def directory_metrics(directory: DirectoryState) -> dict:
+    """The two directory-health scalars every tenant surface reports."""
+    return {
+        "tenant_slots_claimed": jnp.sum(
+            (directory.fingerprints != 0).astype(jnp.int32)
+        ),
+        "tenant_collision_rate": key_directory.collision_rate(directory),
+    }
+
+
+def publish_tenant_metrics(kind: str, values: dict) -> None:
+    """Mirror a tenant ``metrics()`` dict into the obs registry.
+
+    Values are jnp scalars; publication converts to host floats, which
+    blocks on those (tiny) device values — fine on the host, fatal under a
+    trace. Monitor ``metrics()`` is legitimately called INSIDE jitted train
+    steps (launch/train_step.py threads it through the logged aux), so this
+    no-ops under any active jax trace: the registry then simply reflects
+    the last host-side read.
+    """
+    if not obs_metrics.enabled() or not jax.core.trace_state_clean():
+        return
+    for name, v in values.items():
+        fam = _TENANT_FAMILIES.get(name)
+        if fam is not None:
+            fam.labels(monitor=kind).set(float(v))
+
+
+def tenant_metrics(kind: str, n_seen, directory: DirectoryState, **extras) -> dict:
+    """The shared tenant ``metrics()`` body: stream counter + directory
+    health + per-backend extras, in the fixed key order the monitor layer
+    has always reported, published to the registry under ``monitor=kind``.
+
+    The returned values stay jnp scalars (callers inside jit keep tracing;
+    host callers pay one tiny sync only if they convert)."""
+    out = {"tenant_elements_seen": n_seen, **directory_metrics(directory)}
+    out.update(extras)
+    publish_tenant_metrics(kind, out)
+    return out
 
 
 class MonitorState(NamedTuple):
@@ -318,11 +392,7 @@ class ShardedArrayMonitor:
 
     def metrics(self, state: ShardedArrayMonitorState) -> dict:
         """Cheap per-step scalars (NO estimation): stream + directory health."""
-        return {
-            "tenant_elements_seen": state.n_seen,
-            "tenant_slots_claimed": jnp.sum((state.directory.fingerprints != 0).astype(jnp.int32)),
-            "tenant_collision_rate": key_directory.collision_rate(state.directory),
-        }
+        return tenant_metrics("sharded_array", state.n_seen, state.directory)
 
 
 # ---------------------------------------------------------------------------
@@ -421,12 +491,10 @@ class DynArrayMonitor:
         """Cheap per-step scalars: stream + directory health, plus the total
         tracked weight — an O(K) sum of the anytime estimates, affordable
         every step precisely because no solve is involved."""
-        return {
-            "tenant_elements_seen": state.n_seen,
-            "tenant_slots_claimed": jnp.sum((state.directory.fingerprints != 0).astype(jnp.int32)),
-            "tenant_collision_rate": key_directory.collision_rate(state.directory),
-            "tenant_weight_total": jnp.sum(state.chats),
-        }
+        return tenant_metrics(
+            "dyn_array", state.n_seen, state.directory,
+            tenant_weight_total=jnp.sum(state.chats),
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -534,13 +602,11 @@ class WindowMonitor:
         """Cheap per-step scalars: stream + directory health + the window
         clock and the total windowed weight (an O(K) sum of the anytime
         union reads — no solve)."""
-        return {
-            "tenant_elements_seen": state.n_seen,
-            "tenant_slots_claimed": jnp.sum((state.directory.fingerprints != 0).astype(jnp.int32)),
-            "tenant_collision_rate": key_directory.collision_rate(state.directory),
-            "tenant_window_weight": jnp.sum(state.window.union_chats),
-            "tenant_window_epoch": state.window.epoch_id,
-        }
+        return tenant_metrics(
+            "window", state.n_seen, state.directory,
+            tenant_window_weight=jnp.sum(state.window.union_chats),
+            tenant_window_epoch=state.window.epoch_id,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -627,12 +693,10 @@ class ShardedDynMonitor:
     def metrics(self, state: ShardedDynMonitorState) -> dict:
         """Cheap per-step scalars: stream + directory health + total tracked
         weight (an O(K) sum of the sharded anytime estimates)."""
-        return {
-            "tenant_elements_seen": state.n_seen,
-            "tenant_slots_claimed": jnp.sum((state.directory.fingerprints != 0).astype(jnp.int32)),
-            "tenant_collision_rate": key_directory.collision_rate(state.directory),
-            "tenant_weight_total": jnp.sum(state.array.chats),
-        }
+        return tenant_metrics(
+            "sharded_dyn", state.n_seen, state.directory,
+            tenant_weight_total=jnp.sum(state.array.chats),
+        )
 
 
 class ShardedWindowMonitorState(NamedTuple):
@@ -742,10 +806,8 @@ class ShardedWindowMonitor:
         """Cheap per-step scalars: stream + directory health + the window
         clock and the total windowed weight (O(K) sum of the sharded
         anytime union reads)."""
-        return {
-            "tenant_elements_seen": state.n_seen,
-            "tenant_slots_claimed": jnp.sum((state.directory.fingerprints != 0).astype(jnp.int32)),
-            "tenant_collision_rate": key_directory.collision_rate(state.directory),
-            "tenant_window_weight": jnp.sum(state.window.union_chats),
-            "tenant_window_epoch": state.window.epoch_id,
-        }
+        return tenant_metrics(
+            "sharded_window", state.n_seen, state.directory,
+            tenant_window_weight=jnp.sum(state.window.union_chats),
+            tenant_window_epoch=state.window.epoch_id,
+        )
