@@ -27,6 +27,7 @@ SMOKE_SUITES = (
     "window_array",
     "window_array_sharded",
     "ingest",
+    "virtual_dyn_array",
 )
 
 
@@ -51,6 +52,7 @@ def main() -> None:
         register_size,
         sketch_array,
         throughput,
+        virtual_dyn_array,
         window_array,
     )
 
@@ -69,6 +71,7 @@ def main() -> None:
         "window_array": window_array.run,  # sliding-window reads vs per-epoch Newton
         "window_array_sharded": window_array.run_sharded,  # sharded ring (K, E) sweep
         "ingest": ingest.run,  # sustained_mops headline: pipelined vs sync
+        "virtual_dyn_array": virtual_dyn_array.run,  # register-sharing memory/accuracy headline
     }
     only = [s for s in args.only.split(",") if s]
     names = only or (list(SMOKE_SUITES) if args.smoke else list(suite))

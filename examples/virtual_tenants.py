@@ -1,0 +1,123 @@
+"""Register sharing for the long tail: a VirtualDynMonitor tracks per-tenant
+weighted cardinality with memory INDEPENDENT of the tenant count.
+
+The multi-tenant examples so far spend a dedicated row per tenant —
+`anytime_tenants.py` pays ~4.6 MiB for 4096 of them, and at the K = 10^7
+tenants a real fleet sees that is ~11 GiB of Dyn state for a workload where
+most tenants send a handful of events. The virtual tier (DESIGN.md §8.9)
+flips the trade: a few pinned whales keep exact dense rows + anytime
+martingales, and EVERY other tenant shares one fixed-size register pool —
+(tenant, register) pairs hash straight into it, no routing table, no
+per-tenant state at all. Tail reads are statistical: a compound-Poisson
+solve of the tenant's pooled registers with the expected cross-tenant noise
+cancelled, resolved down to the pool's noise floor.
+
+The demo streams a Zipf workload, then:
+  * reads whales exactly (hot martingales) and the tail statistically,
+    reporting error against exact truth relative to the noise floor;
+  * promotes a tenant that outgrew the tail mid-stream (`promote` — re-keys
+    nobody, unlike `key_directory.pin` on a dense directory);
+  * prints the memory ledger vs the dense-row alternative at fleet scale.
+
+    PYTHONPATH=src python examples/virtual_tenants.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SketchConfig, virtual_dyn_array as vda
+from repro.sketchstream import monitor
+
+
+def _pair(ids64):
+    ids64 = np.asarray(ids64, dtype=np.uint64)
+    return (
+        jnp.asarray((ids64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)),
+        jnp.asarray((ids64 >> np.uint64(32)).astype(np.uint32)),
+    )
+
+
+def main():
+    cfg = SketchConfig(m=128, b=8, seed=3)
+    n_tenants, n_pin, pool_size = 2048, 32, 2**16
+
+    rng = np.random.default_rng(7)
+    tenant_ids = rng.integers(0, 2**63, n_tenants, dtype=np.uint64)
+    # Zipf sizes by rank: a few whales, a long tail of ~8-event tenants.
+    sizes = np.maximum(6000.0 / np.arange(1, n_tenants + 1) ** 1.05, 8).astype(int)
+
+    mon = monitor.VirtualDynMonitor.for_pool(
+        cfg, pool_size, pinned=tuple(int(t) for t in tenant_ids[:n_pin])
+    )
+    st = mon.init()
+
+    # One flat shuffled stream of (tenant, event id, weight), fed in batches.
+    tidx = np.repeat(np.arange(n_tenants), sizes)
+    rng.shuffle(tidx)
+    n = tidx.shape[0]
+    ids = rng.permutation(np.arange(n, dtype=np.uint32))
+    w = rng.uniform(0.5, 1.5, n).astype(np.float32)
+    truth = np.zeros(n_tenants)
+    np.add.at(truth, tidx, w)
+
+    bs = 8192
+    for lo in range(0, n, bs):
+        sl = slice(lo, min(lo + bs, n))
+        st = mon.update(
+            st, _pair(tenant_ids[tidx[sl]]), jnp.asarray(ids[sl]), jnp.asarray(w[sl])
+        )
+
+    m = mon.metrics(st)
+    floor = float(vda.noise_floor(cfg, mon.vcfg, st.array))
+    print(f"stream:            {n:,} events over {n_tenants:,} tenants "
+          f"({n_pin} pinned)")
+    print(f"pool load factor:  {m['virtual_pool_load_factor']:.2f}  "
+          f"(health warns past 0.50)")
+    print(f"tail noise floor:  {floor:.1f} weight  "
+          f"(tenants under it read as pool noise)\n")
+
+    est = np.asarray(mon.estimate(st, _pair(tenant_ids)))
+    rel = np.abs(est - truth) / truth
+    print(f"{'tenant rank':>11} {'tier':>7} {'true':>9} {'estimate':>9} {'rel.err':>8}")
+    for r in (0, 8, 31, 64, 256, 1024, 2047):
+        tier = "hot" if r < n_pin else "tail"
+        print(f"{r:>11} {tier:>7} {truth[r]:>9,.0f} {est[r]:>9,.0f} {rel[r]:>8.1%}")
+    above = truth >= 2 * floor
+    tail_above = above & (np.arange(n_tenants) >= n_pin)
+    print(f"\nhot tenants:          exact martingale reads (mean rel.err "
+          f"{rel[:n_pin].mean():.1%})")
+    print(f"tail above 2x floor:  mean rel.err {rel[tail_above].mean():.1%} "
+          f"over {tail_above.sum()} tenants")
+    print(f"tail below floor:     noise-dominated by design "
+          f"({(~above)[n_pin:].sum()} tenants)\n")
+
+    # A tenant outgrew the tail: promote it to an exact hot row. Pool
+    # placement hashes (tenant, register) directly, so nobody else moves.
+    # The default is the epoch fence — the new row starts empty and every
+    # event from here on is tracked exactly (migrate=True instead carries
+    # the virtual row's registers over; see promote's docstring).
+    riser = int(tenant_ids[n_pin])  # rank 32: the biggest unpinned tenant
+    mon, st = mon.promote(st, riser)
+    w2 = rng.uniform(0.5, 1.5, 4096).astype(np.float32)
+    st = mon.update(
+        st, _pair(np.full(4096, riser, np.uint64)),
+        jnp.asarray(np.arange(n, n + 4096, dtype=np.uint32)), jnp.asarray(w2),
+    )
+    resumed = np.asarray(mon.estimate(st, _pair([riser])))[0]
+    print(f"promoted rank {n_pin} (epoch fence), then {len(w2):,} new events: "
+          f"hot estimate {resumed:,.0f} vs exact post-promotion truth "
+          f"{w2.sum():,.0f} ({abs(resumed - w2.sum()) / w2.sum():.1%} err, "
+          f"martingale-exact from here on)")
+
+    # The memory ledger at fleet scale: the virtual state never grows with K.
+    v_bytes = vda.memory_bytes(cfg, mon.vcfg)
+    print(f"\nvirtual state:     {v_bytes / 2**10:,.0f} KiB "
+          f"(pool + hot table), for ANY tail size")
+    for k in (10**5, 10**7):
+        d = vda.dense_memory_bytes(cfg, k)
+        print(f"dense rows K={k:.0e}: {d / 2**20:,.0f} MiB  "
+              f"-> {d / v_bytes:,.0f}x the virtual state")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,9 @@
 # - XLA_FLAGS exposes 8 host devices (per SNIPPETS.md) so mesh/sharding tests
 #   exercise multi-device code paths on a CPU-only box; an existing
 #   XLA_FLAGS setting is preserved and extended.
-# - --tier2 additionally (1) runs `python -m benchmarks.run --smoke` (the
+# - --tier2 additionally (0) re-runs the property + differential suites
+#   under HYPOTHESIS_PROFILE=deep (tier-1 uses the quick profile; see
+#   tests/conftest.py), then (1) runs `python -m benchmarks.run --smoke` (the
 #   quick profile over the fast suites, incl. the sharded SketchArray /
 #   DynArray / WindowArray sweeps and the estimation solver sweep) so CI
 #   catches benchmark-path rot without paying for the paper-scale sweeps,
@@ -41,6 +43,13 @@ fi
 python -m pytest -x -q "$@"
 
 if [[ "$tier2" == 1 ]]; then
+  echo "== tier-2: deep property/differential profile =="
+  # Tier-1 runs the property suites under the quick profile; tier-2 re-runs
+  # them with HYPOTHESIS_PROFILE=deep (more examples per @given test, no
+  # derandomization under real hypothesis) so the randomized algebra /
+  # oracle / statistical-envelope claims get real exploration in CI.
+  HYPOTHESIS_PROFILE=deep python -m pytest -x -q \
+    tests/test_property.py tests/test_differential.py
   echo "== tier-2: benchmark smoke paths =="
   python -m benchmarks.run --smoke
   echo "== tier-2: qlint static analysis =="

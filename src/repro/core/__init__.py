@@ -29,9 +29,11 @@ from . import (
     sharded_window_array,
     sharding,
     sketch_array,
+    virtual_dyn_array,
     window_array,
 )
 from .key_directory import DirectoryConfig, DirectoryState
+from .virtual_dyn_array import VirtualConfig
 from .types import (
     DynArrayState,
     DynState,
@@ -42,6 +44,7 @@ from .types import (
     ShardedWindowArrayState,
     SketchArrayState,
     SketchConfig,
+    VirtualDynArrayState,
     WindowArrayState,
 )
 
@@ -99,6 +102,8 @@ __all__ = [
     "WindowArrayState",
     "ShardedDynArrayState",
     "ShardedWindowArrayState",
+    "VirtualConfig",
+    "VirtualDynArrayState",
     "qsketch",
     "qsketch_dyn",
     "sketch_array",
@@ -107,6 +112,7 @@ __all__ = [
     "sharded_window_array",
     "sharding",
     "dyn_array",
+    "virtual_dyn_array",
     "window_array",
     "key_directory",
     "baselines",

@@ -425,19 +425,23 @@ def update_reference(
     independent ``qsketch_dyn.update_batch`` calls. O(K) dispatches —
     tests/benchmarks only, never the hot path. ``mask`` rows are dropped from
     their key's sub-stream entirely, so padded batches are verified too.
+    ``ids`` follows the usual contract: a uint32 array or a (lo, hi) pair.
     """
     import numpy as np
 
     keys_np = np.asarray(jnp.clip(keys.astype(jnp.int32), 0, state.regs.shape[0] - 1))
     live = np.ones(keys_np.shape, bool) if mask is None else np.asarray(mask)
-    ids_np, w_np = np.asarray(ids), np.asarray(weights)
+    lo, hi = hashing.split_id64(ids)
+    lo_np, hi_np, w_np = np.asarray(lo), np.asarray(hi), np.asarray(weights)
     rows = []
     for k in range(state.regs.shape[0]):
         st_k = DynState(regs=state.regs[k], hist=state.hists[k], chat=state.chats[k])
         sel = (keys_np == k) & live
         if sel.any():
             st_k = qsketch_dyn.update_batch(
-                cfg, st_k, jnp.asarray(ids_np[sel]), jnp.asarray(w_np[sel])
+                cfg, st_k,
+                (jnp.asarray(lo_np[sel]), jnp.asarray(hi_np[sel])),
+                jnp.asarray(w_np[sel]),
             )
         rows.append(st_k)
     return DynArrayState(

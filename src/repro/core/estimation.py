@@ -497,6 +497,194 @@ def estimate_hists_with_ci(
     return _hists_with_ci_impl(cfg, hists, kind=kind, solver=solver)
 
 
+# ---------------------------------------------------------------------------
+# Public API — pooled (virtual register sharing) solves
+# ---------------------------------------------------------------------------
+
+
+def pool_config(cfg: SketchConfig, pool_size: int) -> SketchConfig:
+    """Pool-geometry config of a shared register pool: the same register
+    family (b, and hence r_min/r_max/num_bins/top_bin) with m = M pool
+    slots.
+
+    The pool plane of a ``VirtualDynArray`` is itself ONE routed-convention
+    sketch of the whole tail stream: each element raises exactly one of M
+    slots, so the standard histogram MLE applies under this geometry. The
+    LUT tables key on (num_bins, r_min, top_bin) only — a pool config of the
+    same b shares the family tabulation with its dense siblings
+    (``lut_family_consts``).
+    """
+    if pool_size <= cfg.m:
+        raise ValueError(
+            f"pool_size {pool_size} must exceed m {cfg.m} (alpha = m/M < 1)"
+        )
+    return SketchConfig(m=pool_size, b=cfg.b, seed=cfg.seed)
+
+
+# Nested log2(u) grid of the compound-Poisson profile solve: a coarse sweep
+# of the whole representable octave range, then two refinements around the
+# running argmax. Final resolution 0.03125 octaves ≈ 2% in u — below the
+# statistical error of any virtual row. Grid search (not Newton) because the
+# mixture likelihood is multi-modal for near-empty rows and the solve must
+# be deterministic across backends.
+_VIRTUAL_GRID_STAGES = ((128, 2.0), (17, 0.25), (17, 0.03125))
+
+
+def _virtual_loglik(cfg: SketchConfig, h, lam, log2_u):
+    """Touched-bin log-likelihood of one full histogram under the
+    compound-Poisson register law, for a batch of candidate log2(u).
+
+    With per-slot element count N ~ Poisson(λ) and constant element weight
+    u, the Poisson generating function collapses the N-mixture in closed
+    form:  P(R ≤ v) = E_N[e^{−N·u·s(v)}] = exp(−λ·(1 − e^{−u·s(v)})),
+    s(v) = 2^{−(v+1)}. Bin 0 (value r_min) is exactly the N = 0 mass e^{−λ}
+    — constant in u — so it is omitted here and identifies λ separately
+    (``_virtual_hists_impl``). Evaluated via expm1 twice: g = −expm1(−u·s)
+    keeps small per-slot loads exact, and ln p_k = a_{k−1} +
+    ln(expm1(a_k − a_{k−1})) (a_k = −λ·g_k, increasing in k) subtracts the
+    two near-unity CDF values without f32 cancellation.
+    """
+    k = jnp.arange(cfg.num_bins, dtype=jnp.float32)
+    log2_s = -(k + cfg.r_min + 1.0)
+    us = jnp.exp2(log2_u[:, None] + log2_s[None, :])  # [G, bins]
+    g = -jnp.expm1(-us)
+    a = -lam * g  # increasing in k, in [−λ, 0]
+    da = a[:, 1:] - a[:, :-1]  # ≥ 0
+    lnp = a[:, :-1] + jnp.log(jnp.expm1(jnp.maximum(da, 1e-30)))
+    hk = h[1:].astype(jnp.float32)
+    return jnp.sum(jnp.where(hk[None, :] > 0, hk[None, :] * lnp, 0.0), axis=1)
+
+
+def _virtual_hist_solve(cfg: SketchConfig, h):
+    """Ŵ of ONE full histogram via the compound-Poisson profile MLE.
+
+    λ̂ = ln(m / T₀) from occupancy (exact: bin 0 is the Poisson zero mass),
+    clamped to ln(2m) on saturated rows (T₀ = 0 only bounds λ from below —
+    the standard linear-counting cap); û from the nested-grid profile
+    likelihood over the touched bins; Ŵ = m·λ̂·û estimates the row's total
+    load Σ_j c_j.
+    """
+    t0 = h[0].astype(jnp.float32)
+    lam = jnp.log(cfg.m / jnp.clip(t0, 0.5, None))
+    center = jnp.float32(0.0)
+    for npts, step in _VIRTUAL_GRID_STAGES:
+        offs = (jnp.arange(npts, dtype=jnp.float32) - (npts - 1) / 2.0) * step
+        grid = center + offs
+        ll = _virtual_loglik(cfg, h, lam, grid)
+        center = grid[jnp.argmax(ll)]
+    u = jnp.exp2(center)
+    return jnp.where(t0 >= cfg.m, jnp.float32(0.0), cfg.m * lam * u)
+
+
+def _virtual_hists_impl(cfg: SketchConfig, hists, *, solver: str):
+    """Compound-Poisson profile solve: Ĉ[K] from FULL histograms.
+
+    The plain routed convention is misspecified for lightly-loaded rows
+    (DESIGN.md §8.4) twice over. First, the quantized likelihood reads an
+    untouched register (bin 0, value r_min) as "the row's whole load
+    produced y ≤ r_min", whose probability e^{−C·2^{−(r_min+1)}} forces Ĉ
+    toward 0 the moment ANY bin-0 mass coexists with touched registers.
+    Second, even restricted to touched registers, a common-scale fit over
+    slots whose true loads disperse (few elements per slot — the virtual
+    regime) behaves like a geometric mean of the per-slot loads and lands
+    well below the arithmetic total. Dense Dyn rows dodge both with the
+    running martingale; a virtual row has no martingale, and both it and
+    the shared pool plane are lightly loaded BY DESIGN.
+
+    The fix models the dispersion instead of assuming it away (DESIGN.md
+    §8.9): per-slot load is compound Poisson — N ~ Poisson(λ) elements of
+    weight u — whose register law has the closed form
+    P(R ≤ v) = exp(−λ·(1 − e^{−u·2^{−(v+1)}})) (``_virtual_loglik``). The
+    joint MLE factorizes exactly: bin 0 is the N = 0 mass e^{−λ}, so
+    occupancy identifies λ̂ = ln(m/T₀) alone, and the touched bins profile
+    out û. Ĉ = m·λ̂·û. The limits are right: for u·s(v) ≪ 1 the law
+    reduces to the plain routed family with c = λu (fully-loaded rows lose
+    nothing), and a singleton-loaded row is exactly specified — one
+    element of weight w gives its register the law e^{−w·2^{−(v+1)}}, the
+    λ → 0 conditional of the mixture, so m·λ̂·û ≈ n·w̄. Untouched rows
+    (T₀ = m) report exactly 0.0. The solve is a deterministic nested grid —
+    ``solver`` is validated for API uniformity but "newton" and "lut"
+    produce identical results here ("fused" is rejected: histogram input).
+    """
+    _check_solver(solver, hists_input=True)
+    return jax.vmap(lambda h: _virtual_hist_solve(cfg, h))(hists)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("solver",))
+def estimate_hists_virtual(cfg: SketchConfig, hists, *, solver: str = "newton"):
+    """Ĉ[K] from FULL histograms via the compound-Poisson profile solve —
+    the light-load-safe read of the virtual tier (``_virtual_hists_impl``
+    has the derivation). ``solver="fused"`` maps to newton (histogram
+    input: nothing to fuse)."""
+    solver = "newton" if solver == "fused" else solver
+    return _virtual_hists_impl(cfg, hists, solver=solver)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("solver",))
+def estimate_rows_virtual(cfg: SketchConfig, regs, *, solver: str = "newton"):
+    """Ĉ[K] from register rows ``int8[K, m]`` via the compound-Poisson
+    profile solve (bincount each row, then ``estimate_hists_virtual``).
+
+    This is the read for register planes WITHOUT maintained martingales or
+    full per-row traffic — the virtual tier's gathered tenant rows — where
+    the plain routed MLE collapses on bin-0 mass and a touched-only
+    common-scale fit under-reads dispersed loads (see
+    ``_virtual_hists_impl``). ``solver="fused"`` maps to newton: the fused
+    kernel bakes in the plain routed guard, not the mixture law.
+    """
+    solver = "newton" if solver == "fused" else solver
+    hists = jax.vmap(lambda r: estimators.histogram(cfg, r))(regs)
+    return _virtual_hists_impl(cfg, hists, solver=solver)
+
+
+def estimate_pool_hist(
+    cfg: SketchConfig, pool_hist, pool_size: int, *, solver: str = "newton"
+):
+    """Ŵ_pool from the FULL pool histogram (bins sum to M): the pooled
+    solve — one O(2^b) histogram read, no register walk.
+
+    Runs the compound-Poisson virtual solve under the pool geometry
+    (``pool_config``): the pool plane is one routed-convention sketch of
+    the whole tail stream, and it is lightly loaded by design (load factor
+    is held below ~0.5, obs/health.py), exactly the regime the plain routed
+    MLE collapses in. Per-slot jump weights mix every tail tenant's
+    register loads, so the constant-jump assumption is coarser here than on
+    a single tenant's row — the exact ``w_tail`` accumulator remains the
+    authoritative pool total; this solve is the register-only
+    cross-check/telemetry read. ``solver="fused"`` maps to newton.
+    """
+    _check_solver(solver)
+    pcfg = pool_config(cfg, pool_size)
+    return estimate_hists_virtual(pcfg, pool_hist[None, :], solver=solver)[0]
+
+
+def cancel_pool_noise(cfg: SketchConfig, chat_virtual, chat_pool, pool_size: int):
+    """Noise-cancellation pre-pass of the virtual-sketch estimate
+    (Wang et al., arXiv 1811.09126; DESIGN.md §8.9).
+
+    A tail tenant's m gathered pool registers see its own stream plus an
+    ~α = m/M sample of every other tenant's traffic, so the routed MLE of
+    the gathered row satisfies E[Ŵ_v] ≈ W_t + α·(W_pool − W_t). Inverting:
+
+        Ŵ_t = (Ŵ_v − α·W_pool) / (1 − α),  clamped at 0
+
+    (the clamp: for light tenants the subtraction is noise-dominated and
+    may go negative; weight is nonnegative). ``chat_pool`` is the total
+    tail weight in the pool — callers should pass the exact ``w_tail``
+    accumulator when they have it (``virtual_dyn_array.estimate_tenants``
+    does); the pooled histogram MLE is an admissible but low-biased
+    fallback under heterogeneous slot loads (DESIGN.md §8.9). Broadcasts
+    over batched ``chat_virtual`` against a scalar ``chat_pool``.
+    """
+    if pool_size <= cfg.m:
+        raise ValueError(
+            f"pool_size {pool_size} must exceed m {cfg.m} (alpha = m/M < 1)"
+        )
+    alpha = jnp.float32(cfg.m / pool_size)
+    cancelled = (chat_virtual - alpha * chat_pool) / (1.0 - alpha)
+    return jnp.maximum(cancelled, 0.0)
+
+
 def _rows_with_ci_impl(cfg: SketchConfig, regs, *, kind, solver):
     _check_kind(kind)
     _check_solver(solver)

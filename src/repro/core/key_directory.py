@@ -106,6 +106,46 @@ class DirectoryConfig:
         return (self.seed * 0x9E3779B1 + 12) & 0xFFFFFFFF
 
 
+def pin(dcfg: DirectoryConfig, tenant, *, grow: bool = False) -> DirectoryConfig:
+    """Pin a tenant into the dedicated hot table: -> a NEW DirectoryConfig.
+
+    WARNING — pinning RE-KEYS every hashed tenant. The hashed range is
+    [num_pinned, capacity): appending to ``pinned`` shifts its base by one
+    and (unless ``grow=True``) shrinks ``num_hashed`` by one, so
+    ``route_slots`` moves essentially EVERY unpinned tenant to a different
+    slot. Dense containers routed by this directory (SketchArray / DynArray
+    / WindowArray rows) keep their old rows' register state, which the new
+    mapping no longer points at — estimates read other tenants' residue.
+    Callers pinning a live dense directory must therefore either:
+
+      * epoch-fence: re-init the sketch rows and the ``DirectoryState``
+        (fingerprint claims are per-slot and equally stale) and let history
+        age out — the window array's rotation clock is the natural fence; or
+      * rebuild: replay/merge old rows into their new slots host-side.
+
+    The virtual tier is immune to this footgun: ``VirtualDynArray`` pool
+    placement hashes (tenant, register) directly and never sees the pinned
+    set, which is why ``virtual_dyn_array.promote`` re-keys nobody and can
+    offer migration semantics (its docstring). This helper exists so dense
+    callers get the same one-call ergonomics WITH the contract spelled out.
+
+    grow=False (default) keeps ``capacity`` (the sketch row count) fixed —
+    the new hot slot is carved out of the hashed range. ``grow=True`` adds a
+    row (capacity + 1), preserving ``num_hashed``; the caller must grow the
+    fronted container by one row to match.
+    """
+    t = int(tenant)
+    if not 0 <= t < 2**64:
+        raise ValueError(f"tenant id out of 64-bit range: {tenant}")
+    if t in tuple(int(x) for x in dcfg.pinned):
+        raise ValueError(f"tenant {tenant} is already pinned")
+    return dataclasses.replace(
+        dcfg,
+        pinned=dcfg.pinned + (t,),
+        capacity=dcfg.capacity + (1 if grow else 0),
+    )
+
+
 class DirectoryState(NamedTuple):
     """Collision-telemetry state (routing itself is stateless).
 

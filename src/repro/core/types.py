@@ -204,6 +204,42 @@ class ShardedWindowArrayState(NamedTuple):
     epoch_id: jnp.ndarray  # int32 scalar, replicated monotone epoch counter
 
 
+class VirtualDynArrayState(NamedTuple):
+    """Register-sharing virtual DynArray (core/virtual_dyn_array.py).
+
+    The long tail of tenants shares one physical register pool: tail tenant
+    t's logical register j lives at ``pool[hash(t, j) mod M]``, so pool slots
+    are written by many tenants and a per-tenant read is *noisy* — estimates
+    subtract the expected contribution of other tenants' traffic at query
+    time (Wang et al., arXiv 1811.09126; DESIGN.md §8.9) instead of being
+    bit-identical to a dedicated sketch. Pinned hot tenants bypass the pool
+    entirely and keep dedicated dense ``DynArrayState`` rows, so their reads
+    stay exact.
+
+    ``pool_hist`` is the full value histogram of the pool plane (bin
+    ``v - r_min`` counts slots at value v, *including* untouched slots at
+    ``r_min`` — pool-geometry "full" hist, unlike the touched-only DynArray
+    hists), which makes the pool-total solve an O(2^b) read. ``n_tail``
+    counts live tail element-occurrences folded in (telemetry only).
+
+    ``w_tail`` accumulates the exact total weight of live tail occurrences.
+    It is the noise scale of the cancellation pre-pass: the expected
+    cross-tenant noise on one tenant's virtual row is α·w_tail with
+    α = m/M, and an exact scalar beats re-estimating the pool total from
+    ``pool_hist`` (the pooled MLE is biased low under heterogeneous slot
+    loads — DESIGN.md §8.9). Under the repo's disjoint-shard convention it
+    is exact and merges by addition; re-sent duplicate occurrences inflate
+    it (registers max-dedup, the scalar cannot), making the cancelled
+    estimate conservative — the documented failure direction.
+    """
+
+    pool: jnp.ndarray  # int8[M], shared tail register pool, init r_min
+    pool_hist: jnp.ndarray  # int32[2^b], full value hist of the pool plane
+    n_tail: jnp.ndarray  # int32 scalar, live tail element-occurrences folded
+    w_tail: jnp.ndarray  # f32 scalar, exact total live tail weight folded
+    hot: DynArrayState  # dedicated dense rows of the pinned hot tenants
+
+
 class FloatSketchState(NamedTuple):
     """LM / FastGM / FastExpSketch state: float32 min-registers."""
 

@@ -1,0 +1,607 @@
+"""VirtualDynArray: register-sharing virtual sketches for the long tail.
+
+Dense keyed containers pay ``int8[m] + int32[2^b] + f32`` *per tenant*, which
+caps a single host near K = 2^20 rows (ROADMAP). Following the virtual-sketch
+construction of Wang et al. (arXiv 1811.09126) — the same paper the Dyn
+variant's dynamic-properties estimator draws on — this container shares ONE
+physical register pool ``int8[M]`` across the entire tail: tail tenant t's
+logical register j lives at
+
+    p(t, j) = hash(t_lo, t_hi, j; salt_pool) mod M,
+
+so per-tenant marginal cost drops from ~m + 4·2^b bytes to ZERO (the pool is
+sized once for aggregate traffic, not per tenant) and a single host pushes
+past K = 1e7 tenants (benchmarks/virtual_dyn_array.py).
+
+The price is exactness: a pool slot is max-shared by every tenant whose
+(t, j) lands on it, so a tenant's gathered virtual row estimates the union of
+its own stream with a ~(m_v/M) sample of everyone else's. Estimates
+therefore run a *noise-cancellation pre-pass* (DESIGN.md §8.9): with
+α = m_v/M,
+
+    Ŵ_v ≈ W_t + α · (W_pool − W_t)      ⇒      Ŵ_t = (ρ·Ŵ_v − α·W_pool) / (1 − α)
+
+clamped at 0, where Ŵ_v is the compound-Poisson profile solve of the
+tenant's m_v gathered pool registers
+(``estimation.estimate_rows_virtual`` — light-load-safe where the plain
+routed MLE collapses), W_pool the total tail weight in the pool — read from
+the exact ``w_tail`` accumulator the updates maintain — and ρ the in-vivo
+calibration factor (``pool_calibration``): the ratio of the pool plane's
+exact total to its own profile solve, correcting the solve's
+weight-dispersion contraction at the live workload. m_v is the VIRTUAL row
+width (``VirtualConfig.m_virtual``, default cfg.m) — virtual registers are
+hash ranges, not storage, so the tail row width is a free statistical knob.
+This trades the dense containers' bit-identity for a variance bound — the
+statistical contract the property suite (tests/test_property.py) checks
+instead of equality.
+
+Hot tenants opt OUT of sharing: ``VirtualConfig.pinned`` tenants keep
+dedicated dense ``DynArray`` rows (exact registers, exact O(1) martingale
+reads), routed by the same ``key_directory`` machinery as every other keyed
+container. ``promote`` moves a tail tenant into the hot tier after traffic
+has already landed in the pool — see its docstring for the residue
+semantics (estimates never double-count: a hot tenant reads its dense row
+ONLY, never the pool).
+
+Update cost is O(B log B) (slot grouping sort) + O(B) scatters, independent
+of both K and M. The pool histogram is FULL (bin 0 counts untouched r_min
+slots; bins always sum to M) and maintained incrementally — each slot the
+batch raises moves one unit of mass old-bin -> new-bin, verified against
+``rebuild_pool_hist`` in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import typing
+
+from . import dyn_array, estimation, estimators, hashing, key_directory, qsketch_dyn
+from .types import DynArrayState, SketchConfig, VirtualDynArrayState
+
+
+@dataclasses.dataclass(frozen=True)
+class VirtualConfig:
+    """Frozen (hashable) virtual-tier config — a valid ``jax.jit`` static arg.
+
+    Attributes:
+      pool_size: M, the shared physical register pool slots. Must exceed the
+        virtual register count (noise cancellation divides by 1 − m_v/M) —
+        in practice M ≫ m_v: the pool is sized for aggregate tail traffic,
+        e.g. 2^26 slots = 64 MiB serves 1e7 tenants (benchmarks).
+      m_virtual: m_v, registers per VIRTUAL (tail) row — None means cfg.m.
+        Virtual registers are free: they are a hash range, not storage, so
+        the tail can run much wider rows than the dense tier at zero memory
+        cost (the vHLL decoupling). Wider rows cut estimation variance
+        (∝ 1/√m_v) but raise the noise floor (α = m_v/M) — size m_v near
+        the typical above-floor tail tenant's cardinality (DESIGN.md §8.9).
+      pinned: static tuple of 64-bit tenant ids in the hot tier, each with a
+        dedicated dense DynArray row [0, len(pinned)); everyone else shares
+        the pool. Order is the row order.
+      seed: base salt; the pool-placement role derives its own sub-salt so it
+        is independent of the register-choice and routing roles.
+    """
+
+    pool_size: int
+    m_virtual: int | None = None
+    pinned: tuple = ()
+    seed: int = 0x5EED
+
+    def __post_init__(self):
+        if self.pool_size < 3:
+            raise ValueError("virtual pool needs pool_size >= 3 slots")
+        if self.m_virtual is not None and self.m_virtual < 2:
+            raise ValueError("m_virtual must be >= 2 virtual registers")
+        if len(set(self.pinned)) != len(self.pinned):
+            raise ValueError("pinned tenant ids must be distinct")
+        for t in self.pinned:
+            if not 0 <= int(t) < 2**64:
+                raise ValueError(f"pinned tenant id out of 64-bit range: {t}")
+
+    @property
+    def num_hot(self) -> int:
+        """Dedicated dense rows (== len(pinned))."""
+        return len(self.pinned)
+
+    @property
+    def salt_pool(self) -> int:
+        """Derived salt of the (tenant, register) -> pool-slot placement role."""
+        return (self.seed * 0x9E3779B1 + 21) & 0xFFFFFFFF
+
+    @property
+    def directory(self) -> key_directory.DirectoryConfig:
+        """The hot/tail routing directory: pinned tenants own slots
+        [0, num_hot); every hashed (tail) tenant collapses onto the single
+        sentinel slot num_hot. Tail membership is the test
+        ``route_slots(...) < num_hot`` — the virtual tier needs no dense
+        row per tail tenant, so one sentinel slot suffices and pinning
+        never re-keys the tail (unlike dense directories, see
+        ``key_directory.pin``)."""
+        return key_directory.DirectoryConfig(
+            capacity=self.num_hot + 1, seed=self.seed, pinned=self.pinned
+        )
+
+
+def tail_m(cfg: SketchConfig, vcfg: VirtualConfig) -> int:
+    """m_v, the virtual (tail) row width: ``vcfg.m_virtual`` or cfg.m."""
+    return cfg.m if vcfg.m_virtual is None else vcfg.m_virtual
+
+
+def tail_config(cfg: SketchConfig, vcfg: VirtualConfig) -> SketchConfig:
+    """Tail-geometry config: the dense register family (b, hence
+    r_min/r_max/num_bins) at the VIRTUAL row width m_v. Register choice,
+    value quantization and the row solve for tail tenants all run under
+    this geometry; the hot tier keeps the dense ``cfg`` untouched."""
+    m_v = tail_m(cfg, vcfg)
+    if m_v == cfg.m:
+        return cfg
+    return SketchConfig(m=m_v, b=cfg.b, seed=cfg.seed)
+
+
+def _check_pool(cfg: SketchConfig, vcfg: VirtualConfig) -> None:
+    if vcfg.pool_size <= tail_m(cfg, vcfg):
+        raise ValueError(
+            f"pool_size {vcfg.pool_size} must exceed m_v {tail_m(cfg, vcfg)}: "
+            "noise cancellation divides by 1 - m_v/M"
+        )
+
+
+def init(cfg: SketchConfig, vcfg: VirtualConfig) -> VirtualDynArrayState:
+    """Fresh virtual tier: empty pool (all r_min, full hist mass in bin 0),
+    plus one dense DynArray row per pinned tenant (at least one placeholder
+    row so the hot leaves keep static shapes when nothing is pinned — the
+    placeholder never receives traffic)."""
+    _check_pool(cfg, vcfg)
+    pool_hist = jnp.zeros((cfg.num_bins,), jnp.int32).at[0].set(vcfg.pool_size)
+    return VirtualDynArrayState(
+        pool=jnp.full((vcfg.pool_size,), cfg.r_min, dtype=jnp.int8),
+        pool_hist=pool_hist,
+        n_tail=jnp.int32(0),
+        w_tail=jnp.float32(0.0),
+        hot=dyn_array.init(cfg, max(1, vcfg.num_hot)),
+    )
+
+
+def pool_slots(cfg: SketchConfig, vcfg: VirtualConfig, t_lo, t_hi, j) -> jnp.ndarray:
+    """Physical pool slot of (tenant, register j): int32 in [0, M).
+
+    Pure function of (tenant id words, register index, salt_pool) — the same
+    stateless-hash contract as ``key_directory.route_slots``, so every host
+    (and the Pallas kernel) places identically. Broadcasts: feeding
+    ``t_lo[:, None]`` against ``j[None, :]`` yields a [T, m_v] gather map.
+    """
+    return hashing.hash_mod(
+        (t_lo, t_hi, j.astype(jnp.uint32)), vcfg.salt_pool, vcfg.pool_size
+    )
+
+
+def virtual_rows(cfg: SketchConfig, vcfg: VirtualConfig, state, t_lo, t_hi) -> jnp.ndarray:
+    """Gather the virtual register rows ``int8[T, m_v]`` of T tenants.
+
+    Row t is the tenant's logical sketch as seen through the shared pool —
+    its own stream max-merged with whatever other tail traffic landed on the
+    same slots (the noise the estimate-time cancellation removes).
+    """
+    j = jnp.arange(tail_m(cfg, vcfg), dtype=jnp.int32)
+    p = pool_slots(cfg, vcfg, t_lo[:, None], t_hi[:, None], j[None, :])
+    return state.pool[p]
+
+
+class PoolPlan(typing.NamedTuple):
+    """B-sized scatter payloads of one pool batch update (read-only half).
+
+    The pooled analogue of ``dyn_array.UpdatePlan``, with two differences:
+    grouping is by pool slot alone (no per-tenant dedup — duplicates map to
+    the same (p, y) and the scatter-max is idempotent, and there is no tail
+    martingale to protect), and the histogram is FULL, so a raised slot
+    always retires one unit from its old bin — including bin 0, which
+    carries the untouched r_min mass.
+    """
+
+    p: jax.Array  # int32[B] pool slots
+    y_eff: jax.Array  # int8[B] scatter-max payload (r_min where unchanged)
+    old_bin: jax.Array  # int32[B] batch-start bin of pool[p]
+    final_bin: jax.Array  # int32[B] post-batch bin of pool[p]
+    hist_dec: jax.Array  # int32[B] -1 where this element retires old_bin mass
+    hist_inc: jax.Array  # int32[B] +1 where this element deposits final_bin
+
+
+def _plan_pool(cfg: SketchConfig, pool, p, y, live) -> PoolPlan:
+    """Read-only half of the pool update: batch-start change indicators and
+    incremental full-histogram bookkeeping, all B-sized. Mirrors
+    ``dyn_array._plan_scatters``' segment-max construction so the committed
+    scatter-max and the histogram move agree exactly."""
+    old = pool[p].astype(jnp.int32)
+    changed = live & (y > old)
+    y_eff = jnp.where(changed, y, jnp.int32(cfg.r_min))
+
+    # Post-batch slot value = max(old, segment max of y_eff over the slot's
+    # group): exactly what the commit's scatter-max leaves there, computed
+    # without re-gathering the scattered pool.
+    order = jnp.lexsort((p,))
+    sp = p[order]
+    starts = jnp.concatenate([jnp.array([True]), sp[1:] != sp[:-1]])
+    seg = jnp.cumsum(starts) - 1
+    smax = jax.ops.segment_max(
+        y_eff[order], seg, num_segments=y_eff.shape[0], indices_are_sorted=True
+    )
+    final_sorted = jnp.maximum(old[order], smax[seg])
+    final = jnp.zeros_like(final_sorted).at[order].set(final_sorted)
+    slot_first = jnp.zeros_like(starts).at[order].set(starts)
+    slot_changed = slot_first & (final > old)
+    return PoolPlan(
+        p=p,
+        y_eff=y_eff.astype(jnp.int8),
+        old_bin=old - cfg.r_min,
+        final_bin=final - cfg.r_min,
+        hist_dec=jnp.where(slot_changed, -1, 0),
+        hist_inc=jnp.where(slot_changed, 1, 0),
+    )
+
+
+def _apply_pool_update(cfg: SketchConfig, state: VirtualDynArrayState, p, y, w, live):
+    """Shared tail of the jnp and Pallas-backed pool updates: plan + commit
+    fused in one trace, so ``ops.virtual_dyn_update_op`` is bit-identical to
+    ``update_tenants`` by construction (the kernel only computes (p, y))."""
+    plan = _plan_pool(cfg, state.pool, p, y, live)
+    pool = state.pool.at[plan.p].max(plan.y_eff)
+    pool_hist = state.pool_hist.at[plan.old_bin].add(plan.hist_dec)
+    pool_hist = pool_hist.at[plan.final_bin].add(plan.hist_inc)
+    n_tail = state.n_tail + jnp.sum(live).astype(jnp.int32)
+    w_tail = state.w_tail + jnp.sum(jnp.where(live, w, 0.0)).astype(jnp.float32)
+    return state._replace(
+        pool=pool, pool_hist=pool_hist, n_tail=n_tail, w_tail=w_tail
+    )
+
+
+def _apply_update(
+    cfg: SketchConfig, vcfg: VirtualConfig, state: VirtualDynArrayState,
+    t_lo, t_hi, lo, hi, w, live, p, y,
+) -> VirtualDynArrayState:
+    """Hot/tail split on pre-computed pool placement (p, y): the common,
+    data-dependent tail of the jnp and Pallas-backed entries. Hot traffic
+    runs the exact dense DynArray update on the pinned rows (bit-identical
+    to a dedicated DynArray fed the hot sub-stream); tail traffic
+    scatter-maxes into the shared pool."""
+    slots = key_directory.route_slots(vcfg.directory, (t_lo, t_hi))
+    is_hot = slots < vcfg.num_hot
+
+    hot_keys = jnp.clip(slots, 0, state.hot.regs.shape[0] - 1)
+    hot_live = live & is_hot
+    q = qsketch_dyn._q_update_prob(cfg, state.hot.hists[hot_keys], w)
+    hot = dyn_array._apply_update(cfg, state.hot, hot_keys, lo, hi, w, hot_live, q)
+
+    return _apply_pool_update(cfg, state._replace(hot=hot), p, y, w, live & ~is_hot)
+
+
+def _update_tenants_impl(
+    cfg: SketchConfig, vcfg: VirtualConfig, state: VirtualDynArrayState,
+    tenant_keys, ids, weights, mask=None,
+) -> VirtualDynArrayState:
+    t_lo, t_hi = hashing.split_id64(tenant_keys)
+    lo, hi = hashing.split_id64(ids)
+    w = weights.astype(jnp.float32)
+    live = qsketch_dyn._live_weight_mask(w, mask)
+    # Tail geometry: register choice j ∈ [0, m_v) AND the value draw (whose
+    # hash includes j) run under the virtual row width. The hot path below
+    # recomputes its own (j, y) under the dense cfg inside
+    # dyn_array._apply_update — the two geometries never mix.
+    j, y = qsketch_dyn._choose_and_quantize(tail_config(cfg, vcfg), lo, hi, w)
+    p = pool_slots(cfg, vcfg, t_lo, t_hi, j)
+    return _apply_update(cfg, vcfg, state, t_lo, t_hi, lo, hi, w, live, p, y)
+
+
+_update_tenants_jit = jax.jit(_update_tenants_impl, static_argnums=(0, 1))
+
+
+def update_tenants(
+    cfg: SketchConfig, vcfg: VirtualConfig, state: VirtualDynArrayState,
+    tenant_keys, ids, weights, mask=None,
+) -> VirtualDynArrayState:
+    """One fused batch over sparse 64-bit tenant ids: -> state'.
+
+    Pinned (hot) tenants update their dedicated dense rows with the full
+    DynArray semantics — per-(tenant, id) dedup, incremental histograms, the
+    batch-stale martingale — bit-identical to a dedicated ``DynArray`` fed
+    the hot sub-stream. Tail tenants scatter-max into the shared pool (no
+    dedup needed: a duplicate maps to the same (slot, value) and max is
+    idempotent; there is no per-tail-tenant running estimate — tail reads
+    solve at query time via ``estimate_tenants``).
+
+    mask: optional bool[B]; masked rows and degenerate weights are dropped
+    (``qsketch_dyn`` contract). Routing is stateless (``route_slots``), so
+    no directory state threads through — collision telemetry is meaningless
+    when every tail tenant shares one sentinel slot by design.
+    """
+    return _update_tenants_jit(cfg, vcfg, state, tenant_keys, ids, weights, mask)
+
+
+def estimate_pool_total(
+    cfg: SketchConfig, vcfg: VirtualConfig, state: VirtualDynArrayState,
+    *, solver: str = "newton",
+) -> jnp.ndarray:
+    """Ŵ_pool: total tail weight folded into the pool, from the maintained
+    full pool histogram — an O(2^b) read, no register walk.
+
+    The pool plane IS one routed-convention sketch of the whole tail stream
+    under the pool geometry (M slots, same register family): each tail
+    element raises exactly one pool slot. Solved through the estimation
+    layer under ``estimation.pool_config``; ``solver="fused"`` falls back to
+    newton (the fused kernel streams registers, not histograms).
+    """
+    return estimation.estimate_pool_hist(
+        cfg, state.pool_hist, vcfg.pool_size, solver=solver
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("solver",))
+def estimate_tenants(
+    cfg: SketchConfig, vcfg: VirtualConfig, state: VirtualDynArrayState,
+    tenant_keys, *, solver: str = "newton",
+) -> jnp.ndarray:
+    """Ŵ per queried tenant, f32[T] — the noise-cancelled virtual read.
+
+    Hot (pinned) tenants return their dense row's running martingale ONLY —
+    the pool never contributes, which is what makes ``promote`` residue-safe
+    (no double count by construction). Tail tenants gather their m pool
+    registers, solve the occupancy-scaled routed MLE
+    (``estimation.estimate_rows_virtual`` — light-load-safe where the plain
+    routed read collapses), scale by the in-vivo calibration ρ
+    (``pool_calibration``), and cancel the expected cross-tenant noise:  Ŵ_t = max(0, (ρ·Ŵ_v − α·W_pool) / (1 − α)),  α = m_v/M
+    (Wang et al. 1811.09126; derivation in DESIGN.md §8.9), with W_pool the
+    exact ``w_tail`` weight accumulator — not the pooled histogram MLE,
+    which inherits the same weight-dispersion contraction ρ corrects.
+    Unknown tail tenants (no traffic) read ≈0 — their slots are mostly
+    untouched and the cancellation clamps the residual noise at zero from
+    below.
+    """
+    _check_pool(cfg, vcfg)
+    t_lo, t_hi = hashing.split_id64(tenant_keys)
+    slots = key_directory.route_slots(vcfg.directory, (t_lo, t_hi))
+    is_hot = slots < vcfg.num_hot
+
+    tcfg = tail_config(cfg, vcfg)
+    rows = virtual_rows(cfg, vcfg, state, t_lo, t_hi)
+    chat_v = estimation.estimate_rows_virtual(tcfg, rows, solver=solver)
+    rho = pool_calibration(cfg, vcfg, state, solver=solver)
+    cancelled = estimation.cancel_pool_noise(
+        tcfg, rho * chat_v, state.w_tail, vcfg.pool_size
+    )
+
+    hot_chats = state.hot.chats[jnp.clip(slots, 0, state.hot.regs.shape[0] - 1)]
+    return jnp.where(is_hot, hot_chats, cancelled)
+
+
+def pool_calibration(
+    cfg: SketchConfig, vcfg: VirtualConfig, state: VirtualDynArrayState,
+    *, solver: str = "newton",
+) -> jnp.ndarray:
+    """ρ = w_tail / Ŵ_pool: the self-calibration factor of the virtual row
+    solve (f32 scalar, clamped to [0.5, 2]; 1.0 on an empty pool).
+
+    The compound-Poisson profile solve is exactly unbiased when element
+    weights are constant, but dispersed weights contract its effective mean
+    (Jensen against the Laplace transform — DESIGN.md §8.9), by a factor
+    that depends on the unknown weight distribution. The pool plane measures
+    that factor in vivo: it is one giant row under the SAME register family
+    and a comparable per-slot load law, and the sketch knows its total
+    weight EXACTLY (``w_tail``). The ratio of exact to solved pool total
+    therefore calibrates the family solve at the live workload's weight
+    distribution and load, and ``estimate_tenants`` scales each row solve
+    by it before noise cancellation. The clamp bounds the correction when
+    the pool is too empty to measure (few touched slots → noisy Ŵ_pool).
+    """
+    chat_pool = estimate_pool_total(cfg, vcfg, state, solver=solver)
+    rho = jnp.where(chat_pool > 0.0, state.w_tail / chat_pool, jnp.float32(1.0))
+    return jnp.clip(rho, 0.5, 2.0)
+
+
+def pool_load_factor(state: VirtualDynArrayState) -> jnp.ndarray:
+    """Fraction of pool slots ever raised above r_min (f32 scalar).
+
+    The saturation signal: past ~0.5 the per-slot collision noise grows
+    toward the signal and the cancellation's variance bound degrades —
+    ``obs/health.py`` warns on it (DESIGN.md §8.9 sizing policy).
+    """
+    m_size = state.pool.shape[0]
+    return 1.0 - state.pool_hist[0].astype(jnp.float32) / m_size
+
+
+def noise_floor(
+    cfg: SketchConfig, vcfg: VirtualConfig, state: VirtualDynArrayState
+) -> jnp.ndarray:
+    """Expected cross-tenant noise weight on ONE tenant's virtual row:
+    α·W_pool / (1 − α), f32 scalar — the quantity the cancellation
+    subtracts, from the exact ``w_tail`` accumulator. Tail estimates below
+    this floor are dominated by noise variance; ``obs/health.py`` exposes
+    it as a warning threshold."""
+    _check_pool(cfg, vcfg)
+    alpha = tail_m(cfg, vcfg) / vcfg.pool_size
+    return jnp.float32(alpha / (1.0 - alpha)) * state.w_tail
+
+
+def rebuild_pool_hist(cfg: SketchConfig, pool) -> jnp.ndarray:
+    """Full pool histogram from scratch (bins sum to M) — the O(M) reference
+    the incremental maintenance is tested against, and the rebuild ``merge``
+    uses."""
+    return jnp.bincount(
+        pool.astype(jnp.int32) - cfg.r_min, length=cfg.num_bins
+    ).astype(jnp.int32)
+
+
+def merge(
+    cfg: SketchConfig, vcfg: VirtualConfig,
+    a: VirtualDynArrayState, b: VirtualDynArrayState,
+) -> VirtualDynArrayState:
+    """Merge two fleets sketching (possibly overlapping) tail streams.
+
+    Pool: element-wise max (exact union — the same max monoid as every
+    register plane in the repo), histogram rebuilt. Hot tier: dense
+    ``dyn_array.merge`` (registers max, chats re-estimated via the MLE).
+    ``n_tail`` and ``w_tail`` add — exact for the repo's disjoint-shard
+    convention; overlapping streams inflate ``w_tail`` (the registers
+    max-dedup, the scalars cannot) and the cancelled tail reads go
+    conservative. Both states must come from the same (cfg, vcfg): shapes
+    and hash salts must agree or the slot spaces are incompatible.
+    """
+    if a.pool.shape != b.pool.shape:
+        raise ValueError(
+            f"virtual merge needs matching pools, got {a.pool.shape} vs {b.pool.shape}"
+        )
+    pool = jnp.maximum(a.pool, b.pool)
+    return VirtualDynArrayState(
+        pool=pool,
+        pool_hist=rebuild_pool_hist(cfg, pool),
+        n_tail=a.n_tail + b.n_tail,
+        w_tail=a.w_tail + b.w_tail,
+        hot=dyn_array.merge(cfg, a.hot, b.hot),
+    )
+
+
+def promote(
+    cfg: SketchConfig, vcfg: VirtualConfig, state: VirtualDynArrayState,
+    tenant, *, migrate: bool = False,
+) -> tuple[VirtualConfig, VirtualDynArrayState]:
+    """Pin a tail tenant into the hot tier: -> (vcfg', state').
+
+    The returned config has ``tenant`` appended to ``pinned`` (a NEW frozen
+    config — jitted callees recompile once, as with any static-arg change);
+    the returned state has one more dense row. Subsequent traffic for the
+    tenant updates that row; subsequent estimates read it ONLY — pool
+    residue from the tenant's pre-promotion traffic is never added to its
+    estimate, so promotion cannot double-count (tested in
+    tests/test_virtual_dyn_array.py). Other tail tenants are unaffected:
+    pool placement hashes (tenant, j) directly and never sees the pinned
+    set, so promotion re-keys nobody (contrast ``key_directory.pin`` for
+    dense directories).
+
+    Two residue semantics (the documented choice of satellite #3):
+
+    migrate=False (default) — *epoch fence*: the dense row starts EMPTY.
+      The tenant's history stays behind in the pool (it keeps inflating the
+      pool total and noise floor until the pool is rebuilt/aged, exactly
+      like any departed tail tenant's traffic) and the tenant's estimate
+      restarts from 0. Choose this when promotion coincides with an epoch
+      boundary (window rotation) or when the history is untrusted.
+
+    migrate=True — *carry the virtual row over*: the dense row seeds from
+      the tenant's gathered pool registers, with a rebuilt histogram and
+      chat re-estimated via the routed histogram MLE (the ``merge``
+      convention — registers and chat stay consistent for health drift
+      checks). The seed inherits the virtual row's cross-tenant noise (an
+      overestimate bounded by ``noise_floor``; the noise-cancelled read is
+      deliberately NOT used because a dense row's chat must be the MLE of
+      its own registers). Duplicates of already-seen elements re-sent after
+      migration find their register already at their y and leave the chat
+      unchanged — the no-double-count property the tests pin down.
+
+    The pool is untouched in both modes (residue removal would need per-slot
+    ownership the pool deliberately does not store).
+    """
+    t = int(tenant)
+    if t in tuple(int(x) for x in vcfg.pinned):
+        raise ValueError(f"tenant {tenant} is already pinned")
+    if migrate and tail_m(cfg, vcfg) != cfg.m:
+        raise ValueError(
+            "promote(migrate=True) needs m_virtual == cfg.m: a virtual row "
+            "under a different register modulus cannot seed a dense row "
+            "(register j of each geometry indexes a different element "
+            "subset) — use migrate=False (epoch fence) instead"
+        )
+    vcfg2 = dataclasses.replace(vcfg, pinned=vcfg.pinned + (t,))
+
+    num_hot = vcfg.num_hot
+    if migrate:
+        t_lo, t_hi = key_directory.split_uint64([t])
+        row_regs = virtual_rows(cfg, vcfg, state, t_lo, t_hi)[0]
+        row_hist = estimators.histogram(cfg, row_regs).at[0].set(0)
+        full = row_hist.at[0].set(cfg.m - jnp.sum(row_hist))
+        row_chat = estimation.estimate_hist(cfg, full, kind="routed")
+    else:
+        row_regs = jnp.full((cfg.m,), cfg.r_min, jnp.int8)
+        row_hist = jnp.zeros((cfg.num_bins,), jnp.int32)
+        row_chat = jnp.float32(0.0)
+
+    # Drop the unpinned placeholder row when the hot tier was empty.
+    hot = state.hot
+    regs, hists, chats = hot.regs[:num_hot], hot.hists[:num_hot], hot.chats[:num_hot]
+    hot2 = DynArrayState(
+        regs=jnp.concatenate([regs, row_regs[None, :].astype(jnp.int8)]),
+        hists=jnp.concatenate([hists, row_hist[None, :].astype(jnp.int32)]),
+        chats=jnp.concatenate([chats, jnp.reshape(row_chat, (1,)).astype(jnp.float32)]),
+    )
+    return vcfg2, state._replace(hot=hot2)
+
+
+def memory_bytes(cfg: SketchConfig, vcfg: VirtualConfig) -> int:
+    """Device bytes of one VirtualDynArrayState: pool + pool hist + counters
+    + the pinned hot rows. Independent of the tail tenant count — the whole
+    point (compare ``dense_memory_bytes``)."""
+    pool = vcfg.pool_size + 4 * cfg.num_bins + 4 + 4
+    hot_rows = max(1, vcfg.num_hot)
+    return pool + hot_rows * (cfg.m + 4 * cfg.num_bins + 4)
+
+
+def dense_memory_bytes(cfg: SketchConfig, k: int) -> int:
+    """Device bytes of a dense ``DynArrayState`` with k tenant rows — the
+    baseline the benchmark's memory-reduction headline divides by."""
+    return k * (cfg.m + 4 * cfg.num_bins + 4)
+
+
+def update_reference(
+    cfg: SketchConfig, vcfg: VirtualConfig, state: VirtualDynArrayState,
+    tenant_keys, ids, weights, mask=None,
+) -> VirtualDynArrayState:
+    """Oracle: sequential numpy application of the hot/tail semantics.
+
+    Hot sub-stream runs through ``dyn_array.update_reference`` (itself the
+    K-loop of single Dyn sketches); the pool applies each live element's
+    (p, y) one at a time with full-histogram mass moves. Tests/benchmarks
+    only — O(B) python, never the hot path.
+    """
+    import numpy as np
+
+    t_lo, t_hi = hashing.split_id64(tenant_keys)
+    lo, hi = hashing.split_id64(ids)
+    w = jnp.asarray(weights).astype(jnp.float32)
+    live = np.asarray(qsketch_dyn._live_weight_mask(w, mask))
+    slots = np.asarray(key_directory.route_slots(vcfg.directory, (t_lo, t_hi)))
+    is_hot = slots < vcfg.num_hot
+
+    j, y = qsketch_dyn._choose_and_quantize(tail_config(cfg, vcfg), lo, hi, w)
+    p = np.asarray(pool_slots(cfg, vcfg, t_lo, t_hi, j))
+    y_np = np.asarray(y)
+
+    hot = dyn_array.update_reference(
+        cfg, state.hot,
+        jnp.asarray(np.clip(slots, 0, state.hot.regs.shape[0] - 1)),
+        ids, weights,
+        mask=jnp.asarray(live & is_hot),
+    )
+
+    pool = np.asarray(state.pool).copy()
+    hist = np.asarray(state.pool_hist).copy()
+    n_tail = int(state.n_tail)
+    # Same batch-sum expression (and reduction order) as _apply_pool_update,
+    # so the f32 scalar is bit-identical, not just close.
+    live_tail = jnp.asarray(live & ~is_hot)
+    w_tail = state.w_tail + jnp.sum(jnp.where(live_tail, w, 0.0)).astype(jnp.float32)
+    for i in range(p.shape[0]):
+        if not live[i] or is_hot[i]:
+            continue
+        n_tail += 1
+        old = int(pool[p[i]])
+        if y_np[i] > old:
+            hist[old - cfg.r_min] -= 1
+            hist[y_np[i] - cfg.r_min] += 1
+            pool[p[i]] = y_np[i]
+    return VirtualDynArrayState(
+        pool=jnp.asarray(pool),
+        pool_hist=jnp.asarray(hist),
+        n_tail=jnp.int32(n_tail),
+        w_tail=w_tail,
+        hot=hot,
+    )

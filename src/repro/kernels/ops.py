@@ -48,6 +48,7 @@ from . import (
     qdyn_qr,
     qsketch_update,
     sketch_array_update,
+    virtual_pool_update,
     window_union,
 )
 
@@ -345,6 +346,63 @@ def dyn_array_update_tenants_op(
     slots, dir_state = key_directory.route(dcfg, dir_state, tenant_keys, mask=mask)
     out = dyn_array_update_op(cfg, state, slots, ids, weights, mask=mask, **kernel_kwargs)
     return out, dir_state
+
+
+def virtual_dyn_update_op(
+    cfg: SketchConfig,
+    vcfg,
+    state,
+    tenant_keys,
+    ids,
+    weights,
+    mask=None,
+    *,
+    block_b: int | None = None,
+    interpret: bool | None = None,
+):
+    """Kernel-backed equivalent of ``core.virtual_dyn_array.update_tenants``
+    (bit-identical on every state field).
+
+    The dense inner stage — per-element register choice, value quantization,
+    and pool-slot placement — runs in the Pallas kernel
+    (``kernels/virtual_pool_update.py``), regenerating the hash bits in VMEM
+    with the same integer family as the jnp reference; the data-dependent
+    tail (hot/tail routing split, dense-row update, slot-grouped scatter-max
+    and the incremental full-histogram move) is shared with the core path
+    via ``virtual_dyn_array._apply_update``, so the two entries agree
+    bitwise. Padding rows carry log2w = −inf (y floors to the r_min no-op)
+    and are sliced off before the tail.
+    """
+    from repro.core import virtual_dyn_array
+
+    _note_trace("virtual_dyn_update")
+    interpret = _interpret_default() if interpret is None else interpret
+    t_lo, t_hi = hashing.split_id64(tenant_keys)
+    lo, hi = hashing.split_id64(ids)
+    w = weights.astype(jnp.float32)
+    live = qsketch_dyn._live_weight_mask(w, mask)
+    log2w = jnp.log2(w)
+
+    b = lo.shape[0]
+    bb = block_b or min(virtual_pool_update.DEFAULT_BLOCK_B, _round_up(b, 8))
+    bp = _round_up(b, bb)
+    lo2, hi2, tlo2, thi2, lw2 = _pad_batch(
+        [lo, hi, t_lo, t_hi, log2w], bp, [0, 0, 0, 0, _NEG_INF]
+    )
+
+    # Tail geometry: register choice modulus is the VIRTUAL row width m_v
+    # (free registers — the vHLL decoupling); the b-derived quantization
+    # range and the seed-derived salts are shared with the dense cfg.
+    p, y = virtual_pool_update.virtual_pool_route_padded(
+        lo2, hi2, tlo2, thi2, lw2,
+        salt_g=cfg.salt_g, salt_h=cfg.salt_h, salt_pool=vcfg.salt_pool,
+        m=virtual_dyn_array.tail_m(cfg, vcfg), pool_size=vcfg.pool_size,
+        r_min=cfg.r_min, r_max=cfg.r_max,
+        block_b=bb, interpret=interpret,
+    )
+    return virtual_dyn_array._apply_update(
+        cfg, vcfg, state, t_lo, t_hi, lo, hi, w, live, p[:b, 0], y[:b, 0]
+    )
 
 
 def window_union_estimate_op(

@@ -30,8 +30,13 @@ design (QSketch, arXiv 2406.19143) and the repo's extensions on top of it:
   (``estimate_*_with_ci``): a wide relative CI means the geometry (m) is
   too small for the observed cardinalities.
 
+* **Pool pressure (virtual tier).** The shared tail pool's load factor
+  drives cross-tenant collision noise, and the noise floor α·w_tail/(1−α)
+  is the smallest tail weight a virtual read can resolve — past the load
+  bound, grow the pool or pin the heaviest tail tenants (DESIGN.md §8.9).
+
 ``health_report(cfg, state)`` computes all applicable checks for any of
-the 8 container state types and returns a plain dict with per-check
+the 9 container state types and returns a plain dict with per-check
 values, thresholds, and warn flags. It is host-only and on-demand — it
 may sync the device and (for the drift/CI checks) run a solve, so call it
 at health-probe cadence, never per batch.
@@ -54,6 +59,7 @@ from repro.core.types import (
     ShardedWindowArrayState,
     SketchArrayState,
     SketchConfig,
+    VirtualDynArrayState,
     WindowArrayState,
 )
 from repro.obs import trace
@@ -82,6 +88,15 @@ class Thresholds:
     ci_rel_width: float = 0.5
     directory_load_factor: float = 0.9
     directory_collision_rate: float = 0.01
+    # Virtual tier (VirtualDynArrayState): past ~0.5 pool load the per-slot
+    # collision noise grows toward the signal and the cancellation's
+    # variance bound degrades (DESIGN.md §8.9) — size the pool, or pin the
+    # heaviest tail tenants.
+    pool_load_factor: float = 0.5
+    # The noise floor is workload-scaled (α·W_pool/(1−α) is an absolute
+    # weight), so a universal default would be meaningless — set a bound
+    # per deployment at the smallest tail weight the operator must resolve.
+    pool_noise_floor: float | None = None
 
 
 DEFAULT_THRESHOLDS = Thresholds()
@@ -95,6 +110,7 @@ _CONTAINER_NAMES = {
     ShardedDynArrayState: "sharded_dyn_array",
     WindowArrayState: "window_array",
     ShardedWindowArrayState: "sharded_window_array",
+    VirtualDynArrayState: "virtual_dyn_array",
 }
 
 _DYN_LIKE = (DynState, DynArrayState, ShardedDynArrayState)
@@ -138,19 +154,24 @@ def health_report(
     *,
     directory=None,
     dcfg=None,
+    vcfg=None,
     thresholds: Thresholds = DEFAULT_THRESHOLDS,
     solver: str = "newton",
 ) -> dict:
-    """Uniform health report over any of the 8 container state types.
+    """Uniform health report over any of the 9 container state types.
 
     Args:
       cfg: the container's SketchConfig (geometry of the estimation checks).
       state: one of QSketchState / DynState / SketchArrayState /
         ShardedArrayState / DynArrayState / ShardedDynArrayState /
-        WindowArrayState / ShardedWindowArrayState (monitor wrappers: pass
-        the container leaf, plus ``directory=`` for the routing telemetry).
+        WindowArrayState / ShardedWindowArrayState / VirtualDynArrayState
+        (monitor wrappers: pass the container leaf, plus ``directory=`` for
+        the routing telemetry).
       directory: optional ``DirectoryState`` for load/collision checks
         (``dcfg`` is accepted for symmetry but not required).
+      vcfg: optional ``VirtualConfig`` — only read for
+        ``VirtualDynArrayState``, where the noise-floor check needs the
+        virtual row width m_v (defaults to cfg.m when omitted).
       thresholds: warn bounds; every check warns when value > threshold.
       solver: estimation solver for the drift/CI checks ("newton" is the
         bit-exact default; pass "lut" at large K).
@@ -172,6 +193,50 @@ def health_report(
         )
     checks: dict[str, dict] = {}
     warnings: list[str] = []
+
+    # ---- virtual tier: pool-plane checks + the hot tier's dense report ---
+    if isinstance(state, VirtualDynArrayState):
+        pool_size = state.pool.shape[0]
+        _check(
+            checks, warnings, "pool_load_factor",
+            1.0 - state.pool_hist[0].astype(jnp.float32) / pool_size,
+            thresholds.pool_load_factor,
+        )
+        _check(
+            checks, warnings, "register_saturation_frac",
+            jnp.mean((state.pool == cfg.r_max).astype(jnp.float32)),
+            thresholds.register_saturation_frac,
+        )
+        # Noise floor at the VIRTUAL row geometry: α = m_v/M with m_v from
+        # vcfg when given (``virtual_dyn_array.noise_floor``), else the
+        # dense cfg.m — callers with a widened tail row pass vcfg.
+        m_v = cfg.m if vcfg is None else (vcfg.m_virtual or cfg.m)
+        alpha = m_v / pool_size
+        _check(
+            checks, warnings, "pool_noise_floor",
+            jnp.float32(alpha / (1.0 - alpha)) * state.w_tail,
+            thresholds.pool_noise_floor,
+        )
+        _info(checks, "pool_weight_total", state.w_tail)
+        _info(checks, "pool_tail_elements", state.n_tail)
+        # The hot tier is a dense DynArray — reuse its full report with
+        # every check folded in under a hot_ prefix. Directory telemetry is
+        # routing-level, not tier-level, so it stays unprefixed here.
+        hot = health_report(
+            cfg, state.hot, thresholds=thresholds, solver=solver,
+        )
+        for cname, c in hot["checks"].items():
+            checks[f"hot_{cname}"] = c
+            if c["warn"]:
+                warnings.append(f"hot_{cname}")
+        if directory is not None:
+            directory_health(dcfg, directory, checks, warnings, thresholds)
+        return {
+            "container": name,
+            "checks": checks,
+            "warnings": warnings,
+            "ok": not warnings,
+        }
 
     # ---- register-plane checks (every container has regs) ----------------
     if isinstance(state, _WINDOW_LIKE):

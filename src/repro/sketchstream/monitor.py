@@ -69,6 +69,14 @@ telemetry and (for windows) the ring clock stay replicated. Same
 init/update/estimate/merge/metrics (+rotate) surface, bit-identical
 estimates to their single-host counterparts, so train/serve steps accept
 any tenant monitor unchanged.
+
+Register-sharing per-tenant telemetry (seventh layer): ``VirtualDynMonitor``
+backs the sparse-key surface with ``core/virtual_dyn_array.py`` — pinned hot
+tenants keep exact dedicated Dyn rows while the long tail shares one
+physical register pool, cutting per-tail-tenant memory from O(m + 2^b) to
+O(1) amortized (DESIGN.md §8.9). Tail reads are noise-cancelled estimates
+(not bit-identical to dedicated sketches), so ``estimate`` takes the tenant
+keys to read — the tail is never enumerated.
 """
 
 from __future__ import annotations
@@ -90,6 +98,7 @@ from repro.core import (
     sharded_window_array,
     sharding,
     sketch_array,
+    virtual_dyn_array,
     window_array,
 )
 from repro.core.key_directory import DirectoryConfig, DirectoryState
@@ -100,8 +109,10 @@ from repro.core.types import (
     ShardedDynArrayState,
     ShardedWindowArrayState,
     SketchArrayState,
+    VirtualDynArrayState,
     WindowArrayState,
 )
+from repro.core.virtual_dyn_array import VirtualConfig
 from repro.obs import metrics as obs_metrics
 
 # Declared tenant-telemetry families, labeled by monitor instance kind — the
@@ -125,6 +136,15 @@ _M_TENANT_WINDOW_WEIGHT = obs_metrics.gauge(
 _M_TENANT_WINDOW_EPOCH = obs_metrics.gauge(
     "tenant_window_epoch", "monotone epoch clock of the window ring",
     labels=("monitor",))
+_M_VIRTUAL_POOL_LOAD = obs_metrics.gauge(
+    "virtual_pool_load_factor", "fraction of shared-pool slots raised",
+    labels=("monitor",))
+_M_VIRTUAL_POOL_WEIGHT = obs_metrics.gauge(
+    "virtual_pool_weight_total", "exact total live tail weight in the pool",
+    labels=("monitor",))
+_M_VIRTUAL_TAIL_ELEMENTS = obs_metrics.gauge(
+    "virtual_tail_elements", "live tail element-occurrences folded",
+    labels=("monitor",))
 
 _TENANT_FAMILIES = {
     "tenant_elements_seen": _M_TENANT_SEEN,
@@ -133,6 +153,9 @@ _TENANT_FAMILIES = {
     "tenant_weight_total": _M_TENANT_WEIGHT,
     "tenant_window_weight": _M_TENANT_WINDOW_WEIGHT,
     "tenant_window_epoch": _M_TENANT_WINDOW_EPOCH,
+    "virtual_pool_load_factor": _M_VIRTUAL_POOL_LOAD,
+    "virtual_pool_weight_total": _M_VIRTUAL_POOL_WEIGHT,
+    "virtual_tail_elements": _M_VIRTUAL_TAIL_ELEMENTS,
 }
 
 
@@ -190,14 +213,20 @@ def init(cfg: SketchConfig) -> MonitorState:
 
 
 def _flatten(ids, weights, mask):
-    ids = ids.reshape(-1)
+    if isinstance(ids, tuple):  # sparse 64-bit element ids as a (lo, hi) pair
+        lo, hi = ids
+        ids = (lo.reshape(-1), hi.reshape(-1))
+        n = ids[0].shape[0]
+    else:
+        ids = ids.reshape(-1)
+        n = ids.shape[0]
     w = (
-        jnp.ones(ids.shape, jnp.float32)
+        jnp.ones((n,), jnp.float32)
         if weights is None
         else weights.reshape(-1).astype(jnp.float32)
     )
     mask = None if mask is None else mask.reshape(-1)
-    n_live = ids.shape[0] if mask is None else jnp.sum(mask.astype(jnp.int32))
+    n_live = n if mask is None else jnp.sum(mask.astype(jnp.int32))
     return ids, w, mask, n_live
 
 
@@ -811,3 +840,121 @@ class ShardedWindowMonitor:
             tenant_window_weight=jnp.sum(state.window.union_chats),
             tenant_window_epoch=state.window.epoch_id,
         )
+
+
+# ---------------------------------------------------------------------------
+# Register-sharing per-tenant telemetry: hot rows exact, long tail pooled
+# ---------------------------------------------------------------------------
+
+
+class VirtualDynMonitorState(NamedTuple):
+    """Pytree state of a VirtualDynMonitor (threads through jit/scan/ckpt)."""
+
+    array: VirtualDynArrayState  # shared pool + pinned dense hot rows
+    n_seen: jnp.ndarray  # int32 live-element counter across all tenants
+
+
+class VirtualDynMonitor:
+    """Per-tenant telemetry where the long tail shares one register pool.
+
+    Same sparse-64-bit-tenant surface as ``DynArrayMonitor`` (init/update/
+    estimate/merge/metrics) backed by ``core/virtual_dyn_array.py``: the
+    ``vcfg.pinned`` hot tenants keep dedicated dense Dyn rows — their reads
+    are the exact anytime martingales, bit-identical to a dedicated
+    ``DynArray`` — while every other tenant hashes its registers into one
+    shared ``pool_size``-slot pool, so tail memory is O(pool) regardless of
+    how many tenants exist. Tail reads are noise-CANCELLED estimates
+    (Wang et al. 1811.09126; DESIGN.md §8.9), not exact sub-sketches, with a
+    resolution floor of ``noise_floor()`` — the trade that buys the 10-100x
+    memory reduction at matched tail accuracy.
+
+    Two surface deltas against the dense monitors, both forced by pooling:
+
+    * ``estimate(state, tenant_keys)`` takes the tenants to read — the tail
+      is a hash range, not an enumerable axis, so there is no ``Ĉ[K]``
+      vector read of "all" tenants.
+    * No ``DirectoryState`` telemetry threads through: tail routing is
+      stateless (every unpinned tenant shares one sentinel slot by design),
+      so collision counters are meaningless here. ``metrics()`` reports
+      pool pressure instead.
+
+    ``promote(state, tenant)`` pins a tail tenant into the hot tier and
+    returns a NEW (monitor, state) pair — the pinned set is static
+    configuration, so jitted callees recompile once (semantics and residue
+    handling: ``virtual_dyn_array.promote``).
+
+    The instance is configuration (closed over by jit); all mutable data
+    lives in ``VirtualDynMonitorState``.
+    """
+
+    def __init__(self, cfg: SketchConfig, vcfg: VirtualConfig):
+        self.cfg = cfg
+        self.vcfg = vcfg
+
+    @classmethod
+    def for_pool(cls, cfg: SketchConfig, pool_size: int, *, pinned: tuple = (), m_virtual: int | None = None, seed: int | None = None):
+        """Build with a fresh virtual config of ``pool_size`` slots."""
+        vcfg = VirtualConfig(
+            pool_size=pool_size, m_virtual=m_virtual, pinned=pinned,
+            seed=cfg.seed if seed is None else seed,
+        )
+        return cls(cfg, vcfg)
+
+    def init(self) -> VirtualDynMonitorState:
+        """Fresh pool + empty hot rows, zero elements seen."""
+        return VirtualDynMonitorState(
+            array=virtual_dyn_array.init(self.cfg, self.vcfg),
+            n_seen=jnp.int32(0),
+        )
+
+    def update(self, state: VirtualDynMonitorState, tenant_keys, ids, weights=None, mask=None) -> VirtualDynMonitorState:
+        """Fold a keyed batch: tenant_keys are sparse ids (uint32 or (lo, hi)
+        pair), flattened together with ids/weights/mask like ``update``."""
+        keys = _flatten_keys(tenant_keys)
+        ids, w, mask, n_live = _flatten(ids, weights, mask)
+        st = virtual_dyn_array.update_tenants(
+            self.cfg, self.vcfg, state.array, keys, ids, w, mask=mask
+        )
+        return VirtualDynMonitorState(array=st, n_seen=state.n_seen + n_live)
+
+    def estimate(self, state: VirtualDynMonitorState, tenant_keys) -> jnp.ndarray:
+        """Ŵ[T] for the QUERIED tenants: exact martingale reads for pinned
+        tenants, noise-cancelled virtual reads for the tail."""
+        return virtual_dyn_array.estimate_tenants(
+            self.cfg, self.vcfg, state.array, _flatten_keys(tenant_keys)
+        )
+
+    def merge(self, a: VirtualDynMonitorState, b: VirtualDynMonitorState) -> VirtualDynMonitorState:
+        """Cross-pod union: pool max + hot-tier dense merge. Exact for
+        disjoint shards; overlapping streams inflate ``w_tail`` and the
+        tail reads go conservative (``virtual_dyn_array.merge``)."""
+        return VirtualDynMonitorState(
+            array=virtual_dyn_array.merge(self.cfg, self.vcfg, a.array, b.array),
+            n_seen=a.n_seen + b.n_seen,
+        )
+
+    def promote(self, state: VirtualDynMonitorState, tenant, *, migrate: bool = False) -> tuple["VirtualDynMonitor", VirtualDynMonitorState]:
+        """Pin ``tenant`` into the hot tier: -> (monitor', state'). The old
+        monitor/state pair stays valid for already-traced callees; route new
+        traffic through the returned pair."""
+        vcfg, array = virtual_dyn_array.promote(
+            self.cfg, self.vcfg, state.array, tenant, migrate=migrate
+        )
+        return (
+            VirtualDynMonitor(self.cfg, vcfg),
+            VirtualDynMonitorState(array=array, n_seen=state.n_seen),
+        )
+
+    def metrics(self, state: VirtualDynMonitorState) -> dict:
+        """Cheap per-step scalars (NO solve): stream counter, pool pressure
+        (load factor, exact pooled weight, tail occurrences) and the hot
+        tier's total tracked weight (O(num_hot) sum of exact martingales)."""
+        out = {
+            "tenant_elements_seen": state.n_seen,
+            "virtual_pool_load_factor": virtual_dyn_array.pool_load_factor(state.array),
+            "virtual_pool_weight_total": state.array.w_tail,
+            "virtual_tail_elements": state.array.n_tail,
+            "tenant_weight_total": jnp.sum(state.array.hot.chats),
+        }
+        publish_tenant_metrics("virtual_dyn", out)
+        return out

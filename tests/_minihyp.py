@@ -1,0 +1,144 @@
+"""Deterministic fallback for the hypothesis API subset the suite uses.
+
+``hypothesis`` is an optional test extra (requirements-test.txt). When it is
+absent the property suites would otherwise skip wholesale; this shim keeps
+them RUNNING by replaying each ``@given`` test over a fixed number of
+seeded pseudo-random examples instead. It is intentionally tiny: no
+shrinking, no database, no health checks — just enough of ``given`` /
+``settings`` / ``strategies`` that ``tests/test_property.py`` and
+``tests/test_differential.py`` execute identically-shaped cases under both
+engines. Examples are derandomized (seeded from the test name), so a
+failure reproduces exactly.
+
+Profiles mirror the real API: ``conftest.py`` registers ``quick`` and
+``deep`` and loads one from ``HYPOTHESIS_PROFILE``, exactly as it does for
+real hypothesis — only the example counts differ (the shim explores less
+per example, so it runs more of them cheaply).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import math
+import types
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value, allow_nan=False, allow_infinity=False):
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rng):
+        u = rng.random()
+        if u < 0.08:  # hypothesis-style boundary pressure
+            return lo
+        if u < 0.16:
+            return hi
+        if lo > 0:  # log-uniform across positive decades
+            return float(math.exp(rng.uniform(math.log(lo), math.log(hi))))
+        return float(rng.uniform(lo, hi))
+
+    return _Strategy(draw)
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def lists(elements, min_size=0, max_size=10, unique=False):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        out, seen, tries = [], set(), 0
+        while len(out) < n and tries < 50 * (n + 1):
+            tries += 1
+            v = elements.draw(rng)
+            if unique:
+                if v in seen:
+                    continue
+                seen.add(v)
+            out.append(v)
+        return out
+
+    return _Strategy(draw)
+
+
+class settings:
+    """Profile registry + per-test example-count override (decorator)."""
+
+    _profiles: dict = {"default": {"max_examples": 10}}
+    _current: dict = {"max_examples": 10}
+
+    def __init__(self, max_examples=None, deadline=None, derandomize=None,
+                 suppress_health_check=None):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        if self.max_examples is not None:
+            fn._minihyp_max_examples = self.max_examples
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, max_examples=10, **_ignored):
+        cls._profiles[name] = {"max_examples": max_examples}
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._current = cls._profiles.get(name, cls._profiles["default"])
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            n = getattr(run, "_minihyp_max_examples", None) \
+                or settings._current["max_examples"]
+            base = zlib.crc32(fn.__qualname__.encode())
+            for ex in range(n):
+                rng = np.random.default_rng((base, ex))
+                drawn = {k: s.draw(rng) for k, s in strats.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"minihyp falsifying example #{ex} for "
+                        f"{fn.__qualname__}: {drawn!r}"
+                    ) from e
+
+        # Hide the strategy-drawn params from pytest's fixture resolution
+        # (real hypothesis does the same); parametrize args pass through.
+        run.__signature__ = inspect.Signature(
+            [p for name, p in inspect.signature(fn).parameters.items()
+             if name not in strats]
+        )
+        run.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return run
+
+    return deco
+
+
+strategies = types.SimpleNamespace(
+    integers=integers,
+    floats=floats,
+    booleans=booleans,
+    sampled_from=sampled_from,
+    lists=lists,
+)

@@ -9,6 +9,8 @@ each module's compile session small; the only cost is re-tracing shared
 helpers, which is noise next to the solves themselves.
 """
 
+import os
+
 import jax
 import pytest
 
@@ -17,3 +19,24 @@ import pytest
 def _fresh_compile_caches_per_module():
     yield
     jax.clear_caches()
+
+
+# Property-test profiles (DESIGN.md §8.9 testing policy): tier-1 runs the
+# cheap derandomized "quick" profile; `scripts/test.sh --tier2` re-runs the
+# property/differential suites under "deep" (more examples, fresh seeds).
+# Falls back to tests/_minihyp.py when hypothesis isn't installed, so the
+# suites execute either way.
+try:
+    from hypothesis import HealthCheck, settings as _hyp_settings
+
+    _hyp_settings.register_profile(
+        "quick", max_examples=10, deadline=None, derandomize=True,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    _hyp_settings.register_profile("deep", max_examples=75, deadline=None)
+except ImportError:
+    from _minihyp import settings as _hyp_settings
+
+    _hyp_settings.register_profile("quick", max_examples=6)
+    _hyp_settings.register_profile("deep", max_examples=30)
+_hyp_settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "quick"))

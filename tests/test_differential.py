@@ -1,0 +1,230 @@
+"""Differential suite: ONE shared keyed workload through every container
+front; fronts in the same family must agree bit-for-bit.
+
+The repo's central correctness claim is that each container family is one
+construction behind many entry points (DESIGN.md §8): the jnp core, the
+Pallas kernels, the sharded twins, the window ring's head epoch, and the
+K-loop element-log oracles all realize the same per-tenant sketch. This
+module pins that claim down as a single differential: identical inputs in,
+identical per-tenant registers / histograms / estimates out, across
+
+  * the FULL-construction family (4 fronts): ``sketch_array`` /
+    ``ops.sketch_array_update_op`` / ``sharded_array`` / the
+    ``update_reference`` K-loop;
+  * the DYN family (5 fronts): ``dyn_array`` / ``ops.dyn_array_update_op``
+    / the ``window_array`` head epoch / ``sharded_dyn_array`` (jnp and
+    kernel entries) / ``sharded_window_array``'s head epoch / the
+    ``update_reference`` K-loop;
+  * plus the virtual tier (+1): a ``VirtualDynArray`` with EVERY tenant
+    pinned has no tail, and its hot tier must match the dense DynArray
+    bit-for-bit — the exactness anchor of the tiering contract.
+
+A second warm batch runs everywhere so the Dyn fronts exercise nonzero
+batch-start histograms (the q_R regime where chat bugs hide).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SketchConfig,
+    dyn_array,
+    sharded_array,
+    sharded_dyn_array,
+    sharded_window_array,
+    sharding,
+    sketch_array,
+    virtual_dyn_array as vda,
+    window_array,
+)
+from repro.core.types import SketchArrayState
+from repro.core.virtual_dyn_array import VirtualConfig
+from repro.kernels import ops
+from repro.launch.mesh import make_sketch_mesh
+
+_CFG = SketchConfig(m=64, b=6, seed=31)
+_B = 256
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_sketch_mesh()
+
+
+@pytest.fixture(scope="module")
+def workload(mesh):
+    """The one shared stream: (K, two keyed batches). K is a shard multiple
+    so every front — dense, sharded, windowed — accepts it unchanged."""
+    k = sharding.padded_k(8, mesh)
+    rng = np.random.default_rng(17)
+
+    def batch(seed):
+        r = np.random.default_rng(seed)
+        keys = jnp.asarray(r.integers(0, k, _B, dtype=np.int32))
+        ids = jnp.asarray(r.integers(0, 2**32, _B, dtype=np.uint32))
+        w = jnp.asarray((r.gamma(1.0, 2.0, _B) + 1e-5).astype(np.float32))
+        return keys, ids, w
+
+    del rng
+    return k, [batch(101), batch(202)]
+
+
+def _fold(update, state, batches):
+    for keys, ids, w in batches:
+        state = update(state, keys, ids, w)
+    return state
+
+
+def _assert_all_equal(name, arrays):
+    ref = np.asarray(arrays[0][1])
+    for front, arr in arrays[1:]:
+        np.testing.assert_array_equal(
+            np.asarray(arr), ref,
+            err_msg=f"{name}: front '{front}' diverged from '{arrays[0][0]}'",
+        )
+
+
+def test_full_family_identical(mesh, workload):
+    k, batches = workload
+    fronts = {
+        "sketch_array": _fold(
+            lambda s, ke, i, w: sketch_array.update(_CFG, s, ke, i, w),
+            sketch_array.init(_CFG, k), batches,
+        ),
+        "kernel": _fold(
+            lambda s, ke, i, w: ops.sketch_array_update_op(_CFG, s, ke, i, w),
+            sketch_array.init(_CFG, k), batches,
+        ),
+        "sharded": sharded_array.to_array(
+            _fold(
+                lambda s, ke, i, w: sharded_array.update(_CFG, mesh, s, ke, i, w),
+                sharded_array.init(_CFG, k, mesh), batches,
+            )
+        ),
+        "k_loop_oracle": _fold(
+            lambda s, ke, i, w: sketch_array.update_reference(_CFG, s, ke, i, w),
+            sketch_array.init(_CFG, k), batches,
+        ),
+    }
+    _assert_all_equal("regs", [(n, s.regs) for n, s in fronts.items()])
+    # Identical registers through the same solver => identical estimates;
+    # the sharded front solves shard-locally and must still agree.
+    ests = [
+        (n, sketch_array.estimate_all(_CFG, SketchArrayState(regs=s.regs)))
+        for n, s in fronts.items()
+    ]
+    ests.append((
+        "sharded_solve",
+        sharded_array.estimate_all(
+            _CFG, mesh, sharded_array.from_array(fronts["sharded"], mesh)
+        ),
+    ))
+    _assert_all_equal("estimates", ests)
+
+
+def test_dyn_family_identical(mesh, workload):
+    k, batches = workload
+    fronts = {
+        "dyn_array": _fold(
+            lambda s, ke, i, w: dyn_array.update_batch(_CFG, s, ke, i, w),
+            dyn_array.init(_CFG, k), batches,
+        ),
+        "kernel": _fold(
+            lambda s, ke, i, w: ops.dyn_array_update_op(_CFG, s, ke, i, w),
+            dyn_array.init(_CFG, k), batches,
+        ),
+        "window_head": window_array.epoch_substate(
+            _fold(
+                lambda s, ke, i, w: window_array.update_batch(_CFG, s, ke, i, w),
+                window_array.init(_CFG, k, 3), batches,
+            ),
+            0,
+        ),
+        "sharded": sharded_dyn_array.to_array(
+            _fold(
+                lambda s, ke, i, w: sharded_dyn_array.update_batch(
+                    _CFG, mesh, s, ke, i, w
+                ),
+                sharded_dyn_array.init(_CFG, k, mesh), batches,
+            )
+        ),
+        "sharded_kernel": sharded_dyn_array.to_array(
+            _fold(
+                lambda s, ke, i, w: ops.sharded_dyn_array_update_op(
+                    _CFG, mesh, s, ke, i, w
+                ),
+                sharded_dyn_array.init(_CFG, k, mesh), batches,
+            )
+        ),
+        "sharded_window_head": window_array.epoch_substate(
+            sharded_window_array.to_array(
+                _fold(
+                    lambda s, ke, i, w: sharded_window_array.update_batch(
+                        _CFG, mesh, s, ke, i, w
+                    ),
+                    sharded_window_array.init(_CFG, k, 3, mesh), batches,
+                )
+            ),
+            0,
+        ),
+        "k_loop_oracle": _fold(
+            lambda s, ke, i, w: dyn_array.update_reference(_CFG, s, ke, i, w),
+            dyn_array.init(_CFG, k), batches,
+        ),
+    }
+    _assert_all_equal("regs", [(n, s.regs) for n, s in fronts.items()])
+    _assert_all_equal("hists", [(n, s.hists) for n, s in fronts.items()])
+    # The anytime martingales are the per-tenant ESTIMATE of this family;
+    # identical batch sequence => bit-identical chats on every production
+    # front. The sequential K-loop oracle accumulates its chats in element
+    # order rather than the fused batch's reduction order, so it agrees to
+    # f32 rounding only (the dyn_array suite's own oracle tolerance).
+    _assert_all_equal(
+        "chats",
+        [(n, s.chats) for n, s in fronts.items() if n != "k_loop_oracle"],
+    )
+    np.testing.assert_allclose(
+        np.asarray(fronts["k_loop_oracle"].chats),
+        np.asarray(fronts["dyn_array"].chats),
+        rtol=1e-5,
+    )
+
+
+def test_virtual_all_pinned_matches_dense(workload):
+    """The +1 front: pin every tenant — the virtual container degenerates to
+    a dense DynArray (empty pool) and must match it bit-for-bit, estimates
+    included."""
+    k, batches = workload
+    # Sparse 64-bit tenant ids standing in for the dense keys, pinned in
+    # slot order so hot row r corresponds to dense row r.
+    tenants = (np.arange(k, dtype=np.uint64) + 1) * np.uint64(0x9E3779B97F4A7C15)
+    vcfg = VirtualConfig(
+        pool_size=4 * _CFG.m, pinned=tuple(int(t) for t in tenants)
+    )
+    st_v = vda.init(_CFG, vcfg)
+    st_d = dyn_array.init(_CFG, k)
+    for keys, ids, w in batches:
+        tk = tenants[np.asarray(keys)]
+        t = (
+            jnp.asarray(tk & 0xFFFFFFFF, jnp.uint32),
+            jnp.asarray(tk >> 32, jnp.uint32),
+        )
+        st_v = vda.update_tenants(_CFG, vcfg, st_v, t, ids, w)
+        st_d = dyn_array.update_batch(_CFG, st_d, keys, ids, w)
+
+    np.testing.assert_array_equal(np.asarray(st_v.hot.regs), np.asarray(st_d.regs))
+    np.testing.assert_array_equal(np.asarray(st_v.hot.hists), np.asarray(st_d.hists))
+    np.testing.assert_array_equal(np.asarray(st_v.hot.chats), np.asarray(st_d.chats))
+    # No tail traffic at all: the pool plane never moved.
+    assert int(st_v.n_tail) == 0 and float(st_v.w_tail) == 0.0
+    assert float(vda.pool_load_factor(st_v)) == 0.0
+    # Per-tenant estimates == the dense anytime reads, bit-for-bit.
+    tq = (
+        jnp.asarray(tenants & 0xFFFFFFFF, jnp.uint32),
+        jnp.asarray(tenants >> 32, jnp.uint32),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(vda.estimate_tenants(_CFG, vcfg, st_v, tq)),
+        np.asarray(dyn_array.estimate_all(st_d)),
+    )

@@ -244,6 +244,51 @@ def test_health_window_staleness_and_directory():
     assert "directory_load_factor" in rep["warnings"]  # 64 keys into 8 slots
 
 
+def test_health_virtual_pool_thresholds():
+    """Satellite #4: the virtual tier's pool checks warn past their bounds
+    and stay quiet inside them, and the hot tier folds in under hot_*."""
+    from repro.core import virtual_dyn_array as vda
+    from repro.core.virtual_dyn_array import VirtualConfig
+
+    rng = np.random.default_rng(5)
+    tk = jnp.asarray(rng.integers(0, 2**31, 600, dtype=np.int64), jnp.uint32)
+    ids = jnp.asarray(rng.integers(0, 2**31, 600, dtype=np.int64), jnp.uint32)
+    w = jnp.asarray(rng.uniform(0.5, 1.5, 600), jnp.float32)
+
+    # Small pool -> load factor blows past the 0.5 default and warns.
+    vcfg = VirtualConfig(pool_size=256, pinned=(7,))
+    st = vda.update_tenants(CFG, vcfg, vda.init(CFG, vcfg), tk, ids, w)
+    rep = obs_health.health_report(CFG, st, vcfg=vcfg)
+    assert rep["container"] == "virtual_dyn_array"
+    assert "pool_load_factor" in rep["warnings"]
+    assert rep["checks"]["pool_load_factor"]["value"] == pytest.approx(
+        float(vda.pool_load_factor(st))
+    )
+    # The reported floor is the estimator's own subtraction term.
+    assert rep["checks"]["pool_noise_floor"]["value"] == pytest.approx(
+        float(vda.noise_floor(CFG, vcfg, st)), rel=1e-6
+    )
+    assert not rep["checks"]["pool_noise_floor"]["warn"]  # no default bound
+    assert rep["checks"]["pool_weight_total"]["value"] == pytest.approx(
+        float(st.w_tail)
+    )
+    assert any(k.startswith("hot_") for k in rep["checks"])
+
+    # Large pool -> same traffic is healthy; tight floor bound flips it.
+    vcfg_big = VirtualConfig(pool_size=1 << 14, pinned=(7,))
+    st_big = vda.update_tenants(
+        CFG, vcfg_big, vda.init(CFG, vcfg_big), tk, ids, w
+    )
+    rep = obs_health.health_report(CFG, st_big, vcfg=vcfg_big)
+    assert "pool_load_factor" not in rep["warnings"]
+    tight = obs_health.Thresholds(pool_noise_floor=1e-3)
+    rep = obs_health.health_report(CFG, st_big, vcfg=vcfg_big, thresholds=tight)
+    assert "pool_noise_floor" in rep["warnings"]
+    # An empty container is quiet under the defaults.
+    rep = obs_health.health_report(CFG, vda.init(CFG, vcfg_big), vcfg=vcfg_big)
+    assert rep["ok"], rep["warnings"]
+
+
 def test_health_rejects_unknown_and_traced():
     with pytest.raises(TypeError):
         obs_health.health_report(CFG, object())
@@ -331,9 +376,32 @@ def _expect_base(state):
 
 
 @pytest.mark.parametrize("kind", ["dyn", "window", "sharded_array",
-                                  "sharded_dyn", "sharded_window"])
+                                  "sharded_dyn", "sharded_window", "virtual"])
 def test_monitor_metrics_parity(kind):
     tenants, ids, w = _tenant_stream(256, seed=11)
+    if kind == "virtual":
+        from repro.core import virtual_dyn_array as vda
+
+        mon = monitor.VirtualDynMonitor.for_pool(CFG, 512, pinned=(1,))
+        st = mon.update(mon.init(), tenants, ids, w)
+        got = mon.metrics(st)
+        # No directory telemetry (stateless tail routing) — pool pressure
+        # replaces it; key order is the documented dict.
+        expect = {
+            "tenant_elements_seen": int(st.n_seen),
+            "virtual_pool_load_factor": float(vda.pool_load_factor(st.array)),
+            "virtual_pool_weight_total": float(st.array.w_tail),
+            "virtual_tail_elements": int(st.array.n_tail),
+            "tenant_weight_total": float(jnp.sum(st.array.hot.chats)),
+        }
+        assert list(got) == list(expect)
+        for k, v in expect.items():
+            assert float(got[k]) == pytest.approx(v), k
+        if obs_metrics.enabled():
+            snap = obs_metrics.snapshot()
+            for k in expect:
+                assert f'{k}{{monitor="virtual_dyn"}}' in snap, k
+        return
     if kind == "dyn":
         mon = monitor.DynArrayMonitor.for_capacity(CFG, 16)
         expect_extra = lambda st: {

@@ -1,17 +1,46 @@
 """Hypothesis property tests on the sketch algebra's invariants.
 
 ``hypothesis`` is an optional test extra (requirements-test.txt); without it
-this module degrades to a skip rather than a collection error.
+the suite runs under ``tests/_minihyp.py`` — a deterministic seeded-replay
+shim of the same API — instead of skipping. Example counts come from the
+``quick``/``deep`` profiles registered in ``conftest.py``
+(``HYPOTHESIS_PROFILE``; tier-1 runs quick, ``scripts/test.sh --tier2``
+re-runs this module and ``test_differential.py`` under deep).
+
+Invariants covered, per DESIGN.md §8.9's testing policy:
+  * merge commutativity / associativity / idempotence — scalar QSketch AND
+    the keyed containers (SketchArray / DynArray / WindowArray) plus their
+    sharded twins and the virtual tier's pool plane;
+  * update-order invariance of every register/histogram plane;
+  * mask/dedup equivalence against the element-log oracles
+    (``*.update_reference``);
+  * statistical accuracy envelope of the VirtualDynArray noise-cancelled
+    read (exactness of ``w_tail``, boundedness of the cancelled estimate).
 """
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _minihyp import given, settings, strategies as st
 
-from repro.core import SketchConfig, baselines, qsketch, qsketch_dyn
+from repro.core import (
+    SketchConfig,
+    baselines,
+    dyn_array,
+    qsketch,
+    qsketch_dyn,
+    sharded_dyn_array,
+    sharding,
+    sketch_array,
+    virtual_dyn_array as vda,
+    window_array,
+)
+from repro.core.virtual_dyn_array import VirtualConfig
+from repro.launch.mesh import make_sketch_mesh
 
 _CFG = SketchConfig(m=64, b=8, seed=99)
 
@@ -32,7 +61,7 @@ def _arrs(ids, ws):
     )
 
 
-@settings(max_examples=25, deadline=None)
+@settings(deadline=None)
 @given(ids=ids_strategy, ws=st.lists(w_strategy, min_size=1, max_size=10))
 def test_merge_commutative_associative_idempotent(ids, ws):
     i, w = _arrs(ids, ws)
@@ -52,7 +81,7 @@ def test_merge_commutative_associative_idempotent(ids, ws):
     np.testing.assert_array_equal(np.asarray(l.regs), np.asarray(r.regs))
 
 
-@settings(max_examples=25, deadline=None)
+@settings(deadline=None)
 @given(ids=ids_strategy, ws=st.lists(w_strategy, min_size=1, max_size=10))
 def test_update_monotone_and_bounded(ids, ws):
     i, w = _arrs(ids, ws)
@@ -64,7 +93,7 @@ def test_update_monotone_and_bounded(ids, ws):
     assert (r1 >= _CFG.r_min).all() and (r1 <= _CFG.r_max).all()
 
 
-@settings(max_examples=25, deadline=None)
+@settings(deadline=None)
 @given(ids=ids_strategy, ws=st.lists(w_strategy, min_size=1, max_size=10))
 def test_estimate_nonnegative_finite(ids, ws):
     i, w = _arrs(ids, ws)
@@ -74,7 +103,7 @@ def test_estimate_nonnegative_finite(ids, ws):
     assert np.isfinite(est)
 
 
-@settings(max_examples=20, deadline=None)
+@settings(deadline=None)
 @given(ids=ids_strategy, ws=st.lists(w_strategy, min_size=1, max_size=10))
 def test_batch_split_equivalence(ids, ws):
     i, w = _arrs(ids, ws)
@@ -86,7 +115,7 @@ def test_batch_split_equivalence(ids, ws):
     np.testing.assert_array_equal(np.asarray(whole.regs), np.asarray(parts.regs))
 
 
-@settings(max_examples=20, deadline=None)
+@settings(deadline=None)
 @given(ids=ids_strategy, ws=st.lists(w_strategy, min_size=1, max_size=10))
 def test_dyn_duplicate_stability(ids, ws):
     i, w = _arrs(ids, ws)
@@ -99,7 +128,7 @@ def test_dyn_duplicate_stability(ids, ws):
     assert (h >= 0).all() and h.sum() <= _CFG.m
 
 
-@settings(max_examples=20, deadline=None)
+@settings(deadline=None)
 @given(ids=ids_strategy, ws=st.lists(w_strategy, min_size=1, max_size=10))
 def test_float_sketch_monotone_decreasing(ids, ws):
     i, w = _arrs(ids, ws)
@@ -107,3 +136,266 @@ def test_float_sketch_monotone_decreasing(ids, ws):
     s1 = baselines.lm_update(_CFG, s0, i, w)
     assert (np.asarray(s1.regs) <= np.asarray(s0.regs)).all()
     assert (np.asarray(s1.regs) > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Keyed containers: merge algebra, order invariance, mask/dedup vs oracle
+# ---------------------------------------------------------------------------
+
+# Generated batches pad to ONE fixed shape so each container compiles once
+# per test function instead of once per example.
+_B = 32
+_K = 4
+_ACFG = SketchConfig(m=32, b=6, seed=7)
+
+keyed_strategy = {
+    "ids": st.lists(
+        st.integers(min_value=0, max_value=2**32 - 1), min_size=1, max_size=_B
+    ),
+    "keys": st.lists(st.integers(min_value=0, max_value=_K - 1), min_size=1, max_size=8),
+    "ws": st.lists(w_strategy, min_size=1, max_size=8),
+}
+
+
+def _keyed_batch(ids, keys, ws):
+    """Pad a generated keyed stream to the fixed (B,) shape + live mask."""
+    n = len(ids)
+    keys = (keys * ((n // len(keys)) + 1))[:n]
+    ws = (ws * ((n // len(ws)) + 1))[:n]
+    k = np.zeros(_B, np.int32)
+    i = np.zeros(_B, np.uint32)
+    w = np.ones(_B, np.float32)
+    mask = np.zeros(_B, bool)
+    k[:n], i[:n], w[:n], mask[:n] = keys, np.asarray(ids, np.uint32), ws, True
+    return jnp.asarray(k), jnp.asarray(i), jnp.asarray(w), jnp.asarray(mask)
+
+
+_CONTAINERS = {
+    "sketch_array": dict(
+        init=lambda: sketch_array.init(_ACFG, _K),
+        update=lambda s, k, i, w, m: sketch_array.update(_ACFG, s, k, i, w, mask=m),
+        merge=lambda a, b: sketch_array.merge(a, b),
+        regs=lambda s: s.regs,
+        hists=lambda s: None,
+        oracle=lambda s, k, i, w, m: sketch_array.update_reference(
+            _ACFG, s, k, i, w, mask=m
+        ),
+    ),
+    "dyn_array": dict(
+        init=lambda: dyn_array.init(_ACFG, _K),
+        update=lambda s, k, i, w, m: dyn_array.update_batch(_ACFG, s, k, i, w, mask=m),
+        merge=lambda a, b: dyn_array.merge(_ACFG, a, b),
+        regs=lambda s: s.regs,
+        hists=lambda s: s.hists,
+        oracle=lambda s, k, i, w, m: dyn_array.update_reference(
+            _ACFG, s, k, i, w, mask=np.asarray(m)
+        ),
+    ),
+    "window_array": dict(
+        init=lambda: window_array.init(_ACFG, _K, 3),
+        update=lambda s, k, i, w, m: window_array.update_batch(
+            _ACFG, s, k, i, w, mask=m
+        ),
+        merge=lambda a, b: window_array.merge(_ACFG, a, b),
+        regs=lambda s: s.union_regs,
+        hists=lambda s: s.union_hists,
+        oracle=None,
+    ),
+}
+
+
+@pytest.mark.parametrize("container", sorted(_CONTAINERS))
+@settings(deadline=None)
+@given(**keyed_strategy)
+def test_keyed_merge_commutative_associative_idempotent(container, ids, keys, ws):
+    c = _CONTAINERS[container]
+    k, i, w, mask = _keyed_batch(ids, keys, ws)
+    third = _B // 3
+    m_a = mask & (jnp.arange(_B) < third)
+    m_b = mask & (jnp.arange(_B) >= third) & (jnp.arange(_B) < 2 * third)
+    m_c = mask & (jnp.arange(_B) >= 2 * third)
+    a = c["update"](c["init"](), k, i, w, m_a)
+    b = c["update"](c["init"](), k, i, w, m_b)
+    cc = c["update"](c["init"](), k, i, w, m_c)
+    ab, ba = c["merge"](a, b), c["merge"](b, a)
+    np.testing.assert_array_equal(np.asarray(c["regs"](ab)), np.asarray(c["regs"](ba)))
+    if c["hists"](ab) is not None:
+        np.testing.assert_array_equal(
+            np.asarray(c["hists"](ab)), np.asarray(c["hists"](ba))
+        )
+    aa = c["merge"](a, a)
+    np.testing.assert_array_equal(np.asarray(c["regs"](aa)), np.asarray(c["regs"](a)))
+    left = c["merge"](c["merge"](a, b), cc)
+    right = c["merge"](a, c["merge"](b, cc))
+    np.testing.assert_array_equal(
+        np.asarray(c["regs"](left)), np.asarray(c["regs"](right))
+    )
+    # Merge of the split == one pass over the whole stream (register plane).
+    whole = c["update"](c["init"](), k, i, w, mask)
+    np.testing.assert_array_equal(
+        np.asarray(c["regs"](left)), np.asarray(c["regs"](whole))
+    )
+
+
+@pytest.mark.parametrize("container", sorted(_CONTAINERS))
+@settings(deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1), **keyed_strategy)
+def test_keyed_update_order_invariance(container, seed, ids, keys, ws):
+    """Register and histogram planes are order-free (max monoid); only the
+    martingale scalars depend on arrival order."""
+    c = _CONTAINERS[container]
+    k, i, w, mask = _keyed_batch(ids, keys, ws)
+    perm = jnp.asarray(np.random.default_rng(seed).permutation(_B))
+    fwd = c["update"](c["init"](), k, i, w, mask)
+    shuf = c["update"](c["init"](), k[perm], i[perm], w[perm], mask[perm])
+    np.testing.assert_array_equal(
+        np.asarray(c["regs"](fwd)), np.asarray(c["regs"](shuf))
+    )
+    if c["hists"](fwd) is not None:
+        np.testing.assert_array_equal(
+            np.asarray(c["hists"](fwd)), np.asarray(c["hists"](shuf))
+        )
+
+
+@pytest.mark.parametrize("container", ["sketch_array", "dyn_array"])
+@settings(deadline=None)
+@given(**keyed_strategy)
+def test_keyed_mask_and_dedup_match_element_log_oracle(container, ids, keys, ws):
+    """Masked padding rows are no-ops and re-sent duplicates are absorbed,
+    exactly as the element-log oracle (``update_reference``) says."""
+    c = _CONTAINERS[container]
+    k, i, w, mask = _keyed_batch(ids, keys, ws)
+    st_pad = c["update"](c["init"](), k, i, w, mask)
+    ref = c["oracle"](c["init"](), k, i, w, mask)
+    np.testing.assert_array_equal(
+        np.asarray(c["regs"](st_pad)), np.asarray(c["regs"](ref))
+    )
+    if c["hists"](st_pad) is not None:
+        np.testing.assert_array_equal(
+            np.asarray(c["hists"](st_pad)), np.asarray(c["hists"](ref))
+        )
+    # Dedup: re-sending the identical batch cannot move the register plane.
+    st_dup = c["update"](st_pad, k, i, w, mask)
+    np.testing.assert_array_equal(
+        np.asarray(c["regs"](st_dup)), np.asarray(c["regs"](st_pad))
+    )
+
+
+@settings(deadline=None)
+@given(**keyed_strategy)
+def test_sharded_dyn_twin_matches_dense(ids, keys, ws):
+    """The sharded twin is bit-identical to the dense DynArray on every leaf,
+    and its merge commutes — the property-random companion to the fixed
+    cases in test_sharded_dyn_array.py."""
+    mesh = make_sketch_mesh()
+    kk = sharding.padded_k(_K, mesh)
+    k, i, w, mask = _keyed_batch(ids, keys, ws)
+    dense = dyn_array.update_batch(_ACFG, dyn_array.init(_ACFG, kk), k, i, w, mask=mask)
+    sh = sharded_dyn_array.update_batch(
+        _ACFG, mesh, sharded_dyn_array.init(_ACFG, kk, mesh), k, i, w, mask=mask
+    )
+    back = sharded_dyn_array.to_array(sh)
+    np.testing.assert_array_equal(np.asarray(back.regs), np.asarray(dense.regs))
+    np.testing.assert_array_equal(np.asarray(back.hists), np.asarray(dense.hists))
+    np.testing.assert_array_equal(np.asarray(back.chats), np.asarray(dense.chats))
+    ab = sharded_dyn_array.merge(_ACFG, mesh, sh, sh)
+    np.testing.assert_array_equal(
+        np.asarray(sharded_dyn_array.to_array(ab).regs), np.asarray(back.regs)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Virtual tier: pool-plane algebra + noise-cancellation accuracy envelope
+# ---------------------------------------------------------------------------
+
+_VCFG = SketchConfig(m=64, b=8, seed=5)
+_VVCFG = VirtualConfig(pool_size=4096)
+
+
+def _virtual_stream(ws, n_noise):
+    """One focal tenant with |ws| distinct elements + n_noise unit-weight
+    elements spread over 8 background tenants, padded to a fixed shape."""
+    cap = _B + 64
+    n = len(ws)
+    tenant = np.uint64(0xDEADBEEFCAFE)
+    noise_tenants = (np.arange(8, dtype=np.uint64) + 1) * np.uint64(0x9E3779B97F4A7C15)
+    tk = np.concatenate([
+        np.full(n, tenant, np.uint64),
+        noise_tenants[np.arange(n_noise) % 8],
+        np.zeros(cap - n - n_noise, np.uint64),
+    ])
+    ids = (np.arange(cap, dtype=np.uint64) + 1) * np.uint64(2654435761)
+    w = np.concatenate([
+        np.asarray(ws, np.float32),
+        np.ones(cap - n, np.float32),
+    ])
+    mask = np.arange(cap) < (n + n_noise)
+    t = (jnp.asarray(tk & 0xFFFFFFFF, jnp.uint32), jnp.asarray(tk >> 32, jnp.uint32))
+    i = (jnp.asarray(ids & 0xFFFFFFFF, jnp.uint32), jnp.asarray(ids >> 32, jnp.uint32))
+    return tenant, t, i, jnp.asarray(w), jnp.asarray(mask)
+
+
+@settings(deadline=None)
+@given(
+    ws=st.lists(
+        st.floats(min_value=0.25, max_value=4.0, allow_nan=False,
+                  allow_infinity=False),
+        min_size=16, max_size=_B,
+    ),
+    n_noise=st.integers(min_value=0, max_value=64),
+)
+def test_virtual_noise_cancellation_envelope(ws, n_noise):
+    """w_tail is exact; the noise-cancelled read of the focal tenant stays
+    inside a wide statistical envelope around its true weight (the tight
+    mean-error claim is the fixed-seed test in test_virtual_dyn_array.py)."""
+    tenant, t, i, w, mask = _virtual_stream(ws, n_noise)
+    st_v = vda.update_tenants(
+        _VCFG, _VVCFG, vda.init(_VCFG, _VVCFG), t, i, w, mask=mask
+    )
+    total = float(np.sum(np.asarray(w)[np.asarray(mask)]))
+    assert float(st_v.w_tail) == pytest.approx(total, rel=1e-4)
+    truth = float(np.sum(np.asarray(ws, np.float32)))
+    floor = float(vda.noise_floor(_VCFG, _VVCFG, st_v))
+    est = float(
+        vda.estimate_tenants(
+            _VCFG, _VVCFG, st_v,
+            (t[0][:1], t[1][:1]),
+        )[0]
+    )
+    assert np.isfinite(est) and est >= 0.0
+    # ~5-sigma envelope at m=64 (row-solve std ≈ 0.15, plus the clamped
+    # calibration and the subtracted noise floor).
+    assert est <= 3.0 * truth + 5.0 * floor
+    assert est >= truth / 4.0 - 3.0 * floor
+
+
+@settings(deadline=None)
+@given(
+    ws=st.lists(
+        st.floats(min_value=0.25, max_value=4.0, allow_nan=False,
+                  allow_infinity=False),
+        min_size=8, max_size=_B,
+    ),
+    n_noise=st.integers(min_value=0, max_value=64),
+)
+def test_virtual_merge_commutative_idempotent_pool(ws, n_noise):
+    """The pool plane keeps the max-monoid algebra; the weight scalars add
+    (commutative; self-merge doubles them — the documented convention)."""
+    tenant, t, i, w, mask = _virtual_stream(ws, n_noise)
+    half = jnp.arange(mask.shape[0]) < (mask.shape[0] // 2)
+    a = vda.update_tenants(
+        _VCFG, _VVCFG, vda.init(_VCFG, _VVCFG), t, i, w, mask=mask & half
+    )
+    b = vda.update_tenants(
+        _VCFG, _VVCFG, vda.init(_VCFG, _VVCFG), t, i, w, mask=mask & ~half
+    )
+    ab, ba = vda.merge(_VCFG, _VVCFG, a, b), vda.merge(_VCFG, _VVCFG, b, a)
+    np.testing.assert_array_equal(np.asarray(ab.pool), np.asarray(ba.pool))
+    np.testing.assert_array_equal(np.asarray(ab.pool_hist), np.asarray(ba.pool_hist))
+    assert float(ab.w_tail) == float(ba.w_tail)
+    whole = vda.update_tenants(
+        _VCFG, _VVCFG, vda.init(_VCFG, _VVCFG), t, i, w, mask=mask
+    )
+    np.testing.assert_array_equal(np.asarray(ab.pool), np.asarray(whole.pool))
+    aa = vda.merge(_VCFG, _VVCFG, a, a)
+    np.testing.assert_array_equal(np.asarray(aa.pool), np.asarray(a.pool))

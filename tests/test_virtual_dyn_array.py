@@ -1,0 +1,341 @@
+"""VirtualDynArray tests: jnp/oracle/kernel bit-identity on every state
+field, the incremental-full-histogram invariant, merge algebra, promotion
+semantics (epoch fence vs migrate, no double count), noise-cancelled
+estimator sanity, and the monitor threading.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SketchConfig,
+    dyn_array,
+    key_directory,
+    virtual_dyn_array as vda,
+)
+from repro.core.virtual_dyn_array import VirtualConfig
+from repro.kernels import ops
+from repro.obs import health
+from repro.sketchstream import monitor
+
+
+def _stream(n, n_tenants, seed, wlo=0.5, whi=1.5):
+    """Sparse 64-bit tenant keys ((lo, hi) pair) + element ids + weights."""
+    rng = np.random.default_rng(seed)
+    tids = rng.integers(0, 1 << 63, n_tenants, dtype=np.uint64)
+    tk = tids[rng.integers(0, n_tenants, n)]
+    ids = rng.integers(0, 1 << 63, n, dtype=np.uint64)
+    t = (jnp.asarray(tk & 0xFFFFFFFF, jnp.uint32), jnp.asarray(tk >> 32, jnp.uint32))
+    i = (jnp.asarray(ids & 0xFFFFFFFF, jnp.uint32), jnp.asarray(ids >> 32, jnp.uint32))
+    w = jnp.asarray(rng.uniform(wlo, whi, n), jnp.float32)
+    return tids, t, i, w
+
+
+def _assert_states_equal(a, b, chat_rtol=0.0):
+    np.testing.assert_array_equal(np.asarray(a.pool), np.asarray(b.pool))
+    np.testing.assert_array_equal(np.asarray(a.pool_hist), np.asarray(b.pool_hist))
+    np.testing.assert_array_equal(np.asarray(a.n_tail), np.asarray(b.n_tail))
+    np.testing.assert_array_equal(np.asarray(a.w_tail), np.asarray(b.w_tail))
+    np.testing.assert_array_equal(np.asarray(a.hot.regs), np.asarray(b.hot.regs))
+    np.testing.assert_array_equal(np.asarray(a.hot.hists), np.asarray(b.hot.hists))
+    if chat_rtol:
+        np.testing.assert_allclose(
+            np.asarray(a.hot.chats), np.asarray(b.hot.chats), rtol=chat_rtol
+        )
+    else:
+        np.testing.assert_array_equal(
+            np.asarray(a.hot.chats), np.asarray(b.hot.chats)
+        )
+
+
+@pytest.mark.parametrize("m_virtual", [None, 96])
+def test_update_matches_oracle_and_kernel(m_virtual):
+    """jnp path == sequential numpy oracle == Pallas-backed op, on ALL five
+    state fields, for both the default and a widened virtual row geometry."""
+    cfg = SketchConfig(m=64, b=6, seed=11)
+    tids, t, i, w = _stream(300, 24, seed=5)
+    vcfg = VirtualConfig(
+        pool_size=1024, m_virtual=m_virtual, pinned=tuple(int(x) for x in tids[:3])
+    )
+    st0 = vda.init(cfg, vcfg)
+
+    st = vda.update_tenants(cfg, vcfg, st0, t, i, w)
+    ref = vda.update_reference(cfg, vcfg, st0, t, i, w)
+    _assert_states_equal(st, ref)
+    kst = ops.virtual_dyn_update_op(cfg, vcfg, st0, t, i, w)
+    _assert_states_equal(st, kst)
+
+    # Warm-state second batch: hot q_R reads nonzero hists, pool has load.
+    _, t2, i2, w2 = _stream(300, 24, seed=6)
+    st2 = vda.update_tenants(cfg, vcfg, st, t2, i2, w2)
+    _assert_states_equal(st2, vda.update_reference(cfg, vcfg, ref, t2, i2, w2))
+    _assert_states_equal(st2, ops.virtual_dyn_update_op(cfg, vcfg, kst, t2, i2, w2))
+
+
+def test_mask_drops_rows_everywhere():
+    """Masked rows touch neither tier nor the n_tail/w_tail accumulators,
+    identically across the jnp, oracle, and kernel entries."""
+    cfg = SketchConfig(m=32, b=6, seed=2)
+    tids, t, i, w = _stream(128, 10, seed=7)
+    vcfg = VirtualConfig(pool_size=512, pinned=(int(tids[0]),))
+    mask = jnp.asarray(np.random.default_rng(0).random(128) < 0.7)
+    st0 = vda.init(cfg, vcfg)
+
+    st = vda.update_tenants(cfg, vcfg, st0, t, i, w, mask=mask)
+    _assert_states_equal(st, vda.update_reference(cfg, vcfg, st0, t, i, w, mask=np.asarray(mask)))
+    _assert_states_equal(st, ops.virtual_dyn_update_op(cfg, vcfg, st0, t, i, w, mask=mask))
+    # Equivalent to dropping the masked rows up front.
+    keep = np.asarray(mask)
+    tkept = (t[0][keep], t[1][keep])
+    ikept = (i[0][keep], i[1][keep])
+    _assert_states_equal(
+        st, vda.update_tenants(cfg, vcfg, st0, tkept, ikept, w[keep])
+    )
+
+
+def test_pool_hist_invariant_and_load_factor():
+    """Incrementally maintained pool_hist == from-scratch rebuild; bins sum
+    to M; load factor is the untouched-slot complement."""
+    cfg = SketchConfig(m=32, b=5, seed=4)
+    vcfg = VirtualConfig(pool_size=256)
+    _, t, i, w = _stream(400, 40, seed=8)
+    st = vda.update_tenants(cfg, vcfg, vda.init(cfg, vcfg), t, i, w)
+    np.testing.assert_array_equal(
+        np.asarray(st.pool_hist), np.asarray(vda.rebuild_pool_hist(cfg, st.pool))
+    )
+    assert int(jnp.sum(st.pool_hist)) == vcfg.pool_size
+    lf = float(vda.pool_load_factor(st))
+    assert lf == pytest.approx(float(jnp.mean(st.pool > cfg.r_min)))
+    assert 0.0 < lf < 1.0
+
+
+def test_merge_equals_single_stream():
+    """Disjoint split-and-merge == one stream: pool/hist/counters/hot all
+    agree (chats re-estimated by the dense merge convention)."""
+    cfg = SketchConfig(m=32, b=6, seed=9)
+    tids, t, i, w = _stream(256, 16, seed=10)
+    vcfg = VirtualConfig(pool_size=512, pinned=(int(tids[0]),))
+    st0 = vda.init(cfg, vcfg)
+    h = 128
+    a = vda.update_tenants(cfg, vcfg, st0, (t[0][:h], t[1][:h]), (i[0][:h], i[1][:h]), w[:h])
+    b = vda.update_tenants(cfg, vcfg, st0, (t[0][h:], t[1][h:]), (i[0][h:], i[1][h:]), w[h:])
+    ab = vda.merge(cfg, vcfg, a, b)
+    ba = vda.merge(cfg, vcfg, b, a)
+    whole = vda.update_tenants(cfg, vcfg, st0, t, i, w)
+
+    np.testing.assert_array_equal(np.asarray(ab.pool), np.asarray(whole.pool))
+    np.testing.assert_array_equal(np.asarray(ab.pool_hist), np.asarray(whole.pool_hist))
+    np.testing.assert_array_equal(np.asarray(ab.pool), np.asarray(ba.pool))
+    assert int(ab.n_tail) == int(whole.n_tail)
+    np.testing.assert_allclose(float(ab.w_tail), float(whole.w_tail), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ab.hot.regs), np.asarray(whole.hot.regs))
+    # Self-merge is register-idempotent; the scalars double (documented).
+    aa = vda.merge(cfg, vcfg, a, a)
+    np.testing.assert_array_equal(np.asarray(aa.pool), np.asarray(a.pool))
+    assert float(aa.w_tail) == pytest.approx(2 * float(a.w_tail))
+
+
+def test_hot_tier_bit_identical_to_dedicated_dyn_array():
+    """Pinned tenants' rows and chats match a dedicated DynArray fed only
+    the hot sub-stream — the exactness half of the tiering contract."""
+    cfg = SketchConfig(m=64, b=6, seed=12)
+    tids, t, i, w = _stream(300, 12, seed=13)
+    pinned = tuple(int(x) for x in tids[:4])
+    vcfg = VirtualConfig(pool_size=512, pinned=pinned)
+    st = vda.update_tenants(cfg, vcfg, vda.init(cfg, vcfg), t, i, w)
+
+    # Dedicated dense array fed the hot sub-stream, rows in pinned order.
+    tk64 = (np.asarray(t[0], np.uint64) | (np.asarray(t[1], np.uint64) << 32))
+    slot_of = {p: s for s, p in enumerate(pinned)}
+    sel = np.isin(tk64, np.asarray(pinned, np.uint64))
+    keys = jnp.asarray([slot_of[int(x)] for x in tk64[sel]], jnp.int32)
+    dst = dyn_array.update_batch(
+        cfg, dyn_array.init(cfg, len(pinned)), keys,
+        (i[0][sel], i[1][sel]), w[sel],
+    )
+    np.testing.assert_array_equal(np.asarray(st.hot.regs), np.asarray(dst.regs))
+    np.testing.assert_array_equal(np.asarray(st.hot.hists), np.asarray(dst.hists))
+    np.testing.assert_array_equal(np.asarray(st.hot.chats), np.asarray(dst.chats))
+    # And the estimate read IS the martingale (pool contributes nothing).
+    est = vda.estimate_tenants(cfg, vcfg, st, (t[0][sel][:4], t[1][sel][:4]))
+    mart = dst.chats[keys[:4]]
+    np.testing.assert_array_equal(np.asarray(est), np.asarray(mart))
+
+
+def test_promote_epoch_fence_and_migrate():
+    """Satellite 3: the two documented residue semantics, plus the guards."""
+    cfg = SketchConfig(m=32, b=6, seed=14)
+    vcfg = VirtualConfig(pool_size=512)
+    tids, t, i, w = _stream(200, 8, seed=15)
+    st = vda.update_tenants(cfg, vcfg, vda.init(cfg, vcfg), t, i, w)
+    tenant = int(tids[0])
+    tq = key_directory.split_uint64([tenant])
+
+    # Epoch fence: fresh row, estimate restarts at exactly 0.
+    vcfg_f, st_f = vda.promote(cfg, vcfg, st, tenant)
+    assert vcfg_f.pinned == (tenant,) and vcfg_f.num_hot == 1
+    assert float(vda.estimate_tenants(cfg, vcfg_f, st_f, tq)[0]) == 0.0
+    # The pool plane itself is untouched by promotion.
+    np.testing.assert_array_equal(np.asarray(st_f.pool), np.asarray(st.pool))
+
+    # Migrate: the dense row seeds from the virtual row, estimate > 0 and
+    # bounded by virtual read + noise floor (the seed inherits pool noise).
+    vcfg_m, st_m = vda.promote(cfg, vcfg, st, tenant, migrate=True)
+    est_m = float(vda.estimate_tenants(cfg, vcfg_m, st_m, tq)[0])
+    assert est_m > 0.0
+    rows = vda.virtual_rows(cfg, vcfg, st, *tq)
+    np.testing.assert_array_equal(np.asarray(st_m.hot.regs[-1]), np.asarray(rows[0]))
+
+    # No double count: re-sending the tenant's own elements after migration
+    # leaves registers (max-idempotent) and the chat unchanged.
+    tk64 = (np.asarray(t[0], np.uint64) | (np.asarray(t[1], np.uint64) << 32))
+    sel = tk64 == np.uint64(tenant)
+    st_m2 = vda.update_tenants(
+        cfg, vcfg_m, st_m, (t[0][sel], t[1][sel]), (i[0][sel], i[1][sel]), w[sel]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(st_m2.hot.regs[-1]), np.asarray(st_m.hot.regs[-1])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(st_m2.hot.chats[-1]), np.asarray(st_m.hot.chats[-1])
+    )
+
+    # Guards: double-pin; migrate under a mismatched virtual geometry.
+    with pytest.raises(ValueError, match="already pinned"):
+        vda.promote(cfg, vcfg_f, st_f, tenant)
+    vcfg_w = VirtualConfig(pool_size=512, m_virtual=16)
+    st_w = vda.update_tenants(cfg, vcfg_w, vda.init(cfg, vcfg_w), t, i, w)
+    with pytest.raises(ValueError, match="m_virtual"):
+        vda.promote(cfg, vcfg_w, st_w, tenant, migrate=True)
+    vda.promote(cfg, vcfg_w, st_w, tenant)  # epoch fence still fine
+
+
+def test_key_directory_pin_semantics():
+    """Satellite 3, dense half: ``key_directory.pin`` appends to the hot
+    table with the documented re-keying behavior — the pinned tenant gets
+    the new dedicated slot, hashed tenants may move (which is exactly why
+    the virtual tier's ``promote`` exists)."""
+    from repro.core.key_directory import DirectoryConfig
+
+    dcfg = DirectoryConfig(capacity=16, seed=3)
+    rng = np.random.default_rng(1)
+    tids = rng.integers(0, 1 << 63, 64, dtype=np.uint64)
+    t = key_directory.split_uint64([int(x) for x in tids])
+    before = np.asarray(key_directory.route_slots(dcfg, t))
+
+    tenant = int(tids[0])
+    d2 = key_directory.pin(dcfg, tenant)
+    assert d2.pinned == (tenant,) and d2.capacity == 16
+    after = np.asarray(key_directory.route_slots(d2, t))
+    assert after[0] == 0  # the dedicated hot slot
+    # Hashed range shifted to [1, 16): the re-keying footgun is real.
+    assert (after[1:] >= 1).all() and (after[1:] < 16).all()
+    assert (after[1:] != before[1:]).any()
+
+    # grow=True preserves the hashed modulus: one extra row, nobody moves.
+    d3 = key_directory.pin(dcfg, tenant, grow=True)
+    assert d3.capacity == 17
+    grown = np.asarray(key_directory.route_slots(d3, t))
+    hashed = np.asarray([int(x) != tenant for x in tids])
+    np.testing.assert_array_equal(grown[hashed], before[hashed] + 1)
+
+    with pytest.raises(ValueError, match="already pinned"):
+        key_directory.pin(d2, tenant)
+
+
+def test_noise_cancelled_estimates_track_truth():
+    """Statistical sanity at the validated regime (not bit-exactness): tail
+    reads above the noise floor land within 2x of truth on average, and
+    unknown tenants read ~0 (at the floor's scale, not the signal's)."""
+    cfg = SketchConfig(m=128, b=8, seed=3)
+    vcfg = VirtualConfig(pool_size=1 << 14)
+    rng = np.random.default_rng(42)
+    n_tenants = 64
+    sizes = np.clip((800 / (np.arange(1, n_tenants + 1) ** 1.05)).astype(int), 40, None)
+    tids = rng.integers(0, 1 << 63, n_tenants, dtype=np.uint64)
+    tk = np.repeat(tids, sizes)
+    ids = rng.integers(0, 1 << 63, tk.shape[0], dtype=np.uint64)
+    w = rng.uniform(0.5, 1.5, tk.shape[0]).astype(np.float32)
+    order = rng.permutation(tk.shape[0])
+    tk, ids, w = tk[order], ids[order], w[order]
+    truth = {int(t): float(w[tk == t].sum()) for t in tids}
+
+    st = vda.update_tenants(
+        cfg, vcfg, vda.init(cfg, vcfg),
+        (jnp.asarray(tk & 0xFFFFFFFF, jnp.uint32), jnp.asarray(tk >> 32, jnp.uint32)),
+        (jnp.asarray(ids & 0xFFFFFFFF, jnp.uint32), jnp.asarray(ids >> 32, jnp.uint32)),
+        jnp.asarray(w),
+    )
+    assert float(st.w_tail) == pytest.approx(w.sum(), rel=1e-4)
+    floor = float(vda.noise_floor(cfg, vcfg, st))
+    tq = key_directory.split_uint64([int(x) for x in tids])
+    est = np.asarray(vda.estimate_tenants(cfg, vcfg, st, tq))
+    true = np.asarray([truth[int(x)] for x in tids])
+    above = true > 2 * floor
+    assert above.sum() >= 8  # the regime actually exercises the claim
+    rel = np.abs(est[above] - true[above]) / true[above]
+    assert rel.mean() < 0.5
+    # Unknown tenants: mostly-untouched rows clamp near zero.
+    ghosts = key_directory.split_uint64(
+        [int(x) for x in rng.integers(0, 1 << 63, 16, dtype=np.uint64)]
+    )
+    ghost_est = np.asarray(vda.estimate_tenants(cfg, vcfg, st, ghosts))
+    assert np.median(ghost_est) <= floor
+
+
+def test_memory_accounting_and_config_guards():
+    cfg = SketchConfig(m=128, b=8, seed=0)
+    vcfg = VirtualConfig(pool_size=1 << 16, pinned=(1, 2))
+    st = vda.init(cfg, vcfg)
+    assert vda.memory_bytes(cfg, vcfg) == (
+        st.pool.nbytes + st.pool_hist.nbytes + 4 + 4
+        + st.hot.regs.nbytes + st.hot.hists.nbytes + st.hot.chats.nbytes
+    )
+    # The point of the tier: virtual bytes are K-independent.
+    k = 10**7
+    assert vda.dense_memory_bytes(cfg, k) / vda.memory_bytes(cfg, vcfg) > 10
+    with pytest.raises(ValueError):
+        VirtualConfig(pool_size=2)
+    with pytest.raises(ValueError):
+        VirtualConfig(pool_size=64, m_virtual=1)
+    with pytest.raises(ValueError):
+        VirtualConfig(pool_size=64, pinned=(5, 5))
+    with pytest.raises(ValueError):
+        vda.init(cfg, VirtualConfig(pool_size=64))  # pool smaller than m
+
+
+def test_monitor_surface_and_health():
+    """VirtualDynMonitor threads the usual surface; health_report grows the
+    pool checks and folds the hot tier under a hot_ prefix."""
+    cfg = SketchConfig(m=32, b=6, seed=21)
+    tids, t, i, w = _stream(256, 12, seed=22)
+    mon = monitor.VirtualDynMonitor.for_pool(cfg, 512, pinned=(int(tids[0]),))
+    st = mon.init()
+    st = mon.update(st, t, i, w)
+    assert int(st.n_seen) == 256
+    est = mon.estimate(st, (t[0][:4], t[1][:4]))
+    assert est.shape == (4,) and bool(jnp.all(est >= 0))
+    m = mon.metrics(st)
+    assert 0 < float(m["virtual_pool_load_factor"]) < 1
+    assert float(m["virtual_pool_weight_total"]) == pytest.approx(
+        float(st.array.w_tail)
+    )
+    mon2, st2 = mon.promote(st, int(tids[1]))
+    assert mon2.vcfg.num_hot == 2 and st2.array.hot.regs.shape[0] == 2
+
+    rep = health.health_report(cfg, st.array, vcfg=mon.vcfg)
+    assert rep["container"] == "virtual_dyn_array"
+    assert "pool_load_factor" in rep["checks"]
+    assert any(k.startswith("hot_") for k in rep["checks"])
+    # Threshold gating both ways.
+    tight = health.Thresholds(pool_load_factor=0.0, pool_noise_floor=1e-6)
+    assert "pool_load_factor" in health.health_report(
+        cfg, st.array, vcfg=mon.vcfg, thresholds=tight
+    )["warnings"]
+    loose = health.Thresholds(pool_load_factor=1.0, pool_noise_floor=None)
+    rep_l = health.health_report(cfg, st.array, vcfg=mon.vcfg, thresholds=loose)
+    assert "pool_load_factor" not in rep_l["warnings"]
+    assert not rep_l["checks"]["pool_noise_floor"]["warn"]
